@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, n: int = 5, warmup: int = 2) -> float:
+    """Median wall time in microseconds for a jit'd call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+# LRA benchmark model configs (paper Appendix A)
+LRA_TASKS = {
+    #            l,    d,   heads, layers, d_ff
+    "text":     (2000, 256, 4, 4, 1024),
+    "text_4k":  (4000, 256, 4, 4, 1024),
+    "retrieval": (4000, 128, 4, 4, 512),
+    "image":    (1024, 64, 8, 1, 128),
+}

@@ -1,0 +1,62 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (also emitted as
+markdown into benchmarks/results/roofline.md for EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "results", "roofline.md")
+
+
+def load_all():
+    recs = []
+    if not os.path.isdir(RESULTS):
+        return recs
+    for fn in sorted(os.listdir(RESULTS)):
+        if fn.endswith(".json"):
+            with open(os.path.join(RESULTS, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def to_markdown(recs) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | HBM GiB/dev | useful FLOP frac | MFU bound |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = []
+    for r in recs:
+        if r.get("tag"):
+            continue
+        ro = r["roofline"]
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['compute_s']:.4f} | {ro['memory_s']:.4f} "
+            f"| {ro['collective_s']:.4f} | {ro['dominant'].replace('_s','')} "
+            f"| {r['memory']['peak_hbm_bytes']/2**30:.1f} "
+            f"| {ro.get('useful_flops_frac', 0):.3f} "
+            f"| {ro.get('mfu_bound', 0):.3f} |")
+    return hdr + "\n".join(body) + "\n"
+
+
+def run() -> list:
+    recs = load_all()
+    if recs:
+        os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+        with open(OUT_MD, "w") as f:
+            f.write(to_markdown(recs))
+    lines = []
+    for r in recs:
+        if r.get("tag"):
+            continue
+        ro = r["roofline"]
+        lines.append(row(
+            f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
+            ro["bound_step_time_s"] * 1e6,
+            f"dom={ro['dominant'].replace('_s','')};"
+            f"mfu_bound={ro.get('mfu_bound', 0):.3f}"))
+    if not lines:
+        lines.append(row("dryrun/none", 0.0, "no dryrun results found"))
+    return lines

@@ -1,0 +1,28 @@
+"""Paper Figure 10: sparse softmax speedup vs sparsity ratio (the paper
+measures 3.0-709.9x on V100 at the Text config h=4, l=2000).  Here: jit'd
+dense softmax over (b,h,l,l) vs softmax over only the kept entries
+(row-uniform top-k layout (b,h,l,keep) — DSA's row constraint makes the
+sparse layout dense-rectangular, which is also why it maps to TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+
+
+def run() -> list:
+    b, h, l = 4, 4, 2000
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (b, h, l, l), jnp.float32)
+    dense = jax.jit(lambda s: jax.nn.softmax(s, axis=-1))
+    t_dense = time_call(dense, s)
+    lines = [row("fig10/dense", t_dense, "baseline")]
+    for sparsity in (0.5, 0.9, 0.95, 0.99):
+        keep = max(1, int(l * (1 - sparsity)))
+        sk = jax.random.normal(key, (b, h, l, keep), jnp.float32)
+        sparse = jax.jit(lambda s: jax.nn.softmax(s, axis=-1))
+        t_sp = time_call(sparse, sk)
+        lines.append(row(f"fig10/sparse_{int(sparsity*100)}", t_sp,
+                         f"speedup={t_dense/t_sp:.1f}x"))
+    return lines

@@ -1,0 +1,42 @@
+"""Paper Figure 7: computational cost (MACs) breakdown per attention layer
+(Linear / Attention / Other) for the LRA task configs, dense vs DSA-x%,
+plus the paper's headline 2.79-4.35x overall reduction check."""
+from __future__ import annotations
+
+from benchmarks.common import LRA_TASKS, row
+from repro.core.prediction import predictor_k
+
+
+def macs_per_layer(l, d, d_ff, sparsity=None, sigma=0.25):
+    linear = 4 * l * d * d                       # QKV + output proj
+    attn = 2 * l * l * d                         # QK^T + AV
+    other = 2 * l * d * d_ff                     # FFN
+    pred = 0
+    if sparsity is not None:
+        k = predictor_k(d, sigma)
+        attn = attn * (1.0 - sparsity)
+        pred = l * d * k + 2 * l * k * k + l * l * k
+    return {"linear": linear, "attention": attn, "other": other,
+            "pred": pred}
+
+
+def run() -> list:
+    lines = []
+    for task, (l, d, h, layers, d_ff) in LRA_TASKS.items():
+        dense = macs_per_layer(l, d, d_ff)
+        dense_tot = dense["linear"] + dense["attention"] + dense["other"]
+        frac_attn = dense["attention"] / dense_tot
+        lines.append(row(f"fig7/{task}/dense", 0.0,
+                         f"gmacs={dense_tot/1e9:.2f};attn_frac={frac_attn:.2f}"))
+        for sp in (0.90, 0.95, 0.99):
+            dsa = macs_per_layer(l, d, d_ff, sparsity=sp)
+            # prediction runs in INT4: excluded from FP32 MAC totals as the
+            # paper does in Fig 7 (energy accounting covers it in Fig 8)
+            tot = dsa["linear"] + dsa["attention"] + dsa["other"]
+            save = dense_tot / tot
+            attn_save = dense["attention"] / max(dsa["attention"], 1)
+            lines.append(row(
+                f"fig7/{task}/dsa_{int(sp*100)}", 0.0,
+                f"gmacs={tot/1e9:.2f};saving={save:.2f}x;"
+                f"attn_saving={attn_save:.1f}x"))
+    return lines

@@ -1,0 +1,26 @@
+"""Paper Figure 8: relative energy vs vanilla transformer — DSA-95% with
+sigma=0.25, INT4 prediction, using per-MAC energy factors (45nm, after
+Tang et al. 2021)."""
+from __future__ import annotations
+
+from benchmarks.common import LRA_TASKS, row
+from benchmarks.fig7_macs import macs_per_layer
+from repro.core.quantization import ENERGY_PER_MAC_VS_FP32
+
+
+def run() -> list:
+    lines = []
+    e_fp32 = ENERGY_PER_MAC_VS_FP32[32]
+    e_int4 = ENERGY_PER_MAC_VS_FP32[4]
+    for task, (l, d, h, layers, d_ff) in LRA_TASKS.items():
+        dense = macs_per_layer(l, d, d_ff)
+        e_dense = (dense["linear"] + dense["attention"] + dense["other"]) * e_fp32
+        dsa = macs_per_layer(l, d, d_ff, sparsity=0.95)
+        e_dsa = ((dsa["linear"] + dsa["attention"] + dsa["other"]) * e_fp32
+                 + dsa["pred"] * e_int4)
+        pred_overhead = dsa["pred"] * e_int4 / e_dense
+        lines.append(row(
+            f"fig8/{task}", 0.0,
+            f"rel_energy={e_dsa/e_dense:.3f};"
+            f"pred_overhead={pred_overhead*100:.2f}%"))
+    return lines

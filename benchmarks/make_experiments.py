@@ -1,0 +1,97 @@
+"""Generate the data tables for EXPERIMENTS.md from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(pred=None):
+    recs = []
+    for fn in sorted(os.listdir(RESULTS)):
+        if fn.endswith(".json"):
+            r = json.load(open(os.path.join(RESULTS, fn)))
+            if pred is None or pred(r):
+                recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.1f}"
+
+
+def baseline_table(mesh="16x16"):
+    recs = load(lambda r: r["mesh"] == mesh and not r.get("tag"))
+    out = ["| arch | shape | mb | compute s | memory s | collective s "
+           "| coll(ideal) s | dominant | HBM GiB/dev | useful frac | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        ro = r["roofline"]
+        raw = r.get("raw_scanbody_cost", {})
+        probe_ok = r["cost"]["flops_per_dev"] != raw.get("flops")
+        uf = f"{ro.get('useful_flops_frac', 0):.2f}" if probe_ok else "-"
+        mfu = f"{ro.get('mfu_bound', 0):.3f}" if probe_ok else "-"
+        note = "" if probe_ok else " †"
+        out.append(
+            f"| {r['arch']} | {r['shape']}{note} | {r['microbatches']} "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} "
+            f"| {ro.get('collective_ideal_s', ro['collective_s']):.3f} "
+            f"| {ro['dominant'].replace('_s','')} "
+            f"| {fmt_bytes(r['memory']['peak_hbm_bytes'])} "
+            f"| {uf} | {mfu} |")
+    out.append("")
+    out.append("† compile-proof + memory record (scan-body cost analysis "
+               "only — per-step cost terms understated; see the tagged "
+               "full-probe records for these archs).")
+    return "\n".join(out)
+
+
+def dryrun_table():
+    recs = load(lambda r: not r.get("tag"))
+    out = ["| arch | shape | mesh | compile s | HBM GiB/dev | args GiB "
+           "| temp GiB | collectives | wire GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        c = r["collectives"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+            f"| {fmt_bytes(r['memory']['peak_hbm_bytes'])} "
+            f"| {fmt_bytes(r['memory']['args_bytes'])} "
+            f"| {fmt_bytes(r['memory']['temp_bytes'])} "
+            f"| {c.get('n_collectives', 0)} "
+            f"| {c.get('total_wire_bytes', 0)/1e9:.1f} |")
+    return "\n".join(out)
+
+
+def tagged_table(arch=None, shape=None):
+    recs = load(lambda r: r.get("tag")
+                and (arch is None or r["arch"] == arch)
+                and (shape is None or r["shape"] == shape))
+    out = ["| tag | dsa | mb | tp | compute s | memory s | collective s "
+           "| coll(ideal) s | HBM GiB | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        ro = r["roofline"]
+        out.append(
+            f"| {r['tag']} | {r['dsa_mode']} | {r['microbatches']} "
+            f"| {'TP' if r.get('tp', True) else 'FSDP'} "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} "
+            f"| {ro.get('collective_ideal_s', ro['collective_s']):.3f} "
+            f"| {fmt_bytes(r['memory']['peak_hbm_bytes'])} "
+            f"| {ro.get('mfu_bound', 0):.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Baseline roofline (single pod 16x16)\n")
+    print(baseline_table())
+    print("\n## Dry-run (both meshes)\n")
+    print(dryrun_table())
+    print("\n## Tagged perf iterations\n")
+    print(tagged_table())

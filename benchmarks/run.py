@@ -1,0 +1,44 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV (benchmark harness deliverable; see DESIGN.md §6 for the paper map).
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated module suffixes to run")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip table2 (trains small models)")
+    args = ap.parse_args()
+    from benchmarks import (dryrun_table, fig7_macs, fig8_energy,
+                            fig10_softmax, table1_oracle_sparsity,
+                            table3_sensitivity, table4_kernels,
+                            table5_reordering)
+    from benchmarks import table2_lra_accuracy
+    mods = [table1_oracle_sparsity, table2_lra_accuracy, table3_sensitivity,
+            fig7_macs, fig8_energy, table4_kernels, fig10_softmax,
+            table5_reordering, dryrun_table]
+    if args.skip_slow:
+        mods.remove(table2_lra_accuracy)
+    if args.only:
+        keys = args.only.split(",")
+        mods = [m for m in mods if any(k in m.__name__ for k in keys)]
+    print("name,us_per_call,derived")
+    ok = True
+    for m in mods:
+        try:
+            for line in m.run():
+                print(line)
+            sys.stdout.flush()
+        except Exception:
+            ok = False
+            print(f"{m.__name__},0.0,ERROR")
+            traceback.print_exc()
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Splice generated tables into EXPERIMENTS.md at the HTML-comment markers."""
+import re
+
+from benchmarks.make_experiments import baseline_table, dryrun_table, tagged_table
+
+p = "EXPERIMENTS.md"
+s = open(p).read()
+s = s.replace("<!-- BASELINE_TABLE -->", baseline_table())
+s = s.replace("<!-- DRYRUN_TABLE -->", dryrun_table())
+s = s.replace("<!-- TAGGED_TABLE -->", tagged_table())
+open(p, "w").write(s)
+print("EXPERIMENTS.md tables spliced")

@@ -1,0 +1,71 @@
+"""Paper Table 3 / Figure 6: sensitivity to projection scale sigma and
+quantization precision — measured as prediction accuracy vs the oracle
+top-k pattern (the paper's §4.3 metric), on score structure reachable
+through the shared projection (what joint training produces)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import masks as M
+from repro.core import prediction as P
+
+
+def _fit_predictor(pred, x, s_true, steps=300, lr=1e-2):
+    def loss(pr):
+        return P.mse_loss(s_true, P.predict_scores(pr, x, bits=32))
+    m = jax.tree.map(jnp.zeros_like, pred)
+    v = jax.tree.map(jnp.zeros_like, pred)
+    g_fn = jax.jit(jax.grad(loss))
+    for _ in range(steps):
+        g = g_fn(pred)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        pred = jax.tree.map(
+            lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + 1e-8),
+            pred, m, v)
+    return pred
+
+
+def _acc(pred, x, s_true, bits, keep):
+    s_t = P.predict_scores(pred, x, bits=bits)
+    oracle = M.row_topk_mask(s_true, keep)
+    predicted = M.row_topk_mask(s_t, keep)
+    return float(M.prediction_accuracy(predicted, oracle))
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(1)
+    d, l, b = 128, 256, 4
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, l, d))
+    keep = M.keep_count(l, 0.90)
+    lines = []
+    # sigma sweep at INT4
+    for sigma in (0.1, 0.25, 0.4):
+        pred = P.init_predictor(ks[1], d, sigma=sigma)
+        kdim = pred["p"].shape[1]
+        wq = pred["p"] @ jax.random.normal(ks[2], (kdim, d)) / np.sqrt(kdim)
+        wk = pred["p"] @ jax.random.normal(ks[3], (kdim, d)) / np.sqrt(kdim)
+        s_true = jnp.einsum("bld,bmd->blm", x @ wq, x @ wk)
+        pred = _fit_predictor(pred, x, s_true)
+        acc = _acc(pred, x, s_true, 4, keep)
+        lines.append(row(f"table3/sigma_{sigma}", 0.0,
+                         f"pred_acc_int4={acc:.3f}"))
+    # precision sweep at sigma=0.25 (paper: INT4 fine, INT2 cliff, random ~0)
+    pred = P.init_predictor(ks[1], d, sigma=0.25)
+    kdim = pred["p"].shape[1]
+    wq = pred["p"] @ jax.random.normal(ks[2], (kdim, d)) / np.sqrt(kdim)
+    wk = pred["p"] @ jax.random.normal(ks[3], (kdim, d)) / np.sqrt(kdim)
+    s_true = jnp.einsum("bld,bmd->blm", x @ wq, x @ wk)
+    pred = _fit_predictor(pred, x, s_true)
+    for bits in (2, 4, 8, 16, 32):
+        acc = _acc(pred, x, s_true, bits, keep)
+        lines.append(row(f"table3/bits_{bits}", 0.0, f"pred_acc={acc:.3f}"))
+    rand_mask = M.row_topk_mask(jax.random.normal(ks[0], (b, l, l)), keep)
+    oracle = M.row_topk_mask(s_true, keep)
+    lines.append(row("table3/random", 0.0,
+                     f"pred_acc={float(M.prediction_accuracy(rand_mask, oracle)):.3f}"))
+    return lines

@@ -1,0 +1,54 @@
+"""Paper Table 4: sparse-kernel speedup over the dense baseline at 90%
+sparsity.
+
+Two views (no GPU/TPU in this container):
+ - measured: wall-time of the jit'd XLA dense-flash path vs the DSA
+   block-gather path on CPU (real end-to-end speedup of this framework's
+   own kernels at the same sparsity the paper uses);
+ - analytic TPU v5e: FLOPs + HBM bytes per variant -> roofline-bound time
+   ratio (the dry-run's §Roofline model applied to the attention op).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.core import masks as M
+from repro.core.attention import dsa_sparse_attention, flash_attention
+
+PEAK, HBM = 197e12, 819e9
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(0)
+    b, l, hq, hkv, hd, bq = 2, 2048, 4, 4, 64, 128
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, l, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, l, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, l, hkv, hd), jnp.float32)
+    n_kb = l // bq
+    lines = []
+    dense = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True))
+    t_dense = time_call(dense, q, k, v)
+    lines.append(row("table4/dense_flash", t_dense, "baseline"))
+    for sparsity in (0.90, 0.95):
+        nb = max(2, M.keep_count(n_kb, sparsity))
+        bs = jax.random.normal(ks[3], (b, l // bq, n_kb))
+        idx, ok = M.block_topk_indices(bs, nb, causal=True, local_blocks=1)
+        sparse = jax.jit(lambda q, k, v, idx, ok: dsa_sparse_attention(
+            q, k, v, idx, ok, block_q=bq, block_k=bq, causal=True))
+        t_sp = time_call(sparse, q, k, v, idx, ok)
+        # analytic TPU-roofline ratio for the fused attention op
+        fl_dense = 4.0 * b * hq * l * l * hd * 0.5        # causal half
+        io_dense = 2.0 * b * l * (hq + 2 * hkv) * hd * 2  # q,k,v,o bf16
+        fl_sp = 4.0 * b * hq * l * (nb * bq) * hd
+        io_sp = (2.0 * b * l * hq * hd + 2.0 * b * l * hq * hd
+                 + 2.0 * b * (l // bq) * nb * bq * hkv * hd * 2)
+        t_tpu_dense = max(fl_dense / PEAK, io_dense / HBM)
+        t_tpu_sp = max(fl_sp / PEAK, io_sp / HBM)
+        lines.append(row(
+            f"table4/dsa_block_{int(sparsity*100)}", t_sp,
+            f"cpu_speedup={t_dense/t_sp:.2f}x;"
+            f"tpu_roofline_speedup={t_tpu_dense/t_tpu_sp:.2f}x"))
+    return lines

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS, LONG_CTX_ARCHS, SHAPES, ArchConfig, DSAConfig, MLAConfig,
+    MambaConfig, MoEConfig, RWKVConfig, ShapeConfig, get_config, is_moe_layer,
+    layer_kind, reduced,
+)

@@ -1,0 +1,280 @@
+"""Architecture / run configuration system.
+
+Every assigned architecture is an ``ArchConfig`` instance in its own module
+(``src/repro/configs/<id>.py``) exposing ``CONFIG``.  Shapes are global
+(``SHAPES``) and pair with every arch.  ``get_config(name)`` resolves by id,
+``reduced(cfg)`` produces the CPU-smoke-test variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0          # expert hidden dim (0 -> use arch d_ff)
+    num_shared_experts: int = 0   # deepseek-style always-on shared experts
+    layer_period: int = 1         # MoE every `period` layers (1 = all layers)
+    layer_offset: int = 0
+    first_k_dense: int = 0        # deepseek: first k layers stay dense MLP
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek multi-head latent attention dims."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64            # wkv state is head_dim x head_dim per head
+    decay_lora: int = 64          # low-rank data-dependent decay
+    token_shift: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DSAConfig:
+    """Dynamic Sparse Attention (the paper's technique).
+
+    sparsity: fraction of attention weights dropped (paper: 0.90 - 0.99).
+    sigma:    k/d random-projection scale (paper sweeps 0.1 - 0.4, default 0.25).
+    quant_bits: prediction-path fake-quant precision (paper: INT4 default).
+    block_q/block_k: TPU structural granularity (paper used 1x4/1x8 vectors on
+       GPU; on TPU we predict at MXU-tile granularity - see DESIGN.md §2).
+    """
+    enabled: bool = False
+    sparsity: float = 0.90
+    sigma: float = 0.25
+    quant_bits: int = 4           # 2 | 4 | 8 | 16 | 32 (32 = no quant)
+    mode: str = "topk"            # "topk" | "threshold"
+    threshold: float = 0.001
+    block_q: int = 128
+    block_k: int = 128
+    lambda_mse: float = 0.01      # joint-loss weight (paper λ)
+    min_blocks: int = 1           # always keep >=1 block per query row
+    local_blocks: int = 1         # always keep the diagonal (local) block(s)
+    sort_indices: bool = True     # §5.2 compute-reordering analogue
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | ssm | hybrid | moe | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    swa_window: int = 0           # 0 = full attention; else sliding-window size
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    # hybrid: layer kinds pattern, cycled over n_layers. e.g. jamba
+    # ("mamba","attn","mamba",...) of length attn_period.
+    attn_layer_period: int = 0    # 0 = all attention; N = 1 attn per N layers
+    attn_layer_offset: int = 0
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_seq_len: int = 1500       # precomputed frame embeddings (frontend stub)
+    # vlm cross-attention (llama-3.2-vision)
+    cross_attn_period: int = 0    # cross-attn layer every N layers
+    n_image_tokens: int = 1601    # precomputed patch embeddings (frontend stub)
+    # DSA
+    dsa: DSAConfig = dataclasses.field(default_factory=DSAConfig)
+    # numerics / memory policy
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"    # full | dots | none
+    use_scan: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + blocks), for 6ND roofline."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        n_q = self.n_heads * hd
+        n_kv = self.n_kv_heads * hd
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for i in range(self.n_layers):
+            kind = layer_kind(self, i)
+            if kind == "attn":
+                if self.mla is not None:
+                    m = self.mla
+                    qk_h = m.qk_nope_head_dim + m.qk_rope_head_dim
+                    attn = (d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_h
+                            + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                            + m.kv_lora_rank * self.n_heads
+                            * (m.qk_nope_head_dim + m.v_head_dim)
+                            + self.n_heads * m.v_head_dim * d)
+                else:
+                    attn = d * (n_q + 2 * n_kv) + n_q * d
+                total += attn
+            elif kind == "mamba":
+                mi = d * self.mamba.expand
+                total += (2 * d * mi          # in_proj (x, z)
+                          + mi * self.mamba.d_conv
+                          + mi * (self.mamba.d_state * 2 + mi // 16)
+                          + mi * d)           # out_proj
+            elif kind == "rwkv":
+                total += 4 * d * d + d * d + 2 * d * self.rwkv.decay_lora
+            # mlp / moe
+            if kind != "rwkv":
+                total += self._mlp_params(i)
+            else:
+                total += 2 * d * self.d_ff + self.d_ff * d  # rwkv channel-mix approx
+        return total
+
+    def _mlp_params(self, layer_idx: int) -> int:
+        d, f = self.d_model, self.d_ff
+        dense = 3 * d * f  # gated (swiglu): gate+up+down
+        if self.moe is None:
+            return dense
+        mo = self.moe
+        if layer_idx < mo.first_k_dense:
+            return dense
+        if (layer_idx - mo.layer_offset) % mo.layer_period != 0:
+            return dense
+        fe = mo.d_ff_expert or f
+        routed = mo.num_experts * 3 * d * fe
+        shared = mo.num_shared_experts * 3 * d * fe
+        router = d * mo.num_experts
+        return routed + shared + router
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE top-k) for 6·N_active·D."""
+        if self.moe is None:
+            return self.num_params()
+        mo = self.moe
+        fe = mo.d_ff_expert or self.d_ff
+        total = self.num_params()
+        n_moe_layers = len([i for i in range(self.n_layers) if is_moe_layer(self, i)])
+        inactive = n_moe_layers * (mo.num_experts - mo.top_k) * 3 * self.d_model * fe
+        return total - inactive
+
+
+def is_moe_layer(cfg: ArchConfig, i: int) -> bool:
+    if cfg.moe is None or layer_kind(cfg, i) == "rwkv":
+        return False
+    mo = cfg.moe
+    if i < mo.first_k_dense:
+        return False
+    return (i - mo.layer_offset) % mo.layer_period == 0
+
+
+def layer_kind(cfg: ArchConfig, i: int) -> str:
+    """Which block kind layer ``i`` is: attn | mamba | rwkv."""
+    if cfg.rwkv is not None:
+        return "rwkv"
+    if cfg.mamba is not None and cfg.attn_layer_period:
+        if i % cfg.attn_layer_period == cfg.attn_layer_offset:
+            return "attn"
+        return "mamba"
+    return "attn"
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned: LM transformer shapes, seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "yi_6b", "h2o_danube_1_8b", "qwen1_5_110b", "stablelm_3b", "rwkv6_3b",
+    "jamba_1_5_large", "deepseek_v3", "mixtral_8x22b", "whisper_small",
+    "llama_3_2_vision",
+)
+
+# long_500k applicability: sub-quadratic path required (DESIGN.md §4).
+LONG_CTX_ARCHS = ("rwkv6_3b", "jamba_1_5_large", "h2o_danube_1_8b",
+                  "mixtral_8x22b", "yi_6b")
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ArchConfig, seq_len: int = 128) -> ArchConfig:
+    """Tiny same-family variant for CPU smoke tests."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4 if cfg.attn_layer_period else 2),
+        d_model=64, n_heads=4, head_dim=16,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=128, vocab=512,
+        swa_window=min(cfg.swa_window, 64) if cfg.swa_window else 0,
+        use_scan=cfg.use_scan, remat=False,
+        dtype="float32", param_dtype="float32",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=64, first_k_dense=min(cfg.moe.first_k_dense, 1),
+            capacity_factor=8.0)   # no capacity drops at smoke scale
+        if cfg.moe.first_k_dense:
+            kw["n_layers"] = 3
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=32,
+                              qk_nope_head_dim=16, qk_rope_head_dim=8,
+                              v_head_dim=16)
+    if cfg.mamba is not None:
+        kw["mamba"] = MambaConfig(d_state=8, d_conv=4, expand=2)
+        kw["n_layers"] = max(cfg.attn_layer_period, 4) if cfg.attn_layer_period else 4
+    if cfg.rwkv is not None:
+        kw["rwkv"] = RWKVConfig(head_dim=16, decay_lora=8)
+    if cfg.enc_dec:
+        kw["n_enc_layers"] = 2
+        kw["enc_seq_len"] = 64
+    if cfg.cross_attn_period:
+        kw["n_image_tokens"] = 32
+        kw["n_layers"] = max(cfg.cross_attn_period, 4)
+    if cfg.dsa.enabled:
+        kw["dsa"] = dataclasses.replace(cfg.dsa, block_q=16, block_k=16)
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,217 @@
+"""Attention computation primitives (full / masked / DSA-sparse).
+
+All functions take q: (B, Lq, Hq, hd), k/v: (B, Lk, Hkv, hd) with
+Hq % Hkv == 0 (GQA).  Three execution paths:
+
+  dense_attention       materialized (B,H,Lq,Lk) scores; Eq.(4) masking via
+                        S - c(1-M).  Reference / small shapes / faithful mode.
+  flash_attention       q-chunked scan, never materializes Lq x Lk.  The
+                        XLA dense baseline for long sequences.
+  dsa_sparse_attention  visits ONLY the predicted key blocks (gather +
+                        block-dense compute).  Statically-shaped FLOP saving
+                        = (1 - sparsity); the pure-XLA twin of the Pallas
+                        kernel in repro.kernels.dsa_attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e9  # paper's -c
+
+# Probe mode: the dry-run cost probes unroll intra-attention scans so XLA's
+# cost analysis (which counts while-loop bodies once) sees every iteration.
+_PROBE_UNROLL = False
+
+
+def set_probe_unroll(v: bool) -> None:
+    global _PROBE_UNROLL
+    _PROBE_UNROLL = v
+
+
+def _scan(f, init, xs):
+    n = jax.tree.leaves(xs)[0].shape[0]
+    # cap probe unrolling: >256 iterations would blow compile time; the
+    # residual undercount (body once vs n times) on longer loops hits only
+    # wkv-at-32k (<3% of that cell's FLOPs - EXPERIMENTS.md caveats)
+    if not _PROBE_UNROLL or n > 64:
+        return jax.lax.scan(f, init, xs)
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def _pos_mask(lq: int, lk: int, causal: bool, window: int,
+              q_offset: int = 0) -> Optional[jax.Array]:
+    """(Lq, Lk) validity from causal/sliding-window constraints."""
+    if not causal and not window:
+        return None
+    qi = jnp.arange(lq)[:, None] + q_offset
+    kj = jnp.arange(lk)[None, :]
+    m = jnp.ones((lq, lk), bool)
+    if causal:
+        m &= kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """-> (B, Hkv, G, Lq, Lk) scores, scaled."""
+    b, lq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, lq, hkv, g, hd) * (hd ** -0.5)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k)
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    b, hkv, g, lq, lk = p.shape
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(b, lq, hkv * g, -1)
+
+
+def dense_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    token_mask: Optional[jax.Array] = None,
+                    q_offset: int = 0,
+                    return_weights: bool = False):
+    """Reference attention.  token_mask: (B, Lq, Lk) DSA mask M (bool),
+    applied as the paper's Eq.(4): softmax(S - c(1 - M))."""
+    b, lq, hq, hd = q.shape
+    lk = k.shape[1]
+    s = _gqa_scores(q, k)                                # (B,Hkv,G,Lq,Lk)
+    pm = _pos_mask(lq, lk, causal, window, q_offset)
+    if pm is not None:
+        s = jnp.where(pm[None, None, None], s, NEG)
+    if token_mask is not None:
+        s = jnp.where(token_mask[:, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = _gqa_out(p.astype(v.dtype), v)
+    if return_weights:
+        return out, p.reshape(b, hq, lq, lk)
+    return out
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_chunk: int = 256, q_offset: int = 0) -> jax.Array:
+    """q-chunked attention (XLA scan): O(Lq/C * C*Lk) working set."""
+    b, lq, hq, hd = q.shape
+    lk = k.shape[1]
+    c = min(q_chunk, lq)
+    assert lq % c == 0
+    hkv = k.shape[2]
+    g = hq // hkv
+    qs = q.reshape(b, lq // c, c, hq, hd).swapaxes(0, 1)
+
+    def step(_, qc_i):
+        qc, i = qc_i
+        s = _gqa_scores(qc, k)
+        pm = _pos_mask(c, lk, causal, window, q_offset=i * c + q_offset)
+        if pm is not None:
+            s = jnp.where(pm[None, None, None], s, NEG)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        return None, _gqa_out(p.astype(v.dtype), v)
+
+    _, outs = _scan(step, None, (qs, jnp.arange(lq // c)))
+    return outs.swapaxes(0, 1).reshape(b, lq, hq, v.shape[-1])
+
+
+def dsa_sparse_attention(q, k, v, idx, idx_valid, *, block_q: int,
+                         block_k: int, causal: bool = True,
+                         window: int = 0) -> jax.Array:
+    """Block-gather sparse attention.
+
+    idx, idx_valid: (B, nQb, nb_keep) predicted key-block indices per query
+    block (row-uniform count — paper §5.2 load-balance constraint).  FLOPs
+    scale with nb_keep/nKb, visible to XLA cost analysis.
+    """
+    b, lq, hq, hd = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    g = hq // hkv
+    n_qb, n_kb = lq // block_q, lk // block_k
+    nb = idx.shape[-1]
+    kb = k.reshape(b, n_kb, block_k, hkv, hd)
+    vb = v.reshape(b, n_kb, block_k, hkv, hdv)
+    qs = q.reshape(b, n_qb, block_q, hq, hd).swapaxes(0, 1)   # (nQb, B, ...)
+    idx_s = idx.swapaxes(0, 1)                                # (nQb, B, nb)
+    val_s = idx_valid.swapaxes(0, 1)
+
+    def step(_, inp):
+        qc, ib, vb_ok, qb_i = inp                 # qc: (B, Bq, Hq, hd)
+        # gather selected key/value blocks: (B, nb, Bk, Hkv, hd)
+        ks = jnp.take_along_axis(kb, ib[:, :, None, None, None], axis=1)
+        vs = jnp.take_along_axis(vb, ib[:, :, None, None, None], axis=1)
+        ks = ks.reshape(b, nb * block_k, hkv, hd)
+        vs = vs.reshape(b, nb * block_k, hkv, hdv)
+        s = _gqa_scores(qc, ks)                   # (B,Hkv,G,Bq,nb*Bk)
+        # positional mask inside gathered blocks: absolute key positions
+        kpos = (ib[:, :, None] * block_k
+                + jnp.arange(block_k)[None, None, :]).reshape(b, nb * block_k)
+        qpos = qb_i * block_q + jnp.arange(block_q)
+        ok = vb_ok[:, :, None].repeat(block_k, axis=2).reshape(b, nb * block_k)
+        m = ok[:, None, :]
+        if causal:
+            m = m & (kpos[:, None, :] <= qpos[None, :, None])
+        if window:
+            m = m & (kpos[:, None, :] > qpos[None, :, None] - window)
+        s = jnp.where(m[:, None, None], s, NEG)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        return None, _gqa_out(p.astype(v.dtype), vs)
+
+    _, outs = _scan(
+        step, None, (qs, idx_s, val_s, jnp.arange(n_qb)))
+    return outs.swapaxes(0, 1).reshape(b, lq, hq, hdv)
+
+
+def decode_attention(q, k_cache, v_cache, *, kv_len: Optional[jax.Array] = None,
+                     window: int = 0, pos: Optional[jax.Array] = None
+                     ) -> jax.Array:
+    """Single-step decode: q (B, 1, Hq, hd) vs cache (B, S, Hkv, hd).
+    kv_len: (B,) valid cache length (current position + 1)."""
+    b, _, hq, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    s = _gqa_scores(q, k_cache)                   # (B,Hkv,G,1,S)
+    kj = jnp.arange(s_len)[None, :]
+    m = jnp.ones((b, s_len), bool)
+    if kv_len is not None:
+        m &= kj < kv_len[:, None]
+    if window and kv_len is not None:
+        m &= kj >= kv_len[:, None] - window
+    s = jnp.where(m[:, None, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return _gqa_out(p.astype(v_cache.dtype), v_cache)
+
+
+def dsa_decode_attention(q, k_cache, v_cache, scores_tilde, *, keep: int,
+                         kv_len: Optional[jax.Array] = None,
+                         local: int = 64) -> jax.Array:
+    """Sub-quadratic DSA decode (DESIGN.md §4): top-``keep`` cache rows by
+    predicted scores + the trailing ``local`` window, gathered then attended.
+    Cost O(S*k_pred) prediction + O((keep+local)*d) attention.
+
+    scores_tilde: (B, S) approximate scores of the current query against the
+    projected key cache.  Gather count keep+local is static.
+    """
+    b, _, hq, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    kj = jnp.arange(s_len)[None, :]
+    valid = jnp.ones((b, s_len), bool) if kv_len is None else kj < kv_len[:, None]
+    # always include the most recent `local` tokens
+    recent = (kj >= (0 if kv_len is None else kv_len[:, None]) - local) & valid
+    st = jnp.where(valid & ~recent, scores_tilde, jnp.where(recent, jnp.inf, NEG))
+    n_keep = min(keep + local, s_len)
+    _, idx = jax.lax.top_k(st, n_keep)                        # (B, n_keep)
+    ok = jnp.take_along_axis(valid, idx, axis=1)
+    ks = jnp.take_along_axis(k_cache, idx[:, :, None, None], axis=1)
+    vs = jnp.take_along_axis(v_cache, idx[:, :, None, None], axis=1)
+    s = _gqa_scores(q, ks)                                    # (B,Hkv,G,1,keep+local)
+    s = jnp.where(ok[:, None, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return _gqa_out(p.astype(v_cache.dtype), vs)

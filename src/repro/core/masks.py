@@ -1,0 +1,164 @@
+"""Sparse-pattern construction (paper §3.1, §5.1, §5.2).
+
+Token-granularity row top-k / threshold masks (the paper's fine-grained
+patterns), 1xR column-vector structured masks (paper Table 4 / Fig 9), and
+the TPU-native block masks + block *index lists* consumed by the Pallas
+kernel via scalar prefetch.
+
+Row-uniform top-k (same k for every query row) is the paper's §5.2 load-
+balance constraint — it is also what makes the sparse kernel statically
+shaped on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+def keep_count(n: int, sparsity: float, minimum: int = 1) -> int:
+    """Number of kept entries per row at a sparsity ratio (static)."""
+    return max(minimum, int(round(n * (1.0 - sparsity))))
+
+
+def row_topk_mask(scores: jax.Array, keep: int,
+                  valid: Optional[jax.Array] = None) -> jax.Array:
+    """Boolean mask keeping the top-``keep`` entries of each row.
+
+    valid: optional boolean of the same shape; invalid entries never kept.
+    Ties at the threshold may keep a few extra entries (harmless: masks are
+    upper-bounded by re-validation downstream).
+    """
+    s = scores if valid is None else jnp.where(valid, scores, NEG)
+    kth = jax.lax.top_k(s, keep)[0][..., -1:]
+    mask = s >= kth
+    if valid is not None:
+        mask = mask & valid
+    return mask
+
+
+def threshold_mask(weights: jax.Array, theta: float,
+                   valid: Optional[jax.Array] = None) -> jax.Array:
+    """Paper Table 1 oracle: drop attention *weights* (post-softmax) < theta."""
+    mask = weights >= theta
+    if valid is not None:
+        mask = mask & valid
+    return mask
+
+
+def vector_mask(scores: jax.Array, rows_per_vec: int, keep_vecs: int,
+                valid: Optional[jax.Array] = None) -> jax.Array:
+    """1xR column-vector structured mask (paper Fig 9): prune at the
+    granularity of R consecutive *rows* sharing one column."""
+    *lead, lq, lk = scores.shape
+    assert lq % rows_per_vec == 0
+    s = scores if valid is None else jnp.where(valid, scores, NEG)
+    g = s.reshape(*lead, lq // rows_per_vec, rows_per_vec, lk).max(axis=-2)
+    gm = row_topk_mask(g, keep_vecs)
+    mask = jnp.repeat(gm, rows_per_vec, axis=-2)
+    if valid is not None:
+        mask = mask & valid
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Block-level selection (TPU-native granularity)
+# ---------------------------------------------------------------------------
+
+
+def causal_block_valid(n_qb: int, n_kb: int, blocks_per_q: int = 1
+                       ) -> jax.Array:
+    """(nQb, nKb) validity: key block j visible to query block i iff the
+    first token of j is <= last token of i (block-causal)."""
+    qi = jnp.arange(n_qb)[:, None]
+    kj = jnp.arange(n_kb)[None, :]
+    return kj <= (qi + 1) * blocks_per_q - 1 if blocks_per_q != 1 else kj <= qi
+
+
+def swa_block_valid(n_qb: int, n_kb: int, window_blocks: int) -> jax.Array:
+    qi = jnp.arange(n_qb)[:, None]
+    kj = jnp.arange(n_kb)[None, :]
+    return (kj <= qi) & (kj >= qi - window_blocks)
+
+
+def block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
+                       causal: bool = True,
+                       window_blocks: int = 0,
+                       local_blocks: int = 1,
+                       sort: bool = True
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Select ``nb_keep`` key blocks per query-block row.
+
+    block_scores: (B, nQb, nKb) approximate block scores.
+    Returns (indices, valid): (B, nQb, nb_keep) int32 / bool.  The diagonal
+    ``local_blocks`` are always kept (paper keeps local attention cheaply;
+    also guarantees softmax has support).  ``sort=True`` orders the visited
+    key blocks ascending — the Pallas-grid analogue of the paper's §5.2
+    compute reordering (contiguous HBM->VMEM streams).
+    """
+    b, n_qb, n_kb = block_scores.shape
+    valid = jnp.ones((n_qb, n_kb), bool)
+    if causal:
+        valid &= causal_block_valid(n_qb, n_kb)
+    if window_blocks:
+        valid &= swa_block_valid(n_qb, n_kb, window_blocks)
+    qi = jnp.arange(n_qb)[:, None]
+    kj = jnp.arange(n_kb)[None, :]
+    local = (kj <= qi) & (kj > qi - local_blocks - 1) if causal else (
+        jnp.abs(kj - qi) <= local_blocks // 2 if n_qb == n_kb
+        else jnp.zeros((n_qb, n_kb), bool))
+    s = jnp.where(valid[None], block_scores, NEG)
+    s = jnp.where(local[None], jnp.inf, s)            # force-keep local
+    vals, idx = jax.lax.top_k(s, nb_keep)             # (B, nQb, nb_keep)
+    ok = vals > NEG / 2
+    if sort:
+        # sort kept indices ascending; push invalid to the end
+        key = jnp.where(ok, idx, n_kb + 1)
+        order = jnp.argsort(key, axis=-1)
+        idx = jnp.take_along_axis(idx, order, axis=-1)
+        ok = jnp.take_along_axis(ok, order, axis=-1)
+    idx = jnp.where(ok, idx, jnp.maximum(0, jnp.minimum(qi, n_kb - 1))[None])
+    return idx.astype(jnp.int32), ok
+
+
+def block_mask_from_indices(idx: jax.Array, valid: jax.Array,
+                            n_kb: int) -> jax.Array:
+    """Dense (B, nQb, nKb) boolean block mask (reference/oracle path)."""
+    onehot = jax.nn.one_hot(idx, n_kb, dtype=jnp.bool_)
+    onehot &= valid[..., None]
+    return jnp.any(onehot, axis=-2)
+
+
+def expand_block_mask(bmask: jax.Array, block_q: int, block_k: int
+                      ) -> jax.Array:
+    """(B, nQb, nKb) block mask -> (B, Lq, Lk) token mask."""
+    m = jnp.repeat(bmask, block_q, axis=-2)
+    return jnp.repeat(m, block_k, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Oracle + metrics (paper Table 1, Fig 4/5/6)
+# ---------------------------------------------------------------------------
+
+
+def oracle_topk_mask(attn_weights: jax.Array, keep: int,
+                     valid: Optional[jax.Array] = None) -> jax.Array:
+    """Top-k over the TRUE attention weights — the paper's oracle pattern."""
+    return row_topk_mask(attn_weights, keep, valid)
+
+
+def prediction_accuracy(pred_mask: jax.Array, oracle_mask: jax.Array
+                        ) -> jax.Array:
+    """Fraction of predicted-kept positions that are oracle-kept
+    (paper §4.3's prediction accuracy)."""
+    hit = jnp.sum(pred_mask & oracle_mask)
+    tot = jnp.maximum(1, jnp.sum(pred_mask))
+    return hit / tot
+
+
+def attention_sparsity(weights: jax.Array, theta: float) -> jax.Array:
+    """Fraction of attention weights below theta (paper Table 1 sparsity)."""
+    return jnp.mean(weights < theta)

@@ -1,0 +1,119 @@
+"""DSA prediction path (paper §3.1).
+
+    Q~ = (X P) W~q,   K~ = (X P) W~k,   S~ = Q~ K~^T
+
+P is a *constant* sparse random projection (Achlioptas): entries
+sqrt(3/k) * {-1, 0, +1} with probabilities {1/6, 2/3, 1/6}, shared by the
+query and key branches; W~q, W~k in R^{k x k} are trainable; all three GEMMs
+run in low precision (fake-quant, see quantization.py).
+
+The path is shared across attention heads: the paper's overhead accounting
+(1.17%-1.33%, §4.4) and the head-free MSE of Eq. 6 imply one S~ per layer.
+A per-head variant is available (``per_head=True``) for ablations.
+
+TPU adaptation (DESIGN.md §2): masks are consumed at (block_q x block_k)
+granularity, so ``predict_block_scores`` offers a *pooled* mode that computes
+block-level scores directly — mean-pooled Q~ per query block against every
+K~ token, then max over key blocks — an O(l^2 k / block_q) beyond-paper
+optimization recorded in EXPERIMENTS.md §Perf.  The paper-faithful mode
+computes the full token-level S~ and max-pools it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fake_quant
+
+
+def init_projection(key: jax.Array, d: int, k: int,
+                    dtype=jnp.float32) -> jax.Array:
+    """Achlioptas sparse random projection sqrt(3/k)*{-1,0,1}^{d x k}."""
+    u = jax.random.uniform(key, (d, k))
+    vals = jnp.where(u < 1.0 / 6.0, -1.0, jnp.where(u < 2.0 / 6.0, 1.0, 0.0))
+    return (jnp.sqrt(3.0 / k) * vals).astype(dtype)
+
+
+def predictor_k(d_model: int, sigma: float) -> int:
+    """Projection dim k = sigma * d, rounded to a multiple of 8 (>=8)."""
+    return max(8, int(round(sigma * d_model / 8)) * 8)
+
+
+def init_predictor(key: jax.Array, d_model: int, sigma: float,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    k = predictor_k(d_model, sigma)
+    kp, kq, kk = jax.random.split(key, 3)
+    scale = 1.0 / jnp.sqrt(k)
+    return {
+        "p": init_projection(kp, d_model, k, dtype),       # constant (no grad)
+        "wq": (jax.random.normal(kq, (k, k)) * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, (k, k)) * scale).astype(dtype),
+    }
+
+
+def predictor_specs() -> Dict[str, tuple]:
+    """Logical sharding axes for the predictor params."""
+    return {"p": ("embed", "pred_k"), "wq": ("pred_k", "pred_k"),
+            "wk": ("pred_k", "pred_k")}
+
+
+def _project(params, x, bits):
+    # P is frozen: stop_gradient so the optimizer never moves it.
+    p = jax.lax.stop_gradient(params["p"]).astype(x.dtype)
+    return fake_quant(x @ p, bits)
+
+
+def predict_qk(params: Dict[str, jax.Array], x_q: jax.Array,
+               x_kv: Optional[jax.Array], bits: int):
+    """Return (Q~, K~): (B, Lq, k), (B, Lk, k)."""
+    xp_q = _project(params, x_q, bits)
+    xp_k = xp_q if x_kv is None else _project(params, x_kv, bits)
+    q_t = xp_q @ fake_quant(params["wq"].astype(x_q.dtype), bits)
+    k_t = xp_k @ fake_quant(params["wk"].astype(x_q.dtype), bits)
+    return fake_quant(q_t, bits), fake_quant(k_t, bits)
+
+
+def predict_scores(params, x_q, x_kv=None, *, bits: int = 4) -> jax.Array:
+    """Token-granularity approximate scores S~ (B, Lq, Lk) — paper-faithful."""
+    q_t, k_t = predict_qk(params, x_q, x_kv, bits)
+    return jnp.einsum("bqk,bsk->bqs", q_t, k_t)
+
+
+def pool_block_scores(s_tilde: jax.Array, block_q: int,
+                      block_k: int) -> jax.Array:
+    """Max-pool token scores S~ to (B, nQb, nKb) block scores."""
+    b, lq, lk = s_tilde.shape
+    assert lq % block_q == 0 and lk % block_k == 0, (s_tilde.shape,)
+    s = s_tilde.reshape(b, lq // block_q, block_q, lk // block_k, block_k)
+    return jnp.max(s, axis=(2, 4))
+
+
+def predict_block_scores(params, x_q, x_kv=None, *, bits: int = 4,
+                         block_q: int = 128, block_k: int = 128,
+                         pooled: bool = True) -> jax.Array:
+    """Block-granularity approximate scores (B, nQb, nKb).
+
+    pooled=True (TPU-optimized): mean-pool Q~ over each query block before
+    the score GEMM — O(l^2 k / block_q) instead of O(l^2 k).
+    pooled=False (paper-faithful): full S~ then max-pool.
+    """
+    if not pooled:
+        return pool_block_scores(
+            predict_scores(params, x_q, x_kv, bits=bits), block_q, block_k)
+    q_t, k_t = predict_qk(params, x_q, x_kv, bits)
+    b, lq, k = q_t.shape
+    lk = k_t.shape[1]
+    assert lq % block_q == 0 and lk % block_k == 0
+    q_blk = q_t.reshape(b, lq // block_q, block_q, k).mean(axis=2)
+    s = jnp.einsum("bqk,bsk->bqs", q_blk, k_t)          # (B, nQb, Lk)
+    s = s.reshape(b, lq // block_q, lk // block_k, block_k)
+    return jnp.max(s, axis=-1)
+
+
+def mse_loss(s: jax.Array, s_tilde: jax.Array) -> jax.Array:
+    """Paper Eq. 6: mean squared error between S and S~ (mean over batch,
+    sum over positions — normalized here per-position for scale stability
+    across sequence lengths; λ absorbs the constant)."""
+    return jnp.mean((s.astype(jnp.float32) - s_tilde.astype(jnp.float32)) ** 2)

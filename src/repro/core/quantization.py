@@ -1,0 +1,43 @@
+"""Fake quantization for the DSA prediction path (paper §3.1, Table 3).
+
+The paper computes the prediction GEMMs in INT8/INT4 (INT2 on easy tasks).
+TPU v5e's MXU natively supports bf16 and int8; INT4/INT2 have no datapath, so
+we *emulate* the numerics (symmetric per-row fake-quant with a straight-
+through estimator) to reproduce the paper's accuracy/precision trade-off
+(Table 3, Fig 6), and account their cost with the paper's energy factors in
+the benchmark harness.  ``bits >= 32`` is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Symmetric uniform fake-quant along ``axis`` (per-row scale)."""
+    if bits >= 32:
+        return x
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(x), axis=axis, keepdims=True) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.round(x / scale)
+    q = jnp.clip(q, -qmax - 1, qmax)
+    return q * scale
+
+
+def fake_quant(x: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Straight-through-estimator fake quant: forward quantized, identity grad."""
+    if bits >= 32:
+        return x
+    return x + jax.lax.stop_gradient(quantize(x, bits, axis=axis) - x)
+
+
+# Energy per MAC relative to an FP32 MAC (45nm, after Tang et al. 2021 /
+# Horowitz), used by benchmarks/fig8_energy.py to reproduce Figure 8.
+ENERGY_PER_MAC_VS_FP32 = {
+    32: 1.0,      # FP32
+    16: 0.30,     # FP16/BF16
+    8: 0.056,     # INT8
+    4: 0.028,     # INT4
+    2: 0.014,     # INT2
+}

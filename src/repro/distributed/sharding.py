@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules (MaxText-style) resolved against the mesh.
+
+Weights and activations are annotated with *logical* axis names; a rule table
+maps logical axes to mesh axes.  ``resolve_spec`` drops mesh axes that don't
+divide the dimension and never uses a mesh axis twice in one spec — this is
+what lets one rule table serve 10 architectures (whisper's 12 heads simply
+fall back to replicated while qwen's 64 heads shard 16-way).
+
+Parallelism provided (DESIGN.md §3):
+  DP   : "batch" -> ("pod", "data")
+  FSDP : "embed" (weight d_model axis) -> "data"  (ZeRO-3 weight shard)
+  TP   : "heads"/"mlp"/"vocab"/"expert" -> "model"
+  SP   : residual-stream "seq_sp" -> "model" between blocks
+  EP   : "expert" -> "model" when divisible (deepseek 256, jamba 16),
+         falls back to per-expert TP (mixtral 8)
+  long-context: "cache_seq" -> "data" (sequence-sharded KV/state cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch: Axis = "data"
+    seq: Axis = None              # activation seq inside blocks (replicated)
+    seq_sp: Axis = "model"        # residual-stream sequence parallelism
+    cache_seq: Axis = None        # KV-cache seq; "data" for long-context decode
+    embed: Axis = "data"          # FSDP weight shard axis
+    embed_act: Axis = None        # activation d_model axis
+    mlp: Axis = "model"
+    heads: Axis = "model"
+    kv_heads: Axis = "model"
+    qkv: Axis = None              # head_dim
+    vocab: Axis = "model"
+    expert: Axis = "model"
+    lora: Axis = None
+    state: Axis = None
+    conv: Axis = None
+    layers: Axis = None           # scan-stacked leading axis
+    pred_k: Axis = None           # DSA projection dim
+    blocks: Axis = None           # DSA block indices
+
+    def axis(self, name: Optional[str]) -> Axis:
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+def make_rules(*, multi_pod: bool = False, fsdp: bool = True,
+               seq_parallel: bool = True, long_context: bool = False,
+               fsdp_pod: bool = False, tp: bool = True,
+               cache_axis: Axis = "auto") -> ShardingRules:
+    """Build the rule table for a run.
+
+    fsdp_pod: also shard weights over the pod axis (ZeRO across pods —
+    cheaper memory, pays cross-DCI all-gathers; a §Perf experiment).
+    cache_axis: KV-cache sequence axis.  "auto" -> "model" (flash-decode
+    style seq sharding; GSPMD reduces the softmax across shards), and
+    ("data", "model") for long-context (batch=1 cannot use "data").
+    """
+    if cache_axis == "auto":
+        cache_axis = ("data", "model") if long_context else "model"
+    if not tp:
+        # pure FSDP/DP: batch and weights shard over BOTH axes, no tensor
+        # parallelism (right-sizes small models whose TP activation
+        # collectives dominate — §Perf)
+        both = (("pod", "data", "model") if multi_pod
+                else ("data", "model"))
+        return ShardingRules(
+            batch=both, embed=both if fsdp else None, seq_sp=None,
+            mlp=None, heads=None, kv_heads=None, expert=None,
+            # vocab stays TP-sharded: embedding/lm_head gradients otherwise
+            # all-reduce the full f32 table across all chips (§Perf yi iter 4)
+            vocab="model",
+            cache_seq=cache_axis,
+        )
+    batch: Axis = ("pod", "data") if multi_pod else "data"
+    embed: Axis = None
+    if fsdp:
+        embed = ("pod", "data") if (multi_pod and fsdp_pod) else "data"
+    return ShardingRules(
+        batch=batch,
+        embed=embed,
+        seq_sp="model" if seq_parallel else None,
+        cache_seq=cache_axis,
+    )
+
+
+# Rules used by model code; installed by the launcher before tracing.
+_RULES = ShardingRules()
+
+
+def set_rules(rules: ShardingRules) -> None:
+    global _RULES
+    _RULES = rules
+
+
+def get_rules() -> ShardingRules:
+    return _RULES
+
+
+def _mesh_axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def resolve_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+                 rules: Optional[ShardingRules] = None,
+                 mesh=None) -> P:
+    """Map logical axes -> PartitionSpec, enforcing divisibility and
+    one-use-per-mesh-axis."""
+    rules = rules or _RULES
+    mesh = mesh or jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return P(*([None] * len(shape)))
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    out = []
+    assert len(shape) == len(logical), (shape, logical)
+    for dim, name in zip(shape, logical):
+        ax = rules.axis(name)
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        picked = []
+        prod = 1
+        for a in axes:
+            if a in used or a not in sizes:
+                continue
+            if dim % (prod * sizes[a]) == 0:
+                picked.append(a)
+                prod *= sizes[a]
+        for a in picked:
+            used.add(a)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain activation ``x`` to the resolved spec (no-op outside a mesh)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or not mesh.shape_tuple:
+        return x
+    spec = resolve_spec(x.shape, tuple(logical), mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def is_spec_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def map_specs(f, spec_tree):
+    """Map over a tree whose leaves are logical-axis tuples."""
+    return jax.tree.map(f, spec_tree, is_leaf=is_spec_leaf)
+
+
+def tree_specs(param_tree, logical_tree, rules: Optional[ShardingRules] = None,
+               mesh=None):
+    """Parallel tree of PartitionSpec from a tree of logical-axis tuples.
+
+    ``param_tree`` may be a tree of arrays or ShapeDtypeStructs.
+    """
+    def one(p, log):
+        return resolve_spec(tuple(p.shape), tuple(log), rules=rules, mesh=mesh)
+    return jax.tree.map(one, param_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,87 @@
+"""Batched serving engine: prefill + decode with KV/state caches.
+
+Jit-compiles one prefill function and one decode function per (batch,
+prompt_len) bucket; requests are right-padded into the bucket.  DSA
+long-context decode is enabled through RunFlags(long_context=True) — the
+prediction-path key cache makes decode sub-quadratic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import RunFlags
+from repro.models.transformer import decode_step, forward, init_cache
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray           # (B, n_new)
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, max_len: int = 2048,
+                 long_context: bool = False, dsa_mode: str = "off",
+                 cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.prefill_flags = RunFlags(mode="prefill", dsa_mode=dsa_mode,
+                                      with_mse=False,
+                                      long_context=long_context)
+        self.decode_flags = RunFlags(mode="decode", dsa_mode=dsa_mode,
+                                     with_mse=False,
+                                     long_context=long_context)
+        self.cache_dtype = cache_dtype
+
+        def _prefill(params, batch, caches):
+            logits, _, caches = forward(params, cfg, self.prefill_flags,
+                                        batch, caches=caches)
+            return logits[:, -1:], caches
+
+        def _decode(params, tok, caches):
+            return decode_step(params, cfg, self.decode_flags, tok, caches)
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(2,))
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 extras: Optional[Dict[str, np.ndarray]] = None,
+                 greedy: bool = True, seed: int = 0) -> GenerationResult:
+        b, s = prompts.shape
+        caches = init_cache(self.cfg, b, self.max_len, self.decode_flags,
+                            dtype=self.cache_dtype)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        t0 = time.monotonic()
+        logits, caches = self._prefill(self.params, batch, caches)
+        logits.block_until_ready()
+        t_prefill = time.monotonic() - t0
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        t0 = time.monotonic()
+        for i in range(n_new):
+            out.append(np.asarray(tok))
+            logits, caches = self._decode(self.params, tok, caches)
+            if greedy:
+                tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            else:
+                key, sk = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sk, logits[:, -1])[:, None].astype(jnp.int32)
+        tok.block_until_ready()
+        t_decode = time.monotonic() - t0
+        toks = np.concatenate(out, axis=1)
+        return GenerationResult(toks, t_prefill, t_decode,
+                                b * n_new / max(t_decode, 1e-9))

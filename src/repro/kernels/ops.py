@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware.  Model code calls these through
+RunFlags(dsa_mode="kernel").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dsa_attention import dsa_block_sparse_attention
+from repro.kernels.wkv6 import wkv6_chunked
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",
+                                             "window", "interpret"))
+def dsa_attention(q, k, v, idx, valid, *, block_q=128, block_k=128,
+                  causal=True, window=0, interpret=None):
+    """q: (B,Lq,Hq,hd) [model layout]; k/v: (B,Lk,Hkv,hd);
+    idx/valid: (B,nQb,nb).  Returns (B,Lq,Hq,hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = dsa_block_sparse_attention(qt, kt, vt, idx, valid,
+                                     block_q=block_q, block_k=block_k,
+                                     causal=causal, window=window,
+                                     interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk=32, interpret=None):
+    """r,k,v,w: (B,S,H,hd) [model layout]; u: (H,hd) -> (B,S,H,hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    rt, kt2, vt, wt = (t.transpose(0, 2, 1, 3) for t in (r, k, v, w))
+    y = wkv6_chunked(rt, kt2, vt, wt, u, chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

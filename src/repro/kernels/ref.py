@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def dsa_block_sparse_attention_ref(q, k, v, idx, valid, *, block_q=128,
+                                   block_k=128, causal=True, window=0):
+    """Dense masked softmax over the expanded block mask.
+    q: (B,Hq,Lq,hd); k/v: (B,Hkv,Lk,hd); idx/valid: (B,nQb,nb)."""
+    b, hq, lq, hd = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    n_kb = lk // block_k
+    onehot = jax.nn.one_hot(idx, n_kb, dtype=jnp.bool_) & valid[..., None]
+    bmask = jnp.any(onehot, axis=-2)                       # (B,nQb,nKb)
+    tmask = jnp.repeat(jnp.repeat(bmask, block_q, axis=-2), block_k, axis=-1)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (hd ** -0.5)
+    m = tmask[:, None]
+    qi = jnp.arange(lq)[:, None]
+    kj = jnp.arange(lk)[None, :]
+    if causal:
+        m = m & (kj <= qi)[None, None]
+    if window:
+        m = m & (kj > qi - window)[None, None]
+    s = jnp.where(m, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """Sequential rwkv6 recurrence (the repro.models.ssm scan, re-stated).
+    r,k,v,w: (B,S,H,hd); u: (H,hd).  Returns (y, s_last)."""
+    b, s, h, hd = r.shape
+    st = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp
+        kv = (kt[..., :, None].astype(jnp.float32)
+              * vt[..., None, :].astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                       st + u[None, :, :, None].astype(jnp.float32) * kv)
+        st = wt[..., :, None].astype(jnp.float32) * st + kv
+        return st, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    st, ys = jax.lax.scan(step, st, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), st

@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable structs — no device
+allocation; the full configs are only ever touched through these (the
+assignment's rule).  Modality frontends are STUBS: whisper gets precomputed
+frame embeddings, llama-vision gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.attention import RunFlags
+from repro.models.transformer import init_cache, init_model
+from repro.optim import adamw
+from repro.training.steps import init_train_state
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeConfig, train: bool
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    gb, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    out = {"tokens": sd((gb, s), jnp.int32)}
+    if train:
+        out["labels"] = sd((gb, s), jnp.int32)
+        out["loss_mask"] = sd((gb, s), jnp.float32)
+    if cfg.enc_dec:
+        out["enc_x"] = sd((gb, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.cross_attn_period:
+        out["img"] = sd((gb, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_logical_specs(batch_structs_tree) -> Dict[str, Tuple]:
+    out = {}
+    for k, v in batch_structs_tree.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def model_structs(cfg: ArchConfig):
+    """(params_structs, logical_specs) without allocating."""
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg)[0],
+                            jax.random.PRNGKey(0))
+    return shapes, _model_specs_static(cfg)
+
+
+def _model_specs_static(cfg: ArchConfig):
+    """Build the logical-spec tree without touching arrays: run init_model
+    under eval_shape and keep the specs half (init is functional)."""
+    out = {}
+
+    def fn(k):
+        p, s = init_model(k, cfg)
+        out["specs"] = s
+        return p
+
+    jax.eval_shape(fn, jax.random.PRNGKey(0))
+    return out["specs"]
+
+
+def train_state_structs(cfg: ArchConfig, opt: adamw.OptConfig):
+    out = {}
+
+    def fn(k):
+        st, sp = init_train_state(k, cfg, opt)
+        out["specs"] = sp
+        return st
+
+    structs = jax.eval_shape(fn, jax.random.PRNGKey(0))
+    return structs, out["specs"]
+
+
+def cache_structs(cfg: ArchConfig, batch: int, max_len: int,
+                  flags: RunFlags):
+    from repro.models.transformer import cache_specs
+    caches = jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, flags, dtype=jnp.bfloat16))
+    specs = cache_specs(cfg, caches, flags)
+    return caches, specs

@@ -1,0 +1,424 @@
+"""Attention modules (GQA / SWA / MLA / cross) with first-class DSA.
+
+Each ``init_*`` returns ``(params, specs)`` where specs is a parallel tree of
+logical-axis tuples consumed by repro.distributed.sharding.
+
+DSA integration (paper §3): when ``cfg.dsa.enabled`` and the run flags ask
+for it, the module computes approximate scores S~ through the prediction
+path, derives the dynamic sparse pattern, executes the sparse attention, and
+returns the MSE term for the joint loss (Eq. 7) in ``aux``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import attention as A
+from repro.core import masks as M
+from repro.core import prediction as PRED
+from repro.distributed.sharding import shard
+from repro.models.common import dense_init, rms_norm, rope
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Runtime execution choices (not architecture)."""
+    mode: str = "train"            # train | prefill | decode
+    dsa_mode: str = "block"        # off | faithful | block | kernel
+    with_mse: bool = True          # compute L_MSE (training)
+    long_context: bool = False     # DSA decode over predicted-key cache
+    mse_stride_cap: int = 512      # subsampled-MSE rows in block mode
+    decode_window: int = 0         # ring-buffer cache size override
+
+
+def dsa_active(cfg: ArchConfig, flags: RunFlags) -> bool:
+    return cfg.dsa.enabled and flags.dsa_mode != "off"
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (yi / danube / qwen / stablelm / mixtral / jamba-attn / ...)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False,
+                   dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    params = {
+        "wq": dense_init(ks[0], (d, nq), dtype=dtype),
+        "wk": dense_init(ks[1], (d, nkv), dtype=dtype),
+        "wv": dense_init(ks[2], (d, nkv), dtype=dtype),
+        "wo": dense_init(ks[3], (nq, d), dtype=dtype),
+    }
+    specs = {
+        "wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"), "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        params.update(bq=jnp.zeros((nq,), dtype), bk=jnp.zeros((nkv,), dtype),
+                      bv=jnp.zeros((nkv,), dtype))
+        specs.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    if cfg.dsa.enabled and not cross:
+        params["dsa"] = PRED.init_predictor(ks[4], d, cfg.dsa.sigma, dtype)
+        specs["dsa"] = PRED.predictor_specs()
+    return params, specs
+
+
+def _proj_qkv(params, cfg: ArchConfig, x, x_kv=None):
+    hd = cfg.resolved_head_dim
+    xk = x if x_kv is None else x_kv
+    q = x @ params["wq"]
+    k = xk @ params["wk"]
+    v = xk @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    b, lq = x.shape[:2]
+    lk = xk.shape[1]
+    q = q.reshape(b, lq, cfg.n_heads, hd)
+    k = k.reshape(b, lk, cfg.n_kv_heads, hd)
+    v = v.reshape(b, lk, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _mean_head_scores(q, k, stride: int = 1):
+    """Mean-over-heads QK^T — the MSE target S of Eq. 6 (GQA: kv repeated)."""
+    hq, hkv = q.shape[2], k.shape[2]
+    g = hq // hkv
+    qs = q[:, ::stride]
+    s = jnp.einsum("bqhgd,bkhd->bqk",
+                   qs.reshape(*qs.shape[:2], hkv, g, -1), k)
+    return s / hq
+
+
+def _dsa_train_mask_and_aux(params, cfg: ArchConfig, flags: RunFlags,
+                            x, q, k, causal: bool, x_kv=None):
+    """Compute the DSA pattern + MSE aux for train/prefill."""
+    dsa = cfg.dsa
+    b, lq = x.shape[:2]
+    lk = (x if x_kv is None else x_kv).shape[1]
+    aux: Dict[str, jax.Array] = {}
+    # token-granularity path: the paper-faithful mode, also the fallback
+    # when the sequence isn't block-divisible (whisper's 1500-frame encoder)
+    if (flags.dsa_mode == "faithful" or lq % dsa.block_q
+            or lk % dsa.block_k):
+        s_t = PRED.predict_scores(params["dsa"], x, x_kv, bits=dsa.quant_bits)
+        pm = A._pos_mask(lq, lk, causal, cfg.swa_window)
+        valid = None if pm is None else jnp.broadcast_to(pm, (b, lq, lk))
+        keep = M.keep_count(lk, dsa.sparsity)
+        mask = M.row_topk_mask(s_t, keep, valid)
+        if flags.with_mse:
+            aux["mse"] = PRED.mse_loss(_mean_head_scores(q, k), s_t)
+        return ("token", mask), aux
+    # block mode (TPU-native)
+    bs = PRED.predict_block_scores(
+        params["dsa"], x, x_kv, bits=dsa.quant_bits,
+        block_q=dsa.block_q, block_k=dsa.block_k, pooled=True)
+    n_kb = lk // dsa.block_k
+    nb_keep = max(dsa.min_blocks + dsa.local_blocks,
+                  M.keep_count(n_kb, dsa.sparsity))
+    wb = cfg.swa_window // dsa.block_k if cfg.swa_window else 0
+    idx, ok = M.block_topk_indices(
+        bs, nb_keep, causal=causal, window_blocks=wb,
+        local_blocks=dsa.local_blocks, sort=dsa.sort_indices)
+    if flags.with_mse:
+        stride = max(1, lq // flags.mse_stride_cap)
+        q_t, k_t = PRED.predict_qk(params["dsa"], x, x_kv, dsa.quant_bits)
+        s_t_sub = jnp.einsum("bqk,bsk->bqs", q_t[:, ::stride], k_t)
+        aux["mse"] = PRED.mse_loss(_mean_head_scores(q, k, stride), s_t_sub)
+    return ("block", (idx, ok)), aux
+
+
+def apply_attention(params, cfg: ArchConfig, flags: RunFlags, x, *,
+                    x_kv=None, cache=None, causal=True, use_rope=True,
+                    pos_offset=0):
+    """Returns (out, new_cache, aux).  x: (B, S, d)."""
+    dsa = cfg.dsa
+    hd = cfg.resolved_head_dim
+    aux: Dict[str, jax.Array] = {}
+    cross = x_kv is not None or (cache is not None and "ck" in cache)
+
+    if flags.mode == "decode" and not cross:
+        return _apply_decode(params, cfg, flags, x, cache, use_rope)
+
+    if cross and flags.mode == "decode":   # cross decode: static enc k/v cache
+        q = (x @ params["wq"]).reshape(*x.shape[:2], cfg.n_heads, hd)
+        if cfg.qkv_bias:
+            q = q + params["bq"].reshape(cfg.n_heads, hd)
+        out = A.decode_attention(q, cache["ck"], cache["cv"])
+        return out.reshape(*x.shape[:2], -1) @ params["wo"], cache, aux
+
+    q, k, v = _proj_qkv(params, cfg, x, x_kv)
+    if use_rope and not cross:
+        pos = jnp.arange(x.shape[1]) + pos_offset
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "qkv")
+    k = shard(k, "batch", "seq", "kv_heads", "qkv")
+
+    if dsa_active(cfg, flags) and not cross:
+        (kind, pat), aux = _dsa_train_mask_and_aux(
+            params, cfg, flags, x, q, k, causal, x_kv)
+        if kind == "token":
+            out = A.dense_attention(q, k, v, causal=causal,
+                                    window=cfg.swa_window, token_mask=pat)
+        elif flags.dsa_mode == "kernel":
+            from repro.kernels.ops import dsa_attention as dsa_kernel
+            idx, ok = pat
+            out = dsa_kernel(q, k, v, idx, ok, block_q=dsa.block_q,
+                             block_k=dsa.block_k, causal=causal,
+                             window=cfg.swa_window)
+        else:
+            idx, ok = pat
+            out = A.dsa_sparse_attention(
+                q, k, v, idx, ok, block_q=dsa.block_q, block_k=dsa.block_k,
+                causal=causal, window=cfg.swa_window)
+    elif x.shape[1] <= 1024:
+        out = A.dense_attention(q, k, v, causal=causal, window=cfg.swa_window)
+    else:
+        out = A.flash_attention(q, k, v, causal=causal, window=cfg.swa_window)
+
+    new_cache = cache
+    if flags.mode == "prefill" and cache is not None:
+        if cross:
+            new_cache = dict(cache, ck=k.astype(cache["ck"].dtype),
+                             cv=v.astype(cache["cv"].dtype))
+        else:
+            new_cache = _fill_cache(cfg, flags, cache, k, v, params, x)
+    out = shard(out, "batch", "seq", "heads", "qkv")
+    out = out.reshape(*x.shape[:2], -1) @ params["wo"]
+    return out, new_cache, aux
+
+
+def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
+                         flags: RunFlags, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    s = min(max_len, flags.decode_window or max_len,
+            cfg.swa_window or max_len)
+    c = {
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.dsa.enabled and flags.long_context and not cfg.swa_window:
+        kp = PRED.predictor_k(cfg.d_model, cfg.dsa.sigma)
+        c["kt"] = jnp.zeros((batch, s, kp), dtype)
+    return c
+
+
+def cache_specs_attention(cache) -> Dict:
+    out = {"k": ("batch", "cache_seq", "kv_heads", "qkv"),
+           "v": ("batch", "cache_seq", "kv_heads", "qkv"),
+           "pos": ()}
+    if "kt" in cache:
+        out["kt"] = ("batch", "cache_seq", "pred_k")
+    return out
+
+
+def _fill_cache(cfg, flags, cache, k, v, params, x):
+    if cache is None:
+        return None
+    s = cache["k"].shape[1]
+    t = k.shape[1]
+
+    def ring(buf):
+        """Place token i at cache slot i % s (ring-aligned for decode)."""
+        if t <= s:
+            return buf
+        tail = buf[:, -s:]
+        return jnp.roll(tail, (t - s) % s, axis=1)
+
+    kc, vc = ring(k), ring(v)
+    new = dict(cache)
+    new["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"].astype(kc.dtype), kc.astype(cache["k"].dtype), 0, axis=1)
+    new["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"].astype(vc.dtype), vc.astype(cache["v"].dtype), 0, axis=1)
+    new["pos"] = jnp.asarray(t, jnp.int32)
+    if "kt" in cache:
+        _, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
+        new["kt"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["kt"].astype(k_t.dtype), ring(k_t).astype(cache["kt"].dtype),
+            0, axis=1)
+    return new
+
+
+def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                  use_rope):
+    """Single-token decode with KV cache (ring buffer under SWA)."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    pos = cache["pos"]
+    q, k, v = _proj_qkv(params, cfg, x)
+    if use_rope:
+        p = jnp.full((1,), pos, jnp.int32)
+        q = rope(q, p, cfg.rope_theta)
+        k = rope(k, p, cfg.rope_theta)
+    s = cache["k"].shape[1]
+    slot = jnp.where(jnp.asarray(s) > pos, pos, pos % s)   # ring for SWA
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    new = dict(cache, k=kc, v=vc, pos=pos + 1)
+    kv_len = jnp.minimum(pos + 1, s) * jnp.ones((b,), jnp.int32)
+    if "kt" in cache:
+        q_t, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
+        new["kt"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["kt"], k_t.astype(cache["kt"].dtype), slot, axis=1)
+        s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
+                             new["kt"].astype(jnp.float32))
+        keep = M.keep_count(s, cfg.dsa.sparsity)
+        out = A.dsa_decode_attention(q, kc, vc, s_tilde, keep=keep,
+                                     kv_len=kv_len)
+    else:
+        out = A.decode_attention(q, kc, vc, kv_len=kv_len,
+                                 window=0 if s <= (cfg.swa_window or s) else cfg.swa_window)
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, new, {}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3) — latent-compressed attention, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_h = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    params = {
+        "q_a": dense_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "q_b": dense_init(ks[1], (m.q_lora_rank, h * qk_h), dtype=dtype),
+        "kv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           dtype=dtype),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "kv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                   h * (m.qk_nope_head_dim + m.v_head_dim)),
+                           dtype=dtype),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d), dtype=dtype),
+    }
+    specs = {
+        "q_a": ("embed", "lora"), "q_a_norm": ("lora",),
+        "q_b": ("lora", "heads"),
+        "kv_a": ("embed", "lora"), "kv_a_norm": ("lora",),
+        "kv_b": ("lora", "heads"), "wo": ("heads", "embed"),
+    }
+    if cfg.dsa.enabled:
+        params["dsa"] = PRED.init_predictor(ks[5], d, cfg.dsa.sigma, dtype)
+        specs["dsa"] = PRED.predictor_specs()
+    return params, specs
+
+
+def _mla_qkv(params, cfg: ArchConfig, x, pos):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_h = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = rms_norm(x @ params["q_a"], params["q_a_norm"]) @ params["q_b"]
+    q = q.reshape(b, s, h, qk_h)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+    kv = x @ params["kv_a"]
+    c_kv = rms_norm(kv[..., :m.kv_lora_rank], params["kv_a_norm"])
+    k_rope = rope(kv[..., None, m.kv_lora_rank:], pos, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla(params, cfg: ArchConfig, flags: RunFlags, x, *, cache=None,
+              pos_offset=0):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if flags.mode == "decode":
+        return _apply_mla_decode(params, cfg, flags, x, cache)
+    pos = jnp.arange(s) + pos_offset
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, pos)
+    kvb = (c_kv @ params["kv_b"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (*k_nope.shape[:3],
+                                                   m.qk_rope_head_dim))], -1)
+    q = shard(q, "batch", "seq", "heads", "qkv")
+    k = shard(k, "batch", "seq", "heads", "qkv")
+    aux: Dict[str, jax.Array] = {}
+    if dsa_active(cfg, flags):
+        (kind, pat), aux = _dsa_train_mask_and_aux(
+            params, cfg, flags, x, q, k, True)
+        if kind == "token":
+            out = A.dense_attention(q, k, v, causal=True, token_mask=pat)
+        else:
+            idx, ok = pat
+            out = A.dsa_sparse_attention(q, k, v, idx, ok,
+                                         block_q=cfg.dsa.block_q,
+                                         block_k=cfg.dsa.block_k, causal=True)
+    elif s <= 1024:
+        out = A.dense_attention(q, k, v, causal=True)
+    else:
+        out = A.flash_attention(q, k, v, causal=True)
+    new_cache = cache
+    if flags.mode == "prefill" and cache is not None:
+        new_cache = dict(cache)
+        new_cache["c_kv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+        new_cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype),
+            0, axis=1)
+        new_cache["pos"] = jnp.asarray(s, jnp.int32)
+    out = out.reshape(b, s, -1) @ params["wo"]
+    return out, new_cache, aux
+
+
+def init_cache_mla(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs_mla(cache) -> Dict:
+    return {"c_kv": ("batch", "cache_seq", "lora"),
+            "k_rope": ("batch", "cache_seq", None), "pos": ()}
+
+
+def _apply_mla_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache):
+    """Absorbed MLA decode: scores and values live in the latent space,
+    cache stores only (c_kv, k_rope) — 576 floats/token for DSv3."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos = cache["pos"]
+    p = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, cfg, x, p)
+    ckc = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    krc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, :, 0].astype(cache["k_rope"].dtype),
+        pos, axis=1)
+    new = dict(cache, c_kv=ckc, k_rope=krc, pos=pos + 1)
+    # absorb kv_b: W_uk (r, h, nope), W_uv (r, h, v)
+    kvb = params["kv_b"].reshape(m.kv_lora_rank, h,
+                                 m.qk_nope_head_dim + m.v_head_dim)
+    w_uk, w_uv = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    q_eff = jnp.einsum("bohn,rhn->bohr", q_nope, w_uk)        # (B,1,h,r)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bohr,bsr->bhs", q_eff, ckc.astype(q_eff.dtype))
+    s_rope = jnp.einsum("bohn,bsn->bhs", q_rope, krc.astype(q_rope.dtype))
+    s_all = (s_lat + s_rope) * scale
+    kj = jnp.arange(ckc.shape[1])[None, None, :]
+    s_all = jnp.where(kj < pos + 1, s_all, A.NEG)
+    pattn = jax.nn.softmax(s_all.astype(jnp.float32), axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pattn.astype(ckc.dtype), ckc)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(o_lat.dtype))
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, new, {}

@@ -1,0 +1,69 @@
+"""Shared model primitives: norms, RoPE, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: float = 1.0, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * gamma + beta
+
+
+def group_norm_heads(x: jax.Array, gamma: jax.Array, n_heads: int,
+                     eps: float = 1e-5) -> jax.Array:
+    """GroupNorm with one group per head over the last dim (rwkv ln_x)."""
+    *lead, d = x.shape
+    xh = x.reshape(*lead, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return y.astype(x.dtype) * gamma
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+         rot_dim: int = 0) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (S,) or (B, S).
+    rot_dim: rotate only the first rot_dim features (MLA rope split)."""
+    b, s, h, hd = x.shape
+    rd = rot_dim or hd
+    assert rd % 2 == 0
+    freqs = theta ** (-jnp.arange(0, rd, 2, dtype=jnp.float32) / rd)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B,S,rd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    xr = x[..., :rd]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = out.reshape(b, s, h, rd)
+    if rd == hd:
+        return out
+    return jnp.concatenate([out, x[..., rd:]], axis=-1)
+
+
+def sinusoidal_embedding(length: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2) / d)
+    ang = pos * freqs[None]
+    emb = jnp.zeros((length, d))
+    emb = emb.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return emb.astype(dtype)

@@ -1,0 +1,234 @@
+"""Mixture-of-Experts layers with two execution strategies (DESIGN.md §3):
+
+  EP (expert-parallel, shard_map): experts sharded over the "model" axis,
+     tokens seq-sharded (SP), explicit all-to-all dispatch/return — the
+     DeepSeek/Jamba path (E % model_size == 0).  Collective cost is exactly
+     2x the dispatched activations, visible in the dry-run HLO.
+
+  TP (tensor-parallel experts, pjit): expert FFN dim sharded over "model",
+     scatter-based capacity dispatch in plain XLA — the Mixtral path (E=8).
+
+  decode: few tokens, weights dominate — every model shard runs its local
+     experts densely on all tokens, combine weights zero out non-routed
+     pairs (memory-roofline honest: all local expert weights stream once).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import get_rules, resolve_spec, shard
+from repro.models.common import dense_init
+
+
+def expert_ff(cfg: ArchConfig) -> int:
+    return cfg.moe.d_ff_expert or cfg.d_ff
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
+    mo = cfg.moe
+    d, fe = cfg.d_model, expert_ff(cfg)
+    ks = jax.random.split(key, 5)
+    e = mo.num_experts
+    params = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w1": dense_init(ks[1], (e, d, fe), dtype=dtype),
+        "w3": dense_init(ks[2], (e, d, fe), dtype=dtype),
+        "w2": dense_init(ks[3], (e, fe, d), dtype=dtype),
+    }
+    specs = {
+        "router": ("embed", None),
+        "w1": ("expert", "embed", "mlp"), "w3": ("expert", "embed", "mlp"),
+        "w2": ("expert", "mlp", "embed"),
+    }
+    if mo.num_shared_experts:
+        fs = fe * mo.num_shared_experts
+        params.update(
+            sw1=dense_init(ks[4], (d, fs), dtype=dtype),
+            sw3=dense_init(jax.random.fold_in(ks[4], 1), (d, fs), dtype=dtype),
+            sw2=dense_init(jax.random.fold_in(ks[4], 2), (fs, d), dtype=dtype))
+        specs.update(sw1=("embed", "mlp"), sw3=("embed", "mlp"),
+                     sw2=("mlp", "embed"))
+    return params, specs
+
+
+def _route(router_w, x, top_k: int):
+    """logits/weights: x (..., d) -> (ids (..., K) int32, w (..., K))."""
+    logits = x.astype(jnp.float32) @ router_w
+    w, ids = jax.lax.top_k(logits, top_k)
+    w = jax.nn.softmax(w, axis=-1)
+    # load-balance aux (Switch-style): mean prob * mean assignment per expert
+    probs = jax.nn.softmax(logits, axis=-1)
+    e = router_w.shape[1]
+    assign = jnp.zeros_like(probs).at[..., :].add(
+        jax.nn.one_hot(ids, e, dtype=probs.dtype).sum(-2))
+    f = assign.reshape(-1, e).mean(0) / top_k
+    p = probs.reshape(-1, e).mean(0)
+    aux = e * jnp.sum(f * p)
+    return ids.astype(jnp.int32), w, aux
+
+
+def _dispatch_positions(e_flat: jax.Array, num_experts: int, cap: int):
+    """Position of each flat (token,slot) within its expert's capacity.
+    Sort-based (no T x E cumsum): O(TK log TK)."""
+    tk = e_flat.shape[0]
+    order = jnp.argsort(e_flat)                       # stable
+    sorted_e = e_flat[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(tk) - first
+    pos = jnp.zeros((tk,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    return pos                                        # >= cap -> dropped
+
+
+def _expert_ffn(w1, w3, w2, xb):
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, w1))
+    h = h * jnp.einsum("ecd,edf->ecf", xb, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _moe_local(params, cfg: ArchConfig, x2, cap: int):
+    """Token dispatch -> expert FFN -> combine, on a local 2D token slab
+    x2: (T, d).  Used directly (pjit/TP path) and inside shard_map (EP)."""
+    mo = cfg.moe
+    e = mo.num_experts
+    ids, w, aux = _route(params["router"], x2, mo.top_k)      # (T,K)
+    t = x2.shape[0]
+    e_flat = ids.reshape(-1)                                  # (T*K,)
+    pos = _dispatch_positions(e_flat, e, cap)
+    tok_idx = jnp.repeat(jnp.arange(t), mo.top_k)
+    buf = jnp.zeros((e, cap, x2.shape[-1]), x2.dtype)
+    buf = buf.at[e_flat, pos].set(x2[tok_idx], mode="drop")
+    yb = _expert_ffn(params["w1"].astype(x2.dtype),
+                     params["w3"].astype(x2.dtype),
+                     params["w2"].astype(x2.dtype), buf)
+    y_slots = yb.at[e_flat, pos].get(mode="fill", fill_value=0.0)
+    ok = (pos < cap)[:, None]
+    y = jnp.sum((y_slots * ok).reshape(t, mo.top_k, -1)
+                * w.reshape(t, mo.top_k, 1).astype(x2.dtype), axis=1)
+    return y, aux
+
+
+def _moe_ep_shardmap(params, cfg: ArchConfig, x, mesh):
+    """EP path: tokens seq-sharded over 'model', experts sharded over
+    'model', two all-to-alls move dispatched activations to/from owners."""
+    mo = cfg.moe
+    rules = get_rules()
+    n_model = dict(mesh.shape)["model"]
+    e_loc = mo.num_experts // n_model
+    b, s, d = x.shape
+    t_loc_tokens = (b // _axis_size(mesh, rules.batch)) * (s // n_model)
+    cap = int(t_loc_tokens * mo.top_k * mo.capacity_factor / mo.num_experts)
+    cap = max(4, -(-cap // 4) * 4)
+
+    x_spec = resolve_spec((b, s, d), ("batch", "seq_sp", "embed_act"),
+                          mesh=mesh)
+
+    def local_fn(p_loc, x_loc):
+        bl, sl, _ = x_loc.shape
+        y, aux = _moe_ep_inner(p_loc, cfg, x_loc.reshape(bl * sl, d), cap,
+                               n_model, e_loc)
+        return y.reshape(bl, sl, d), jax.lax.pmean(aux, "model")
+
+    p_specs = {"router": P(), "w1": P(None, "model", None, None),
+               "w3": P(None, "model", None, None),
+               "w2": P(None, "model", None, None)}
+    # params passed may carry a leading scan axis already stripped; here the
+    # expert axis is dim 0 of w1/w2/w3.
+    p_specs = {"router": P(), "w1": P("model", None, None),
+               "w3": P("model", None, None), "w2": P("model", None, None)}
+    in_specs = ({k: p_specs[k] for k in ("router", "w1", "w3", "w2")}, x_spec)
+    out_specs = (x_spec, P())
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    routed = {k: params[k] for k in ("router", "w1", "w3", "w2")}
+    return fn(routed, x)
+
+
+def _moe_ep_inner(p_loc, cfg: ArchConfig, x2, cap, n_model, e_loc):
+    """Runs per-device inside shard_map.  x2: local tokens (T_l, d)."""
+    mo = cfg.moe
+    e = mo.num_experts
+    ids, w, aux = _route(p_loc["router"], x2, mo.top_k)
+    t = x2.shape[0]
+    e_flat = ids.reshape(-1)
+    pos = _dispatch_positions(e_flat, e, cap)
+    tok_idx = jnp.repeat(jnp.arange(t), mo.top_k)
+    sbuf = jnp.zeros((e, cap, x2.shape[-1]), x2.dtype)
+    sbuf = sbuf.at[e_flat, pos].set(x2[tok_idx], mode="drop")
+    # (n_model, e_loc, cap, d) -> all_to_all -> (n_model, e_loc, cap, d):
+    # afterwards axis 0 indexes the SOURCE shard, we own e_loc experts.
+    sbuf = sbuf.reshape(n_model, e_loc, cap, x2.shape[-1])
+    rbuf = jax.lax.all_to_all(sbuf, "model", split_axis=0, concat_axis=0,
+                              tiled=False)
+    rbuf = rbuf.reshape(e_loc, n_model * cap, x2.shape[-1])
+    yb = _expert_ffn(p_loc["w1"].astype(x2.dtype),
+                     p_loc["w3"].astype(x2.dtype),
+                     p_loc["w2"].astype(x2.dtype), rbuf)
+    yb = yb.reshape(n_model, e_loc, cap, x2.shape[-1])
+    ybk = jax.lax.all_to_all(yb, "model", split_axis=0, concat_axis=0,
+                             tiled=False)
+    ybk = ybk.reshape(e, cap, x2.shape[-1])
+    y_slots = ybk.at[e_flat, pos].get(mode="fill", fill_value=0.0)
+    ok = (pos < cap)[:, None]
+    y = jnp.sum((y_slots * ok).reshape(t, mo.top_k, -1)
+                * w.reshape(t, mo.top_k, 1).astype(x2.dtype), axis=1)
+    return y, aux
+
+
+def _moe_decode_dense(params, cfg: ArchConfig, x):
+    """All local experts on all tokens; routing weights mask the combine."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    ids, w, aux = _route(params["router"], x2, mo.top_k)
+    e = mo.num_experts
+    cw = jnp.zeros((b * s, e), x.dtype)
+    cw = cw.at[jnp.arange(b * s)[:, None], ids].set(w.astype(x.dtype))
+    xb = jnp.broadcast_to(x2[None], (e, b * s, d))
+    yb = _expert_ffn(params["w1"].astype(x.dtype), params["w3"].astype(x.dtype),
+                     params["w2"].astype(x.dtype), xb)       # (E, T, d)
+    y = jnp.einsum("etd,te->td", yb, cw)
+    return y.reshape(b, s, d), aux
+
+
+def _axis_size(mesh, ax) -> int:
+    sizes = dict(mesh.shape)
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else ax
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def apply_moe(params, cfg: ArchConfig, x, *, decode: bool = False
+              ) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d) -> (y, aux).  Chooses EP / TP / decode-dense path."""
+    mo = cfg.moe
+    mesh = jax.sharding.get_abstract_mesh()
+    has_mesh = mesh is not None and not mesh.empty and "model" in mesh.axis_names
+    n_model = _axis_size(mesh, "model") if has_mesh else 1
+    aux: Dict[str, jax.Array] = {}
+    if decode or x.shape[1] == 1:
+        y, a = _moe_decode_dense(params, cfg, x)
+    elif (has_mesh and mo.num_experts % n_model == 0 and n_model > 1
+          and x.shape[1] % n_model == 0):
+        y, a = _moe_ep_shardmap(params, cfg, x, mesh)
+    else:
+        # TP experts: dispatch per batch row (vmap) so capacity buffers
+        # carry the batch dim and shard over "data"
+        b, s, d = x.shape
+        cap = max(4, int(s * mo.top_k * mo.capacity_factor / mo.num_experts))
+        y, a = jax.vmap(lambda xr: _moe_local(params, cfg, xr, cap))(x)
+        a = jnp.mean(a)
+    aux["router"] = a * mo.router_aux_weight
+    if mo.num_shared_experts:
+        h = jax.nn.silu(x @ params["sw1"].astype(x.dtype))
+        h = h * (x @ params["sw3"].astype(x.dtype))
+        y = y + h @ params["sw2"].astype(x.dtype)
+    return y, aux

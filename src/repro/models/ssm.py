@@ -1,0 +1,312 @@
+"""Attention-free sequence mixers: Mamba (Jamba's layers) and RWKV6 (Finch).
+
+Both are linear-state recurrences executed with ``jax.lax.scan`` over the
+sequence (streaming state — no l^2 anything), with a single-step ``decode``
+variant for serving.  DSA is inapplicable here (no score matrix) —
+DESIGN.md §Arch-applicability; the perf-critical wkv6 inner loop also has a
+chunked Pallas kernel (repro.kernels.wkv6).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.attention import _scan as _probe_scan
+from repro.models.common import dense_init, group_norm_heads
+
+# ---------------------------------------------------------------------------
+# Mamba (selective state space; Jamba interleaves 7 of these per attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ArchConfig, dtype=jnp.float32):
+    mc = cfg.mamba
+    d = cfg.d_model
+    mi = d * mc.expand
+    dt_rank = max(1, mi // 16)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": dense_init(ks[0], (d, 2 * mi), dtype=dtype),
+        "conv_w": dense_init(ks[1], (mc.d_conv, mi), dtype=dtype),
+        "conv_b": jnp.zeros((mi,), dtype),
+        "x_proj": dense_init(ks[2], (mi, dt_rank + 2 * mc.d_state),
+                             dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, mi), dtype=dtype),
+        "dt_bias": jnp.full((mi,), -4.6, dtype),   # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (mi, mc.d_state)
+        )).astype(dtype),
+        "d_skip": jnp.ones((mi,), dtype),
+        "out_proj": dense_init(ks[4], (mi, d), dtype=dtype),
+    }
+    specs = {
+        "in_proj": ("embed", "mlp"), "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",), "x_proj": ("mlp", None), "dt_proj": (None, "mlp"),
+        "dt_bias": ("mlp",), "a_log": ("mlp", "state"), "d_skip": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def _mamba_scan(params, cfg: ArchConfig, xc, z, h0=None):
+    """xc: (B, S, mi) post-conv activations; returns (y, h_last)."""
+    mc = cfg.mamba
+    b, s, mi = xc.shape
+    dt_rank = max(1, mi // 16)
+    proj = xc @ params["x_proj"].astype(xc.dtype)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ params["dt_proj"].astype(xc.dtype)
+                         + params["dt_bias"].astype(xc.dtype))
+    bmat = proj[..., dt_rank:dt_rank + mc.d_state]
+    cmat = proj[..., dt_rank + mc.d_state:]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # (mi, N)
+    h = jnp.zeros((b, mi, mc.d_state), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                                   # (B,mi),(B,mi),(B,N),(B,N)
+        da = jnp.exp(dtt[..., None].astype(jnp.float32) * a[None])
+        h = h * da + (dtt * xt)[..., None].astype(jnp.float32) * bt[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bmn,bn->bm", h, ct.astype(jnp.float32))
+        return h, y.astype(xt.dtype)
+
+    xs = (xc.swapaxes(0, 1), dt.swapaxes(0, 1), bmat.swapaxes(0, 1),
+          cmat.swapaxes(0, 1))
+    chunk = 128
+    if s % chunk == 0 and s > chunk:
+        # chunk the sequential scan and checkpoint each chunk: training
+        # saves O(S/chunk) states instead of O(S) per-step residuals
+        n = s // chunk
+
+        def chunk_fn(h, inp):
+            return jax.lax.scan(step, h, inp)
+
+        chunk_fn = jax.checkpoint(chunk_fn)
+        xs_c = jax.tree.map(
+            lambda t: t.reshape(n, chunk, *t.shape[1:]), xs)
+        h, ys = _probe_scan(chunk_fn, h, xs_c)
+        ys = ys.reshape(s, b, mi)
+    else:
+        h, ys = jax.lax.scan(step, h, xs)
+    y = ys.swapaxes(0, 1) + xc * params["d_skip"].astype(xc.dtype)
+    return y * jax.nn.silu(z), h
+
+
+def apply_mamba(params, cfg: ArchConfig, x, *, cache: Optional[Dict] = None,
+                decode: bool = False):
+    """x: (B,S,d) -> (y, new_cache).  cache: {"h": (B,mi,N), "conv": (B,dc-1,mi)}."""
+    mc = cfg.mamba
+    b, s, d = x.shape
+    mi = d * mc.expand
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xr, z = xz[..., :mi], xz[..., mi:]
+    dc = mc.d_conv
+    if decode:
+        hist = jnp.concatenate([cache["conv"], xr], axis=1)    # (B,dc,mi)
+        xc = jnp.einsum("btm,tm->bm", hist, params["conv_w"].astype(x.dtype))
+        xc = jax.nn.silu(xc + params["conv_b"].astype(x.dtype))[:, None]
+        y, h = _mamba_scan(params, cfg, xc, z, h0=cache["h"])
+        new = dict(cache, h=h, conv=hist[:, 1:])
+        return (y @ params["out_proj"].astype(x.dtype)), new
+    pad = jnp.zeros((b, dc - 1, mi), xr.dtype)
+    hist = jnp.concatenate([pad, xr], axis=1)
+    xc = sum(hist[:, i:i + s] * params["conv_w"].astype(x.dtype)[i]
+             for i in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(x.dtype))
+    y, h = _mamba_scan(params, cfg, xc, z)
+    new = None
+    if cache is not None:
+        new = dict(cache, h=h, conv=hist[:, s:s + dc - 1] if s >= dc - 1
+                   else hist[:, -(dc - 1):])
+    return (y @ params["out_proj"].astype(x.dtype)), new
+
+
+def init_cache_mamba(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    mi = cfg.d_model * cfg.mamba.expand
+    return {"h": jnp.zeros((batch, mi, cfg.mamba.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, mi), dtype)}
+
+
+def cache_specs_mamba(cache) -> Dict:
+    return {"h": ("batch", "mlp", "state"), "conv": ("batch", None, "mlp")}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    rc = cfg.rwkv
+    h = d // rc.head_dim
+    ks = jax.random.split(key, 10)
+    params = {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "w_lora_a": dense_init(ks[1], (d, rc.decay_lora), dtype=dtype),
+        "w_lora_b": dense_init(ks[2], (rc.decay_lora, d), scale=0.1,
+                               dtype=dtype),
+        "w0": jnp.full((d,), -6.0, dtype),
+        "u": (jax.random.normal(ks[3], (h, rc.head_dim)) * 0.1).astype(dtype),
+        "wr": dense_init(ks[4], (d, d), dtype=dtype),
+        "wk": dense_init(ks[5], (d, d), dtype=dtype),
+        "wv": dense_init(ks[6], (d, d), dtype=dtype),
+        "wg": dense_init(ks[7], (d, d), dtype=dtype),
+        "wo": dense_init(ks[8], (d, d), dtype=dtype),
+        "ln_x": jnp.ones((d,), dtype),
+    }
+    specs = {
+        "mu": (None, "embed_act"), "w_lora_a": ("embed", "lora"),
+        "w_lora_b": ("lora", "embed_act"), "w0": ("embed_act",),
+        "u": ("heads", "qkv"), "wr": ("embed", "heads"),
+        "wk": ("embed", "heads"), "wv": ("embed", "heads"),
+        "wg": ("embed", "heads"), "wo": ("heads", "embed"),
+        "ln_x": ("embed_act",),
+    }
+    return params, specs
+
+
+def _wkv_scan(r, k, v, w, u, s0=None):
+    """Sequential reference: r,k,v,w: (B,S,H,hd); u: (H,hd) bonus.
+    state S: (B,H,hd_k,hd_v).  Returns (y (B,S,H,hd), s_last)."""
+    b, s, h, hd = r.shape
+    st = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp                                 # (B,H,hd)
+        kv = kt[..., :, None].astype(jnp.float32) * vt[..., None, :].astype(jnp.float32)
+        y = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                       st + u[None, :, :, None].astype(jnp.float32) * kv)
+        st = wt[..., :, None].astype(jnp.float32) * st + kv
+        return st, y.astype(rt.dtype)
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))
+    st, ys = jax.lax.scan(step, st, xs)
+    return ys.swapaxes(0, 1), st
+
+
+WKV_CHUNK = 32
+CLAMP = -30.0
+
+
+def _wkv_chunked(r, k, v, w, u, s0=None, chunk: int = WKV_CHUNK):
+    """Chunk-parallel wkv6 (same math as kernels/wkv6.py) with remat per
+    chunk: turns 4096 rank-1 updates into S/chunk checkpointed matmul
+    steps.  Training memory: O(S/chunk) states instead of O(S) residuals;
+    MXU-shaped compute (3 (C x hd) matmuls per chunk per head)."""
+    b, s, h, hd = r.shape
+    st0 = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+    n = s // chunk
+    uu = u.astype(jnp.float32)
+
+    def chunk_fn(st, inp):
+        rc, kc, vc, wc = [t.astype(jnp.float32) for t in inp]  # (B,H,C,hd)
+        logw = jnp.log(jnp.maximum(wc, 1e-38))
+        cum = jnp.cumsum(logw, axis=2)
+        cum_c = jnp.clip(cum, CLAMP, 0.0)
+        rr = rc * jnp.exp(cum_c - logw)
+        kk = kc * jnp.exp(-cum_c)
+        y = jnp.einsum("bhck,bhkv->bhcv", rr, st)
+        sc = jnp.einsum("bhck,bhdk->bhcd", rr, kk)          # (B,H,C,C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        sc = jnp.where(tri, sc, 0.0)
+        y = y + jnp.einsum("bhcd,bhdv->bhcv", sc, vc)
+        diag = jnp.sum(rc * uu[None, :, None, :] * kc, axis=-1)
+        y = y + diag[..., None] * vc
+        cum_last = cum[:, :, -1:, :]
+        k_hat = kc * jnp.exp(jnp.clip(cum_last - cum, CLAMP, 0.0))
+        st = (jnp.exp(jnp.clip(cum_last[:, :, 0], CLAMP, 0.0))[..., :, None]
+              * st + jnp.einsum("bhck,bhcv->bhkv", k_hat, vc))
+        return st, y
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    # (B,S,H,hd) -> (n, B, H, C, hd)
+    def to_chunks(t):
+        return (t.reshape(b, n, chunk, h, hd)
+                .transpose(1, 0, 3, 2, 4))
+    xs = tuple(to_chunks(t) for t in (r, k, v, w))
+    st, ys = _probe_scan(chunk_fn, st0, xs)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+    return y.astype(r.dtype), st
+
+
+def _rwkv_mix(params, x, x_prev):
+    """Token shift: lerp current/previous token per channel per role."""
+    mu = params["mu"].astype(x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    outs = [x + mu[i] * (shifted - x) for i in range(5)]
+    return outs  # xr, xk, xv, xw, xg
+
+
+def apply_rwkv(params, cfg: ArchConfig, x, *, cache: Optional[Dict] = None,
+               decode: bool = False):
+    """Time-mix block.  cache: {"s": (B,H,hd,hd), "x_prev": (B,d)}."""
+    rc = cfg.rwkv
+    b, s, d = x.shape
+    h, hd = d // rc.head_dim, rc.head_dim
+    x_prev = (cache["x_prev"] if cache is not None
+              else jnp.zeros((b, d), x.dtype))
+    xr, xk, xv, xw, xg = _rwkv_mix(params, x, x_prev)
+    r = (xr @ params["wr"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (xk @ params["wk"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = (xv @ params["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    g = xg @ params["wg"].astype(x.dtype)
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x A) B))
+    wdec = params["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ params["w_lora_a"].astype(x.dtype)).astype(jnp.float32)
+        @ params["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wdec)).reshape(b, s, h, hd)
+    s0 = cache["s"] if cache is not None else None
+    if s % WKV_CHUNK == 0 and s > WKV_CHUNK:
+        y, st = _wkv_chunked(r, k, v, w.astype(x.dtype), params["u"], s0)
+    else:
+        y, st = _wkv_scan(r, k, v, w.astype(x.dtype), params["u"], s0)
+    y = group_norm_heads(y.reshape(b, s, d), params["ln_x"].astype(x.dtype), h)
+    y = y * jax.nn.silu(g)
+    out = y @ params["wo"].astype(x.dtype)
+    new = None
+    if cache is not None:
+        new = dict(cache, s=st, x_prev=x[:, -1])
+    return out, new
+
+
+def init_cache_rwkv(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    h, hd = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    return {"s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((batch, d), dtype),
+            "ffn_prev": jnp.zeros((batch, d), dtype)}
+
+
+def cache_specs_rwkv(cache) -> Dict:
+    return {"s": ("batch", "heads", "qkv", None),
+            "x_prev": ("batch", "embed_act"),
+            "ffn_prev": ("batch", "embed_act")}
+
+
+def init_rwkv_ffn(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params = {
+        "mu": (jax.random.uniform(ks[0], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "wk": dense_init(ks[1], (d, f), dtype=dtype),
+        "wv": dense_init(ks[2], (f, d), dtype=dtype),
+        "wr": dense_init(jax.random.fold_in(ks[2], 1), (d, d), dtype=dtype),
+    }
+    specs = {"mu": (None, "embed_act"), "wk": ("embed", "mlp"),
+             "wv": ("mlp", "embed"), "wr": ("embed", "embed_act")}
+    return params, specs
+
+
+def apply_rwkv_ffn(params, cfg: ArchConfig, x, x_prev=None):
+    """RWKV channel-mix FFN (squared relu), with token shift."""
+    b, s, d = x.shape
+    xp = x_prev if x_prev is not None else jnp.zeros((b, d), x.dtype)
+    mu = params["mu"].astype(x.dtype)
+    shifted = jnp.concatenate([xp[:, None], x[:, :-1]], axis=1)
+    xk = x + mu[0] * (shifted - x)
+    xr = x + mu[1] * (shifted - x)
+    k = jnp.square(jax.nn.relu(xk @ params["wk"].astype(x.dtype)))
+    return jax.nn.sigmoid(xr @ params["wr"].astype(x.dtype)) * (
+        k @ params["wv"].astype(x.dtype))

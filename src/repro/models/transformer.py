@@ -1,0 +1,228 @@
+"""Top-level model: embedding -> scanned layer groups -> head.
+
+Public API:
+  init_model(key, cfg)                  -> (params, logical_specs)
+  forward(params, cfg, flags, batch)    -> (logits, aux)        train/prefill
+  decode_step(params, cfg, flags, tok, cache) -> (logits, cache)
+  init_cache(cfg, batch, max_len, flags)-> cache (+ cache_logical_specs)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import map_specs, shard
+from repro.models import blocks as B
+from repro.models.attention import RunFlags
+from repro.models.common import dense_init, rms_norm, sinusoidal_embedding
+
+AUX_KEYS = ("mse", "router")
+
+
+def _norm_aux(aux: Dict) -> Dict[str, jax.Array]:
+    return {k: jnp.asarray(aux.get(k, 0.0), jnp.float32) for k in AUX_KEYS}
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_model(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    ng = B.n_groups(cfg)
+    gkeys = jax.random.split(ks[0], ng)
+    gp = jax.vmap(lambda k: B.init_group(k, cfg, dtype=dt)[0])(gkeys)
+    _, gspec = B.init_group(ks[0], cfg, dtype=dt)
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[1], (cfg.vocab, cfg.d_model), dtype=dt),
+        "groups": gp,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "groups": map_specs(lambda s: ("layers",) + tuple(s), gspec),
+        "final_norm": ("embed_act",),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab),
+                                       dtype=dt)
+        specs["lm_head"] = ("embed", "vocab")
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        pro, pro_s = [], []
+        dense_cfg = cfg
+        for i in range(cfg.moe.first_k_dense):
+            d = B.SubBlockDef("mla" if cfg.mla is not None else "attn",
+                              moe=False)
+            p, s = B.init_subblock(jax.random.fold_in(ks[3], i), dense_cfg,
+                                   d, dt)
+            pro.append(p)
+            pro_s.append(s)
+        params["prologue"] = pro
+        specs["prologue"] = pro_s
+    if cfg.enc_dec:
+        ekeys = jax.random.split(ks[4], cfg.n_enc_layers)
+        params["enc_groups"] = jax.vmap(
+            lambda k: B.init_group(k, cfg, decoder=False, dtype=dt)[0])(ekeys)
+        _, egspec = B.init_group(ks[4], cfg, decoder=False, dtype=dt)
+        specs["enc_groups"] = map_specs(lambda s: ("layers",) + tuple(s),
+                                        egspec)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+        specs["enc_norm"] = ("embed_act",)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+
+
+def _scan_groups(gparams, cfg: ArchConfig, flags: RunFlags, defs, x,
+                 caches=None, enc=None, pos_offset=0, decoder=True):
+    """lax.scan over stacked groups; python loop fallback for tiny models."""
+    def body(carry, xs):
+        xc, aux_c = carry
+        p = xs if caches is None else xs[0]
+        c = None if caches is None else xs[1]
+        xc, newc, aux = B.apply_group(p, cfg, flags, defs, xc, cache=c,
+                                      enc=enc, pos_offset=pos_offset)
+        aux = _norm_aux(aux)
+        carry = (xc, {k: aux_c[k] + aux[k] for k in AUX_KEYS})
+        return carry, (newc if caches is not None else 0)
+
+    if cfg.remat and cfg.remat_policy != "none":
+        pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+               if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=pol)
+    aux0 = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    xs = gparams if caches is None else (gparams, caches)
+    if cfg.use_scan:
+        (x, aux), ys = jax.lax.scan(body, (x, aux0), xs)
+    else:
+        n = len(jax.tree.leaves(gparams)) and jax.tree.leaves(gparams)[0].shape[0]
+        ys_list = []
+        carry = (x, aux0)
+        for i in range(n):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body(carry, sl)
+            ys_list.append(y)
+        x, aux = carry
+        ys = (jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+              if caches is not None else None)
+    return x, aux, (ys if caches is not None else None)
+
+
+def _encode(params, cfg: ArchConfig, flags: RunFlags, enc_x):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    pos = sinusoidal_embedding(enc_x.shape[1], cfg.d_model, enc_x.dtype)
+    x = enc_x + pos[None]
+    defs = B.group_defs(cfg, decoder=False)
+    eflags = RunFlags(mode="train", dsa_mode=flags.dsa_mode,
+                      with_mse=flags.with_mse)
+    x, aux, _ = _scan_groups(params["enc_groups"], cfg, eflags, defs, x,
+                             decoder=False)
+    return rms_norm(x, params["enc_norm"].astype(x.dtype), cfg.norm_eps), aux
+
+
+def forward(params, cfg: ArchConfig, flags: RunFlags,
+            batch: Dict[str, jax.Array], caches=None):
+    """batch: {"tokens": (B,S) int32, ["enc_x"|"img"]: (B,T,d)}.
+    Returns (logits, aux, new_caches)."""
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = shard(x, "batch", "seq_sp", "embed_act")
+    enc = None
+    aux_enc = None
+    if cfg.enc_dec and "enc_x" in batch:
+        enc, aux_enc = _encode(params, cfg, flags, batch["enc_x"].astype(dt))
+    elif cfg.cross_attn_period and "img" in batch:
+        enc = batch["img"].astype(dt)
+    if cfg.enc_dec:
+        x = x + sinusoidal_embedding(x.shape[1], cfg.d_model, dt)[None]
+    new_pro_caches = None
+    aux_pro = {}
+    if "prologue" in params:
+        d = B.SubBlockDef("mla" if cfg.mla is not None else "attn", moe=False)
+        new_pro_caches = [] if caches is not None else None
+        for i, p in enumerate(params["prologue"]):
+            c = None if caches is None else caches["prologue"][i]
+            x, nc, a = B.apply_subblock(p, cfg, flags, d, x, cache=c, enc=enc)
+            for k, v in a.items():
+                aux_pro[k] = aux_pro.get(k, 0.0) + v
+            if new_pro_caches is not None:
+                new_pro_caches.append(nc)
+    defs = B.group_defs(cfg)
+    gc = None if caches is None else caches["groups"]
+    x, aux, new_gc = _scan_groups(params["groups"], cfg, flags, defs, x,
+                                  caches=gc, enc=enc)
+    for extra in (aux_pro, aux_enc or {}):
+        for k in AUX_KEYS:
+            if k in extra:
+                aux[k] = aux[k] + extra[k]
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    logits = shard(logits, "batch", None, "vocab")
+    new_caches = None
+    if caches is not None:
+        new_caches = dict(caches, groups=new_gc)
+        if new_pro_caches is not None:
+            new_caches["prologue"] = new_pro_caches
+    return logits, aux, new_caches
+
+
+def decode_step(params, cfg: ArchConfig, flags: RunFlags, tokens, caches,
+                enc: Optional[jax.Array] = None):
+    """tokens: (B, 1).  Returns (logits (B,1,V), new_caches)."""
+    assert flags.mode == "decode"
+    logits, _, new_caches = forward(params, cfg, flags,
+                                    {"tokens": tokens}, caches=caches)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, flags: RunFlags,
+               dtype=jnp.bfloat16):
+    defs = B.group_defs(cfg)
+    ng = B.n_groups(cfg)
+    enc_len = cfg.enc_seq_len if cfg.enc_dec else (
+        cfg.n_image_tokens if cfg.cross_attn_period else 0)
+    one = {f"b{i}": B.init_subblock_cache(cfg, d, batch, max_len, flags,
+                                          dtype, enc_len=enc_len)
+           for i, d in enumerate(defs)}
+    groups = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (ng,) + a.shape), one)
+    caches: Dict[str, Any] = {"groups": groups}
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        d = B.SubBlockDef("mla" if cfg.mla is not None else "attn", moe=False)
+        caches["prologue"] = [
+            B.init_subblock_cache(cfg, d, batch, max_len, flags, dtype,
+                                  enc_len=enc_len)
+            for _ in range(cfg.moe.first_k_dense)]
+    return caches
+
+
+def cache_specs(cfg: ArchConfig, caches, flags: RunFlags):
+    defs = B.group_defs(cfg)
+
+    def strip(a):
+        return jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+
+    one = {f"b{i}": B.subblock_cache_specs(
+        cfg, d, jax.tree.map(strip, caches["groups"][f"b{i}"]))
+        for i, d in enumerate(defs)}
+    specs: Dict[str, Any] = {
+        "groups": map_specs(lambda s: ("layers",) + tuple(s), one)}
+    if "prologue" in caches:
+        d = B.SubBlockDef("mla" if cfg.mla is not None else "attn", moe=False)
+        specs["prologue"] = [B.subblock_cache_specs(cfg, d, c)
+                             for c in caches["prologue"]]
+    return specs

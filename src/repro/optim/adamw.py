@@ -1,0 +1,141 @@
+"""Sharded AdamW with configurable state dtypes (ZeRO-friendly).
+
+Moments inherit each parameter's sharding (the optimizer tree reuses the
+model's logical specs), so with FSDP rules the whole optimizer state is
+ZeRO-3 sharded for free.  ``moment_dtype``/``master_dtype`` trade precision
+for HBM on the 100B+ archs (EXPERIMENTS.md records the memory deltas).
+
+Weight decay skips: vectors/scalars (norms, biases) and the DSA projection
+``P`` (constant by construction — gradients are stopped, decay would erode
+it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"      # bf16 for the >100B archs
+    master_dtype: str = ""             # "" = update params in their own dtype
+
+
+def _is_frozen(path: str) -> bool:
+    return path.endswith("/dsa/p")
+
+
+def _decay_ok(path: str, leaf) -> bool:
+    return leaf.ndim >= 2 and not _is_frozen(path)
+
+
+def _paths(tree) -> Any:
+    """Tree of 'a/b/c' path strings parallel to the params tree."""
+    def go(prefix, t):
+        if isinstance(t, dict):
+            return {k: go(f"{prefix}/{k}", v) for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            typ = type(t)
+            return typ(go(f"{prefix}/{i}", v) for i, v in enumerate(t))
+        return prefix
+    return go("", tree)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: OptConfig, params) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_dtype:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.master_dtype)), params)
+    return state
+
+
+def state_specs(cfg: OptConfig, param_specs) -> Dict[str, Any]:
+    """Logical specs for the optimizer state tree."""
+    out = {"m": param_specs, "v": param_specs, "step": ()}
+    if cfg.master_dtype:
+        out["master"] = param_specs
+    return out
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    paths = _paths(params)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    masters = state.get("master", params)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_master = treedef.flatten_up_to(masters)
+    flat_paths = treedef.flatten_up_to(paths)
+    mdt = jnp.dtype(cfg.moment_dtype)
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for path, p, g, m, v, ms in zip(flat_paths, flat_p, flat_g, flat_m,
+                                    flat_v, flat_master):
+        if _is_frozen(path):
+            new_p.append(p)
+            new_m.append(m)
+            new_v.append(v)
+            new_master.append(ms)
+            continue
+        nm_f32 = (b1 * m.astype(jnp.float32)
+                  + (1 - b1) * g.astype(jnp.float32) * scale)
+        nv_f32 = (b2 * v.astype(jnp.float32)
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32) * scale))
+        mh = nm_f32 / bc1
+        vh = nv_f32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if _decay_ok(path, p):
+            delta = delta + cfg.weight_decay * ms.astype(jnp.float32)
+        nms = ms.astype(jnp.float32) - lr * delta
+        new_master.append(nms.astype(ms.dtype))
+        new_p.append(nms.astype(p.dtype))
+        new_m.append(nm_f32.astype(mdt))
+        new_v.append(nv_f32.astype(mdt))
+    params2 = jax.tree.unflatten(treedef, new_p)
+    state2 = {"m": jax.tree.unflatten(treedef, new_m),
+              "v": jax.tree.unflatten(treedef, new_v),
+              "step": step}
+    if "master" in state:
+        state2["master"] = jax.tree.unflatten(treedef, new_master)
+    return params2, state2, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,127 @@
+"""Train / prefill / decode step builders (jit-able, mesh-aware).
+
+The train step implements the paper's joint objective (Eq. 7):
+    L = L_model + λ L_MSE (+ router aux for MoE)
+with microbatched gradient accumulation (memory control for train_4k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.attention import RunFlags
+from repro.models.transformer import decode_step, forward, init_model
+from repro.optim import adamw
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over valid tokens; numerically stable; vocab may be sharded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(1.0, jnp.sum(mask))
+
+
+def loss_fn(params, cfg: ArchConfig, flags: RunFlags,
+            batch: Dict[str, jax.Array]):
+    logits, aux, _ = forward(params, cfg, flags, batch)
+    ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    loss = ce + cfg.dsa.lambda_mse * aux["mse"] + aux["router"]
+    metrics = {"loss": loss, "ce": ce, "mse": aux["mse"],
+               "router_aux": aux["router"]}
+    return loss, metrics
+
+
+def make_train_step(cfg: ArchConfig, opt: adamw.OptConfig,
+                    flags: Optional[RunFlags] = None,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state: {"params": ..., "opt": ..., "step": scalar}
+    batch: {"tokens": (GB,S), "labels": (GB,S), [extras]}
+    """
+    flags = flags or RunFlags(mode="train",
+                              dsa_mode="block" if cfg.dsa.enabled else "off")
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, flags, mb)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def split(x):
+                gb = x.shape[0]
+                return x.reshape(microbatches, gb // microbatches,
+                                 *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), 0
+
+            mb0 = jax.tree.map(lambda x: x[0], mbs)
+            g0, m0 = grads_of(params, mb0)
+            rest = jax.tree.map(lambda x: x[1:], mbs)
+            (g_sum, m_sum), _ = jax.lax.scan(acc, (g0, m0), rest)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            metrics = jax.tree.map(lambda m: m / microbatches, m_sum)
+        else:
+            grads, metrics = grads_of(params, batch)
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            opt, params, grads, state["opt"])
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, flags: Optional[RunFlags] = None):
+    flags = flags or RunFlags(mode="train", with_mse=False,
+                              dsa_mode="block" if cfg.dsa.enabled else "off")
+
+    def eval_step(params, batch):
+        logits, aux, _ = forward(params, cfg, flags, batch)
+        ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        acc = jnp.mean((jnp.argmax(logits[:, -1], -1) == batch["labels"][:, -1]
+                        ).astype(jnp.float32))
+        return {"ce": ce, "last_tok_acc": acc}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, flags: RunFlags):
+    def prefill(params, batch, caches):
+        logits, _, caches = forward(params, cfg, flags, batch, caches=caches)
+        return logits[:, -1:], caches
+    return prefill
+
+
+def make_decode_fn(cfg: ArchConfig, flags: RunFlags):
+    def step(params, tokens, caches):
+        return decode_step(params, cfg, flags, tokens, caches)
+    return step
+
+
+def init_train_state(key, cfg: ArchConfig, opt: adamw.OptConfig):
+    params, specs = init_model(key, cfg)
+    return ({"params": params, "opt": adamw.init(opt, params),
+             "step": jnp.zeros((), jnp.int32)},
+            {"params": specs, "opt": adamw.state_specs(opt, specs),
+             "step": ()})

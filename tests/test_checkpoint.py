@@ -1,0 +1,51 @@
+"""Checkpoint: roundtrip, digest verification, async, gc, resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as C
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {"a": jax.random.normal(ks[0], (8, 4)),
+            "b": {"c": jax.random.normal(ks[1], (3,)),
+                  "d": [jnp.zeros((2, 2)), jnp.ones((1,), jnp.int32)]},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path, rng):
+    t = _tree(rng)
+    C.save(str(tmp_path / "ck"), t, step=7)
+    t2, step = C.restore(str(tmp_path / "ck"), t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_digest_detects_corruption(tmp_path, rng):
+    t = _tree(rng)
+    path = str(tmp_path / "ck")
+    C.save(path, t, step=1)
+    fn = [f for f in os.listdir(path) if f.startswith("a")][0]
+    arr = np.load(os.path.join(path, fn))
+    arr[0] += 1
+    np.save(os.path.join(path, fn), arr)
+    with pytest.raises(IOError):
+        C.restore(path, t)
+
+
+def test_async_and_gc(tmp_path, rng):
+    ck = C.AsyncCheckpointer(str(tmp_path), keep=2)
+    t = _tree(rng)
+    for s in (10, 20, 30):
+        ck.save(t, s)
+    ck.wait()
+    assert C.latest_step(str(tmp_path)) == 30
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("ckpt_"))
+    assert kept == ["ckpt_20", "ckpt_30"]
+    t2, s = ck.restore_latest(t)
+    assert s == 30

@@ -1,0 +1,114 @@
+"""Inference: prefill/decode parity with teacher-forced forward, SWA ring
+buffer, DSA long-context decode sanity, engine throughput path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.inference.engine import Engine
+from repro.models.attention import RunFlags
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_model)
+
+
+@pytest.mark.parametrize("arch", ["stablelm_3b", "rwkv6_3b",
+                                  "jamba_1_5_large"])
+def test_decode_matches_forward(arch, rng):
+    """Greedy decode logits == teacher-forced logits at the same positions."""
+    cfg = reduced(get_config(arch))
+    params, _ = init_model(rng, cfg)
+    s0, n = 16, 4
+    toks = jax.random.randint(rng, (2, s0 + n), 0, cfg.vocab)
+    tf_flags = RunFlags(mode="train", dsa_mode="off", with_mse=False)
+    full_logits, _, _ = forward(params, cfg, tf_flags,
+                                {"tokens": toks})
+    pf = RunFlags(mode="prefill", dsa_mode="off", with_mse=False)
+    df = RunFlags(mode="decode", dsa_mode="off", with_mse=False)
+    cache = init_cache(cfg, 2, s0 + n + 4, df, dtype=jnp.float32)
+    _, _, cache = forward(params, cfg, pf, {"tokens": toks[:, :s0]},
+                          caches=cache)
+    for i in range(n):
+        logits, cache = decode_step(params, cfg, df, toks[:, s0 + i:s0 + i + 1],
+                                    cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, s0 + i]),
+            atol=2e-3, rtol=2e-3)
+
+
+def test_swa_ring_buffer(rng):
+    """With a window cache smaller than the sequence, decode still matches
+    teacher forcing (ring buffer correctness)."""
+    cfg = reduced(get_config("h2o_danube_1_8b"))   # swa_window=64 reduced
+    params, _ = init_model(rng, cfg)
+    win = cfg.swa_window
+    s0, n = win + 16, 3
+    toks = jax.random.randint(rng, (1, s0 + n), 0, cfg.vocab)
+    tf = RunFlags(mode="train", dsa_mode="off", with_mse=False)
+    full_logits, _, _ = forward(params, cfg, tf, {"tokens": toks})
+    pf = RunFlags(mode="prefill", dsa_mode="off", with_mse=False)
+    df = RunFlags(mode="decode", dsa_mode="off", with_mse=False)
+    cache = init_cache(cfg, 1, s0 + n, df, dtype=jnp.float32)
+    assert cache["groups"]["b0"]["attn"]["k"].shape[2] == win
+    _, _, cache = forward(params, cfg, pf, {"tokens": toks[:, :s0]},
+                          caches=cache)
+    # seed ring pos after prefill of s0 > win tokens
+    for i in range(n):
+        logits, cache = decode_step(params, cfg, df,
+                                    toks[:, s0 + i:s0 + i + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, s0 + i]),
+            atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("sparsity,expect", [(0.55, "exact"),
+                                             (0.90, "corr")])
+def test_dsa_long_context_decode_vs_full(rng, sparsity, expect):
+    """DSA decode (top-k gathered cache).  When keep+local covers the whole
+    cache the result must EQUAL full decode (mechanism correctness); at 90%
+    sparsity with an UNTRAINED predictor we only require correlation —
+    accuracy at high sparsity comes from joint training (paper §3.2,
+    exercised in test_system/test_train_semantics)."""
+    import dataclasses
+    cfg = reduced(get_config("yi_6b"))
+    cfg = dataclasses.replace(cfg, dsa=dataclasses.replace(
+        cfg.dsa, sparsity=sparsity))
+    params, _ = init_model(rng, cfg)
+    s0 = 96
+    toks = jax.random.randint(rng, (2, s0 + 1), 0, cfg.vocab)
+    pf_full = RunFlags(mode="prefill", dsa_mode="off", with_mse=False)
+    df_full = RunFlags(mode="decode", dsa_mode="off", with_mse=False)
+    cache = init_cache(cfg, 2, s0 + 8, df_full, dtype=jnp.float32)
+    _, _, cache = forward(params, cfg, pf_full, {"tokens": toks[:, :s0]},
+                          caches=cache)
+    lg_full, _ = decode_step(params, cfg, df_full, toks[:, s0:], cache)
+
+    # dense prefill (identical cache contents), DSA top-k decode — isolates
+    # the decode mechanism; the kt prediction cache fills either way
+    pf = RunFlags(mode="prefill", dsa_mode="off", with_mse=False,
+                  long_context=True)
+    df = RunFlags(mode="decode", dsa_mode="block", with_mse=False,
+                  long_context=True)
+    cache2 = init_cache(cfg, 2, s0 + 8, df, dtype=jnp.float32)
+    assert "kt" in cache2["groups"]["b0"]["attn"]
+    _, _, cache2 = forward(params, cfg, pf, {"tokens": toks[:, :s0]},
+                           caches=cache2)
+    lg_dsa, _ = decode_step(params, cfg, df, toks[:, s0:], cache2)
+    a = np.asarray(lg_full[:, 0], np.float64)
+    b = np.asarray(lg_dsa[:, 0], np.float64)
+    if expect == "exact":
+        np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)
+    else:
+        corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
+        assert corr > 0.5, corr
+
+
+def test_engine_generate(rng):
+    cfg = reduced(get_config("stablelm_3b"))
+    params, _ = init_model(rng, cfg)
+    eng = Engine(cfg, params, max_len=64)
+    prompts = np.ones((2, 16), np.int32)
+    res = eng.generate(prompts, 8)
+    assert res.tokens.shape == (2, 8)
+    res2 = eng.generate(prompts, 8)
+    np.testing.assert_array_equal(res.tokens, res2.tokens)  # deterministic

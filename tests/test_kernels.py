@@ -1,0 +1,100 @@
+"""Per-kernel allclose vs the ref.py jnp oracles, swept over shapes and
+dtypes (assignment requirement), in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masks as M
+from repro.kernels import ref
+from repro.kernels.ops import dsa_attention, wkv6
+
+
+def _mk_qkv(key, b, l, hq, hkv, hd, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, l, hq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, l, hkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, l, hkv, hd)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("l,bq,bk,nb", [(128, 16, 16, 3), (256, 32, 32, 4),
+                                        (256, 64, 32, 5), (512, 64, 64, 3)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+def test_dsa_attention_shapes(rng, l, bq, bk, nb, hq, hkv):
+    b, hd = 2, 32
+    q, k, v = _mk_qkv(rng, b, l, hq, hkv, hd, jnp.float32)
+    bs = jax.random.normal(jax.random.fold_in(rng, 1), (b, l // bq, l // bk))
+    idx, ok = M.block_topk_indices(bs, nb, causal=True, local_blocks=1)
+    out = dsa_attention(q, k, v, idx, ok, block_q=bq, block_k=bk, causal=True)
+    r = ref.dsa_block_sparse_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), idx, ok, block_q=bq, block_k=bk,
+        causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_dsa_attention_dtypes(rng, dtype, tol):
+    b, l, hq, hkv, hd, bq = 2, 256, 4, 2, 64, 32
+    q, k, v = _mk_qkv(rng, b, l, hq, hkv, hd, dtype)
+    bs = jax.random.normal(jax.random.fold_in(rng, 2), (b, l // bq, l // bq))
+    idx, ok = M.block_topk_indices(bs, 4, causal=True)
+    out = dsa_attention(q, k, v, idx, ok, block_q=bq, block_k=bq)
+    r = ref.dsa_block_sparse_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), idx, ok, block_q=bq,
+        block_k=bq).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_dsa_attention_window(rng):
+    b, l, h, hd, bq = 1, 256, 2, 32, 32
+    q, k, v = _mk_qkv(rng, b, l, h, h, hd, jnp.float32)
+    bs = jax.random.normal(jax.random.fold_in(rng, 3), (b, l // bq, l // bq))
+    idx, ok = M.block_topk_indices(bs, 5, causal=True,
+                                   window_blocks=2, local_blocks=1)
+    out = dsa_attention(q, k, v, idx, ok, block_q=bq, block_k=bq,
+                        causal=True, window=64)
+    r = ref.dsa_block_sparse_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), idx, ok, block_q=bq, block_k=bq,
+        causal=True, window=64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5)
+
+
+@pytest.mark.parametrize("s,chunk,hd", [(64, 16, 16), (128, 32, 64),
+                                        (256, 32, 32), (96, 32, 64)])
+def test_wkv6_shapes(rng, s, chunk, hd):
+    b, h = 2, 3
+    if s % chunk:
+        pytest.skip("not chunk-divisible")
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd)) * 0.3
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, hd)) * 0.5 - 2))
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    y = wkv6(r, k, v, w, u, chunk=chunk)
+    yr, _ = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_wkv6_strong_decay(rng):
+    """Numerics guard: decay products to ~1e-9 within a chunk stay finite."""
+    b, s, h, hd, chunk = 1, 64, 2, 32, 32
+    ks = jax.random.split(rng, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd)) * 0.3
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    w = jnp.full((b, s, h, hd), 0.52)       # 0.52^32 ~ 8e-10
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    y = wkv6(r, k, v, w, u, chunk=chunk)
+    yr, _ = ref.wkv6_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-3, rtol=1e-2)

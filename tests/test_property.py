@@ -1,0 +1,88 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks as M
+from repro.core.quantization import quantize
+from repro.distributed.sharding import ShardingRules, resolve_spec
+from repro.models.moe import _dispatch_positions
+from repro.training.steps import cross_entropy
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 8), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_quantize_idempotent(bits, rows, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, 16))
+    q1 = quantize(x, bits)
+    q2 = quantize(q1, bits)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               atol=1e-5, rtol=1e-5)
+
+
+@given(st.integers(1, 30), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_topk_mask_is_superset_invariant(keep, seed):
+    s = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, 32))
+    m_small = M.row_topk_mask(s, keep)
+    m_big = M.row_topk_mask(s, min(32, keep + 3))
+    assert bool(jnp.all(~m_small | m_big))   # monotone in k
+
+
+@given(st.integers(2, 64), st.integers(2, 16), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_dispatch_positions_bijective_per_expert(t, e, k, seed):
+    ids = jax.random.randint(jax.random.PRNGKey(seed), (t * k,), 0, e)
+    pos = np.asarray(_dispatch_positions(ids, e, cap=10 ** 9))
+    ids = np.asarray(ids)
+    for ei in range(e):
+        p = np.sort(pos[ids == ei])
+        np.testing.assert_array_equal(p, np.arange(len(p)))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_cross_entropy_bounds(seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (4, 8, 32)) * 3
+    labels = jax.random.randint(key, (4, 8), 0, 32)
+    ce = float(cross_entropy(logits, labels))
+    assert 0.0 <= ce < 30.0
+    # shifting logits by a constant changes nothing
+    ce2 = float(cross_entropy(logits + 7.5, labels))
+    assert abs(ce - ce2) < 1e-4
+
+
+@given(st.sampled_from([(16, 16), (8, 4), (4, 2)]),
+       st.sampled_from([(256, 512), (48, 128), (12, 100), (7, 13)]))
+@settings(**SET)
+def test_resolve_spec_divisibility(mesh_shape, dims):
+    mesh = jax.sharding.AbstractMesh(mesh_shape, ("data", "model"))
+    rules = ShardingRules()
+    spec = resolve_spec(dims, ("embed", "mlp"), rules, mesh)
+    sizes = dict(mesh.shape)
+    used = []
+    for dim, ax in zip(dims, spec):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in axes:
+            assert a not in used     # one use per mesh axis
+            used.append(a)
+            n *= sizes[a]
+        assert dim % n == 0          # divisibility always honored
+
+
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_block_indices_within_range(nb, seed):
+    s = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, 8))
+    idx, ok = M.block_topk_indices(s, nb, causal=True)
+    assert bool(jnp.all((idx >= 0) & (idx < 8)))
+    # every row keeps at least the local block
+    assert bool(jnp.all(jnp.any(ok, axis=-1)))

@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests for the DSA system (paper-level claims at
+toy scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DSAConfig, get_config, reduced
+from repro.core import masks as M
+from repro.data.synthetic import DataConfig, make_batches
+from repro.models.attention import RunFlags
+from repro.models.transformer import forward, init_model
+from repro.optim import adamw
+from repro.training import steps as ST
+import dataclasses
+
+
+def _train(cfg, data, steps, lr=3e-3, flags=None, seed=0):
+    opt = adamw.OptConfig(lr=lr, total_steps=steps,
+                          warmup_steps=max(1, steps // 10))
+    state, _ = ST.init_train_state(jax.random.PRNGKey(seed), cfg, opt)
+    step = jax.jit(ST.make_train_step(cfg, opt, flags))
+    m = None
+    for i in range(steps):
+        batch = next(data)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+    return state, m
+
+
+def _acc(cfg, state, data, flags, n=4):
+    ev = jax.jit(ST.make_eval_step(cfg, flags))
+    accs = []
+    for _ in range(n):
+        batch = next(data)
+        r = ev(state["params"], {k: jnp.asarray(v) for k, v in batch.items()})
+        accs.append(float(r["last_tok_acc"]))
+    return float(np.mean(accs))
+
+
+def test_needle_task_dsa_vs_dense():
+    """The paper's central claim at toy scale: DSA (90% sparsity) matches
+    dense attention on a long-range retrieval task."""
+    base = reduced(get_config("yi_6b"))
+    cfg = dataclasses.replace(base, n_layers=2, dsa=dataclasses.replace(
+        base.dsa, enabled=True, sparsity=0.75, block_q=16, block_k=16))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=32, seed=1)
+    steps = 150
+    dense_flags = RunFlags(mode="train", dsa_mode="off")
+    dsa_flags = RunFlags(mode="train", dsa_mode="block")
+    st_dense, _ = _train(cfg, make_batches("needle", dcfg), steps,
+                         flags=dense_flags)
+    st_dsa, _ = _train(cfg, make_batches("needle", dcfg), steps,
+                       flags=dsa_flags)
+    ev = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=32, seed=99)
+    acc_dense = _acc(cfg, st_dense, make_batches("needle", ev), dense_flags)
+    acc_dsa = _acc(cfg, st_dsa, make_batches("needle", ev), dsa_flags)
+    # at CPU-smoke scale (2 layers, d=64, 150 steps) the task is learned
+    # well above chance (1/8) but not saturated; the claim under test is
+    # DSA ~= dense at equal budget (paper Fig 3).  examples/train_lra_text
+    # runs the longer-budget version.
+    assert acc_dense > 0.25, acc_dense
+    assert acc_dsa > acc_dense - 0.15, (acc_dense, acc_dsa)
+
+
+def test_faithful_and_block_modes_agree_on_pattern(rng):
+    """Token top-k (paper-faithful) and block top-k (TPU mode) select
+    overlapping positions once the predictor is shared."""
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    toks = jax.random.randint(rng, (2, 128), 0, cfg.vocab)
+    f1 = RunFlags(mode="train", dsa_mode="faithful")
+    f2 = RunFlags(mode="train", dsa_mode="block")
+    l1, a1, _ = forward(params, cfg, f1, {"tokens": toks})
+    l2, a2, _ = forward(params, cfg, f2, {"tokens": toks})
+    assert np.isfinite(np.asarray(l1)).all()
+    assert np.isfinite(np.asarray(l2)).all()
+    # same predictor => the MSE terms are comparable in scale
+    assert 0.1 < float(a1["mse"]) / max(float(a2["mse"]), 1e-9) < 10.0
+
+
+def test_kernel_mode_matches_gather_mode(rng):
+    """dsa_mode='kernel' (Pallas, interpret on CPU) == dsa_mode='block'
+    (XLA gather) end to end through a full model forward."""
+    cfg = reduced(get_config("stablelm_3b"))
+    cfg = dataclasses.replace(cfg, dsa=dataclasses.replace(
+        cfg.dsa, enabled=True, block_q=16, block_k=16, sparsity=0.75))
+    params, _ = init_model(rng, cfg)
+    toks = jax.random.randint(rng, (2, 128), 0, cfg.vocab)
+    lg, _, _ = forward(params, cfg,
+                       RunFlags(mode="train", dsa_mode="block",
+                                with_mse=False), {"tokens": toks})
+    lk, _, _ = forward(params, cfg,
+                       RunFlags(mode="train", dsa_mode="kernel",
+                                with_mse=False), {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lk),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_oracle_sparsity_table1(rng):
+    """Paper Table 1: dropping ~90% of attention WEIGHTS (post-softmax,
+    by magnitude threshold) leaves the output nearly unchanged."""
+    from repro.core.attention import dense_attention
+    b, l, h, hd = 2, 128, 4, 32
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, l, h, hd)) * 2.0
+    k = jax.random.normal(ks[1], (b, l, h, hd)) * 2.0
+    v = jax.random.normal(ks[2], (b, l, h, hd))
+    out, w = dense_attention(q, k, v, causal=True, return_weights=True)
+    wm = jnp.mean(w, axis=1)                       # mean over heads
+    sparsity = float(M.attention_sparsity(w, 0.01))
+    mask = M.threshold_mask(wm, 0.01)
+    mask = mask | jnp.eye(l, dtype=bool)[None]
+    out2 = dense_attention(q, k, v, causal=True, token_mask=mask)
+    rel = float(jnp.linalg.norm(out - out2) / jnp.linalg.norm(out))
+    assert sparsity > 0.5
+    assert rel < 0.15, (sparsity, rel)

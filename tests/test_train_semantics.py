@@ -1,0 +1,81 @@
+"""Training semantics: grad-accumulation equivalence, frozen projection,
+loss goes down, joint MSE objective improves prediction accuracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.attention import RunFlags
+from repro.optim import adamw
+from repro.training import steps as ST
+
+
+def _batch(cfg, key, b=4, s=64):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+            "loss_mask": jnp.ones((b, s), jnp.float32)}
+
+
+def test_grad_accum_equivalent(rng):
+    cfg = reduced(get_config("stablelm_3b"))
+    opt = adamw.OptConfig(lr=1e-3, grad_clip=0.0, total_steps=10,
+                          warmup_steps=0)
+    state, _ = ST.init_train_state(rng, cfg, opt)
+    batch = _batch(cfg, rng)
+    s1, m1 = jax.jit(ST.make_train_step(cfg, opt, microbatches=1))(
+        jax.tree.map(jnp.copy, state), batch)
+    s2, m2 = jax.jit(ST.make_train_step(cfg, opt, microbatches=2))(
+        jax.tree.map(jnp.copy, state), batch)
+    # microbatched mean-of-means == full mean here (equal microbatch sizes)
+    assert abs(float(m1["ce"]) - float(m2["ce"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_dsa_projection_frozen(rng):
+    cfg = reduced(get_config("yi_6b"))
+    opt = adamw.OptConfig(lr=1e-2, total_steps=10, warmup_steps=0)
+    state, _ = ST.init_train_state(rng, cfg, opt)
+    p_before = np.asarray(jax.tree.leaves(
+        {"g": state["params"]["groups"]})[0])  # placeholder fetch below
+
+    def get_p(st):
+        return np.asarray(st["params"]["groups"]["b0"]["attn"]["dsa"]["p"])
+
+    p0 = get_p(state)
+    step = jax.jit(ST.make_train_step(cfg, opt))
+    for i in range(3):
+        state, _ = step(state, _batch(cfg, jax.random.fold_in(rng, i)))
+    np.testing.assert_array_equal(p0, get_p(state))
+
+
+def test_loss_decreases(rng):
+    cfg = reduced(get_config("h2o_danube_1_8b"))
+    opt = adamw.OptConfig(lr=2e-3, total_steps=30, warmup_steps=3)
+    state, _ = ST.init_train_state(rng, cfg, opt)
+    step = jax.jit(ST.make_train_step(cfg, opt))
+    batch = _batch(cfg, rng, b=8, s=64)      # fixed batch: memorization
+    first = last = None
+    for i in range(25):
+        state, m = step(state, batch)
+        if i == 0:
+            first = float(m["ce"])
+        last = float(m["ce"])
+    assert last < first * 0.8, (first, last)
+
+
+def test_mse_decreases_jointly(rng):
+    """Paper Eq. 7: the joint loss trains the predictor too."""
+    cfg = reduced(get_config("yi_6b"))
+    opt = adamw.OptConfig(lr=1e-3, total_steps=30, warmup_steps=3)
+    state, _ = ST.init_train_state(rng, cfg, opt)
+    step = jax.jit(ST.make_train_step(cfg, opt))
+    batch = _batch(cfg, rng, b=8, s=64)
+    hist = []
+    for i in range(20):
+        state, m = step(state, batch)
+        hist.append(float(m["mse"]))
+    assert hist[-1] < hist[0] * 0.7, hist[:3] + hist[-3:]
