@@ -1,10 +1,16 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities: timing, CSV rows, and the BENCH_*.json
+trajectory files (append-per-run JSON records so successive PRs leave a
+perf history next to the CSV stream)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def time_call(fn, *args, n: int = 5, warmup: int = 2) -> float:
@@ -23,6 +29,32 @@ def time_call(fn, *args, n: int = 5, warmup: int = 2) -> float:
 
 def row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def write_bench_json(bench: str, rows: list, meta: dict | None = None,
+                     out_dir: str | None = None) -> str:
+    """Append one run of ``rows`` (list of dicts) to BENCH_<bench>.json.
+
+    The file holds {"name": ..., "runs": [run, run, ...]} so the perf
+    trajectory across PRs accumulates; each run records its rows plus any
+    ``meta`` (backend, timestamp).  Returns the path written.
+    """
+    path = os.path.join(out_dir or _REPO_ROOT, f"BENCH_{bench}.json")
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                runs = json.load(f).get("runs", [])
+        except (OSError, ValueError):
+            runs = []
+    run = {"backend": jax.default_backend(),
+           "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "rows": rows}
+    if meta:
+        run.update(meta)
+    with open(path, "w") as f:
+        json.dump({"name": bench, "runs": runs + [run]}, f, indent=1)
+    return path
 
 
 # LRA benchmark model configs (paper Appendix A)

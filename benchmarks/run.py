@@ -1,8 +1,21 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV (benchmark harness deliverable; see DESIGN.md §6 for the paper map).
+# ``--smoke`` imports every module and executes a fast subset (CI guard:
+# perf benches must at least import and run).
 import argparse
+import inspect
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` from the repo root (the CI invocation)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _run(m, smoke: bool):
+    if smoke and "smoke" in inspect.signature(m.run).parameters:
+        return m.run(smoke=True)
+    return m.run()
 
 
 def main() -> None:
@@ -11,17 +24,22 @@ def main() -> None:
                     help="comma-separated module suffixes to run")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip table2 (trains small models)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="import all benches, execute only the fast subset "
+                         "at reduced shapes (CI)")
     args = ap.parse_args()
     from benchmarks import (dryrun_table, fig7_macs, fig8_energy,
                             fig10_softmax, table1_oracle_sparsity,
                             table3_sensitivity, table4_kernels,
-                            table5_reordering)
+                            table5_reordering, table_decode)
     from benchmarks import table2_lra_accuracy
     mods = [table1_oracle_sparsity, table2_lra_accuracy, table3_sensitivity,
             fig7_macs, fig8_energy, table4_kernels, fig10_softmax,
-            table5_reordering, dryrun_table]
+            table5_reordering, table_decode, dryrun_table]
     if args.skip_slow:
         mods.remove(table2_lra_accuracy)
+    if args.smoke:
+        mods = [table4_kernels, fig10_softmax, table_decode]
     if args.only:
         keys = args.only.split(",")
         mods = [m for m in mods if any(k in m.__name__ for k in keys)]
@@ -29,7 +47,7 @@ def main() -> None:
     ok = True
     for m in mods:
         try:
-            for line in m.run():
+            for line in _run(m, args.smoke):
                 print(line)
             sys.stdout.flush()
         except Exception:

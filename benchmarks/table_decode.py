@@ -1,0 +1,85 @@
+"""Decode throughput: seed per-token loop vs the fused decode fast path.
+
+Measures steady-state decode tokens/s of ``Engine.generate`` on the reduced
+stablelm_3b family at cache sizes S (the engine's ``max_len``; prompts stay
+short so prefill cost is excluded and every decode step pays the full
+S-sized cache) for B in {1, 4}:
+
+  dense/python   the seed engine: one jitted dispatch + host sync per token
+  dense/scan     fused on-device lax.scan generation loop
+  dsa/scan       fused loop + block-pooled DSA long-context decode
+  dsa/kernel     fused loop + Pallas gather kernel (interpret off-TPU;
+                 smallest shape only — interpret mode is emulation, the
+                 number is a smoke signal, not a speed claim)
+
+Emits CSV rows (us per token) and appends the run to BENCH_decode.json via
+benchmarks.common.write_bench_json, including speedup_vs_seed per shape —
+the acceptance bar is >= 2x at B=4, S=2048 on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, write_bench_json
+from repro.configs import get_config, reduced
+from repro.inference.engine import Engine
+from repro.models.transformer import init_model
+
+
+def _tokens_per_s(eng: Engine, prompts: np.ndarray, n_new: int) -> float:
+    eng.generate(prompts, n_new)              # compile + warm
+    res = eng.generate(prompts, n_new)
+    return res.tokens_per_s
+
+
+def run(smoke: bool = False) -> list:
+    cfg = reduced(get_config("stablelm_3b"))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    if smoke:
+        shapes = [(2, 256)]
+        n_new, prompt_len = 8, 32
+    else:
+        shapes = [(1, 2048), (4, 2048), (1, 8192), (4, 8192)]
+        n_new, prompt_len = 32, 128
+
+    lines = []
+    jrows = []
+    for b, s in shapes:
+        prompts = rng.integers(1, cfg.vocab - 4,
+                               size=(b, prompt_len)).astype(np.int32)
+        variants = [
+            ("dense_python", dict(dsa_mode="off", loop="python")),
+            ("dense_scan", dict(dsa_mode="off", loop="scan")),
+            ("dsa_scan", dict(dsa_mode="block", long_context=True,
+                              loop="scan")),
+        ]
+        # Pallas interpret mode emulates the kernel cell-by-cell — only
+        # smoke-signal it at the smallest shape
+        if (b, s) == shapes[0]:
+            variants.append(("dsa_kernel", dict(dsa_mode="kernel",
+                                                long_context=True,
+                                                loop="scan")))
+        tps = {}
+        for name, kw in variants:
+            eng = Engine(cfg, params, max_len=s, **kw)
+            tps[name] = _tokens_per_s(eng, prompts, n_new)
+        base = tps["dense_python"]
+        for name, v in tps.items():
+            speed = v / max(base, 1e-9)
+            lines.append(row(f"table_decode/b{b}_s{s}_{name}", 1e6 / v,
+                             f"{v:.1f}tok/s={speed:.2f}x_seed"))
+            jrows.append({"batch": b, "cache_len": s, "variant": name,
+                          "tokens_per_s": round(v, 2),
+                          "speedup_vs_seed": round(speed, 3)})
+    path = write_bench_json("decode", jrows,
+                            meta={"model": "stablelm_3b/reduced",
+                                  "n_new": n_new, "smoke": smoke})
+    lines.append(row("table_decode/json", 0.0, path))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,10 +1,12 @@
-"""Batched serving example: prefill + greedy decode with the Engine,
-dense vs DSA long-context decode (predicted-key cache).
+"""Batched serving example: prefill + greedy decode with the Engine.
+
+Walks the decode fast path end to end: the legacy per-token host loop vs
+the fused on-device scan loop, dense vs DSA long-context decode
+(block-pooled predicted-key cache), and the fused Pallas gather kernel
+(interpret mode off-TPU).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
-import time
-
 import jax
 import numpy as np
 
@@ -19,13 +21,21 @@ def main():
     rng = np.random.default_rng(0)
     prompts = rng.integers(1, cfg.vocab - 4, size=(4, 192)).astype(np.int32)
 
-    for dsa in (False, True):
-        eng = Engine(cfg, params, max_len=288,
-                     long_context=dsa, dsa_mode="block" if dsa else "off")
+    variants = [
+        ("dense / python loop", dict(dsa_mode="off", loop="python")),
+        ("dense / scan loop  ", dict(dsa_mode="off", loop="scan")),
+        ("dsa   / scan loop  ", dict(dsa_mode="block", long_context=True,
+                                     loop="scan")),
+        ("dsa   / scan+kernel", dict(dsa_mode="kernel", long_context=True,
+                                     loop="scan")),
+    ]
+    for name, kw in variants:
+        eng = Engine(cfg, params, max_len=288, **kw)
         res = eng.generate(prompts, 32)
-        print(f"dsa_decode={dsa}: prefill {res.prefill_s*1e3:.0f} ms, "
-              f"decode {res.tokens_per_s:.1f} tok/s, "
-              f"tokens[0,:6]={res.tokens[0,:6].tolist()}")
+        print(f"{name}: prefill {res.prefill_s*1e3:.0f} ms, "
+              f"decode {res.tokens_per_s:.1f} tok/s "
+              f"({res.decode_steps} steps / {res.decode_dispatches} "
+              f"dispatches), tokens[0,:6]={res.tokens[0,:6].tolist()}")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,16 @@ Hq % Hkv == 0 (GQA).  Three execution paths:
                         block-dense compute).  Statically-shaped FLOP saving
                         = (1 - sparsity); the pure-XLA twin of the Pallas
                         kernel in repro.kernels.dsa_attention.
+
+Decode fast path (single-token step vs the KV cache):
+
+  decode_attention            dense decode over the full cache buffer.
+  dsa_decode_attention        token-granularity DSA decode: top-``keep``
+                              cache rows by predicted scores (+ trailing
+                              local window), gathered then attended.
+  dsa_decode_block_attention  block-granularity gather decode consuming the
+                              pooled score cache's block index list — the
+                              pure-XLA twin of repro.kernels.dsa_decode.
 """
 from __future__ import annotations
 
@@ -187,6 +197,45 @@ def decode_attention(q, k_cache, v_cache, *, kv_len: Optional[jax.Array] = None,
     s = jnp.where(m[:, None, None, None], s, NEG)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     return _gqa_out(p.astype(v_cache.dtype), v_cache)
+
+
+def dsa_decode_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
+                               block_k: int,
+                               kv_len: Optional[jax.Array] = None
+                               ) -> jax.Array:
+    """Block-gather DSA decode — the pure-XLA twin of the fused Pallas
+    kernel in repro.kernels.dsa_decode (decode fast path).
+
+    q: (B, 1, Hq, hd); k/v cache: (B, S, Hkv, hd); idx/idx_valid: (B, nb)
+    selected cache-*block* indices from the pooled score cache (block j =
+    cache rows [j*block_k, (j+1)*block_k)).  Visits only nb*block_k cache
+    rows; positions past kv_len (ragged batches, partial tail block) are
+    masked.  With every valid block selected this EQUALS decode_attention.
+    """
+    b, _, hq, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    nb = idx.shape[-1]
+    n_kb = -(-s_len // block_k)
+    pad = n_kb * block_k - s_len
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k_cache.reshape(b, n_kb, block_k, hkv, hd)
+    vb = v_cache.reshape(b, n_kb, block_k, hkv, hdv)
+    ks = jnp.take_along_axis(kb, idx[:, :, None, None, None], axis=1)
+    vs = jnp.take_along_axis(vb, idx[:, :, None, None, None], axis=1)
+    ks = ks.reshape(b, nb * block_k, hkv, hd)
+    vs = vs.reshape(b, nb * block_k, hkv, hdv)
+    kpos = (idx[:, :, None] * block_k
+            + jnp.arange(block_k)[None, None, :]).reshape(b, nb * block_k)
+    lim = jnp.full((b,), s_len, jnp.int32) if kv_len is None else kv_len
+    m = idx_valid[:, :, None].repeat(block_k, axis=2).reshape(b, nb * block_k)
+    m = m & (kpos < lim[:, None])
+    s = _gqa_scores(q, ks)                          # (B,Hkv,G,1,nb*Bk)
+    s = jnp.where(m[:, None, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return _gqa_out(p.astype(v_cache.dtype), vs)
 
 
 def dsa_decode_attention(q, k_cache, v_cache, scores_tilde, *, keep: int,

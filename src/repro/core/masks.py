@@ -124,6 +124,37 @@ def block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
     return idx.astype(jnp.int32), ok
 
 
+def decode_block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
+                              kv_len: jax.Array, block_k: int,
+                              local: int = 64, sort: bool = True
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Decode-step block selection over the pooled score cache.
+
+    block_scores: (B, nKb) approximate scores of the current query against
+    each *cache block* (block j holds cache rows [j*block_k, (j+1)*block_k)).
+    kv_len: (B,) valid cache length.  Blocks overlapping the trailing
+    ``local`` tokens are force-kept (the decode fast path's analogue of the
+    diagonal force-keep in ``block_topk_indices``); blocks entirely past
+    kv_len are never kept.  Returns (idx, ok): (B, nb_keep) int32 / bool,
+    sorted ascending for contiguous HBM streams (paper §5.2 reordering).
+    """
+    b, n_kb = block_scores.shape
+    kb = jnp.arange(n_kb)[None, :]
+    valid = kb * block_k < kv_len[:, None]
+    recent = ((kb + 1) * block_k > kv_len[:, None] - local) & valid
+    s = jnp.where(valid & ~recent, block_scores,
+                  jnp.where(recent, jnp.inf, NEG))
+    vals, idx = jax.lax.top_k(s, nb_keep)                 # (B, nb_keep)
+    ok = vals > NEG / 2
+    if sort:
+        key = jnp.where(ok, idx, n_kb + 1)
+        order = jnp.argsort(key, axis=-1)
+        idx = jnp.take_along_axis(idx, order, axis=-1)
+        ok = jnp.take_along_axis(ok, order, axis=-1)
+    idx = jnp.where(ok, idx, 0)
+    return idx.astype(jnp.int32), ok
+
+
 def block_mask_from_indices(idx: jax.Array, valid: jax.Array,
                             n_kb: int) -> jax.Array:
     """Dense (B, nQb, nKb) boolean block mask (reference/oracle path)."""

@@ -17,6 +17,12 @@ block-level scores directly — mean-pooled Q~ per query block against every
 K~ token, then max over key blocks — an O(l^2 k / block_q) beyond-paper
 optimization recorded in EXPERIMENTS.md §Perf.  The paper-faithful mode
 computes the full token-level S~ and max-pools it.
+
+Decode fast path: at decode the same idea runs on the *key* side — the
+engine's long-context cache keeps running block sums of K~ (the ``ktb``
+score cache in repro.models.attention), so each step scores S/block_k
+pooled blocks instead of S tokens before the top-k selection that feeds
+the gather kernels.
 """
 from __future__ import annotations
 

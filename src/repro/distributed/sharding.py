@@ -106,6 +106,48 @@ def get_rules() -> ShardingRules:
     return _RULES
 
 
+def current_mesh():
+    """Best-effort current-mesh lookup across jax versions.
+
+    Newer jax exposes ``jax.sharding.get_abstract_mesh``; 0.4.x tracks the
+    active mesh through ``thread_resources`` (the ``with mesh:`` context).
+    Returns None when no mesh is active (single-device tests/benches).
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        try:
+            m = get()
+            if hasattr(m, "empty") and not m.empty:
+                return m
+        except Exception:
+            pass
+    try:
+        from jax._src import mesh as _mesh_lib
+        get = getattr(_mesh_lib, "get_abstract_mesh", None)
+        if get is not None:
+            try:
+                m = get()
+                # an empty abstract mesh must NOT shadow an active
+                # physical `with mesh:` context — fall through
+                if hasattr(m, "empty") and not m.empty:
+                    return m
+            except Exception:
+                pass
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+        return None if pm is None or pm.empty else pm
+    except Exception:
+        return None
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where available, else the 0.4.x ``with mesh:``
+    context manager (both install the mesh for ``shard`` to find)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def _mesh_axis_sizes(mesh) -> dict:
     return dict(mesh.shape)
 
@@ -116,7 +158,7 @@ def resolve_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
     """Map logical axes -> PartitionSpec, enforcing divisibility and
     one-use-per-mesh-axis."""
     rules = rules or _RULES
-    mesh = mesh or jax.sharding.get_abstract_mesh()
+    mesh = mesh or current_mesh()
     if mesh is None or mesh.empty:
         return P(*([None] * len(shape)))
     sizes = _mesh_axis_sizes(mesh)
@@ -150,7 +192,7 @@ def resolve_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
 
 def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """Constrain activation ``x`` to the resolved spec (no-op outside a mesh)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty or not mesh.shape_tuple:
         return x
     spec = resolve_spec(x.shape, tuple(logical), mesh=mesh)

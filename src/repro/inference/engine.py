@@ -1,9 +1,26 @@
 """Batched serving engine: prefill + decode with KV/state caches.
 
-Jit-compiles one prefill function and one decode function per (batch,
-prompt_len) bucket; requests are right-padded into the bucket.  DSA
-long-context decode is enabled through RunFlags(long_context=True) — the
-prediction-path key cache makes decode sub-quadratic (DESIGN.md §4).
+Jit-compiles one prefill function per (batch, prompt_len) bucket; requests
+are right-padded into the bucket.  DSA long-context decode is enabled
+through RunFlags(long_context=True) — the prediction-path key cache makes
+decode sub-quadratic (DESIGN.md §4), and ``dsa_mode`` picks the decode
+execution path ("faithful" token top-k, "block" XLA block gather, "kernel"
+fused Pallas gather — see repro.models.attention).
+
+Decode fast path (``loop="scan"``, the default): the whole generation of
+``n_new`` tokens after prefill — cache update, DSA prediction, attention,
+and greedy/categorical sampling — is ONE jitted ``jax.lax.scan`` dispatch.
+The first token is sampled from the prefill logits, so exactly ``n_new``
+sampled tokens cost ``n_new - 1`` fused decode steps and there is no
+per-token host round-trip.  Before entering the scan the stacked
+(n_groups, ...) cache is unstacked into per-layer carry leaves
+(transformer.unstack_group_caches) so each step's single-token cache write
+is an in-place dynamic_update_slice — the legacy path restacks (copies)
+the full KV cache every step, which dominates once the cache is long.
+``loop="python"`` keeps the legacy per-token loop (one jitted dispatch +
+one host sync per token) as the equivalence / baseline twin; both loops
+thread the PRNG key identically, so they are token-for-token identical at
+a fixed seed.
 """
 from __future__ import annotations
 
@@ -17,7 +34,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.attention import RunFlags
-from repro.models.transformer import decode_step, forward, init_cache
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      unstack_group_caches)
 
 
 @dataclasses.dataclass
@@ -26,15 +44,27 @@ class GenerationResult:
     prefill_s: float
     decode_s: float
     tokens_per_s: float
+    decode_dispatches: int = 0   # jitted decode dispatches issued
+    decode_steps: int = 0        # decode steps executed (n_new - 1)
+
+
+def _sample(logits, key, greedy: bool):
+    """Sample the next token from (B, V) logits; returns ((B,1) i32, key)."""
+    if greedy:
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), key
+    key, sk = jax.random.split(key)
+    return jax.random.categorical(sk, logits)[:, None].astype(jnp.int32), key
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_len: int = 2048,
                  long_context: bool = False, dsa_mode: str = "off",
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, loop: str = "scan"):
+        assert loop in ("scan", "python"), loop
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.loop = loop
         self.prefill_flags = RunFlags(mode="prefill", dsa_mode=dsa_mode,
                                       with_mse=False,
                                       long_context=long_context)
@@ -51,12 +81,30 @@ class Engine:
         def _decode(params, tok, caches):
             return decode_step(params, cfg, self.decode_flags, tok, caches)
 
+        def _decode_loop(params, tok0, caches, key, n_steps: int,
+                         greedy: bool):
+            """Fused on-device generation: scan n_steps decode steps."""
+            def body(carry, _):
+                tok, caches, key = carry
+                logits, caches = decode_step(params, cfg, self.decode_flags,
+                                             tok, caches)
+                nxt, key = _sample(logits[:, -1], key, greedy)
+                return (nxt, caches, key), nxt[:, 0]
+
+            (tok, caches, key), toks = jax.lax.scan(
+                body, (tok0, caches, key), None, length=n_steps)
+            return toks.swapaxes(0, 1), caches      # (B, n_steps)
+
         self._prefill = jax.jit(_prefill, donate_argnums=(2,))
         self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self._decode_loop = jax.jit(_decode_loop,
+                                    static_argnames=("n_steps", "greedy"),
+                                    donate_argnums=(2,))
 
     def generate(self, prompts: np.ndarray, n_new: int,
                  extras: Optional[Dict[str, np.ndarray]] = None,
                  greedy: bool = True, seed: int = 0) -> GenerationResult:
+        assert n_new >= 1, "generate() needs n_new >= 1"
         b, s = prompts.shape
         caches = init_cache(self.cfg, b, self.max_len, self.decode_flags,
                             dtype=self.cache_dtype)
@@ -68,20 +116,34 @@ class Engine:
         logits.block_until_ready()
         t_prefill = time.monotonic() - t0
         key = jax.random.PRNGKey(seed)
-        out = []
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         t0 = time.monotonic()
-        for i in range(n_new):
-            out.append(np.asarray(tok))
-            logits, caches = self._decode(self.params, tok, caches)
-            if greedy:
-                tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        # token 1 comes from the prefill logits: n_new tokens cost exactly
+        # n_new - 1 decode steps
+        tok, key = _sample(logits[:, -1], key, greedy)
+        dispatches = 0
+        if self.loop == "scan":
+            if n_new > 1:
+                # per-layer cache leaves: in-place slot updates inside the
+                # scan instead of restacking the whole KV cache per step
+                caches = unstack_group_caches(caches)
+                rest, caches = self._decode_loop(self.params, tok, caches,
+                                                 key, n_steps=n_new - 1,
+                                                 greedy=greedy)
+                dispatches = 1
+                toks = jnp.concatenate([tok, rest], axis=1)
             else:
-                key, sk = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sk, logits[:, -1])[:, None].astype(jnp.int32)
-        tok.block_until_ready()
+                toks = tok
+        else:
+            out: List[jax.Array] = [tok]
+            for _ in range(n_new - 1):
+                logits, caches = self._decode(self.params, tok, caches)
+                dispatches += 1
+                tok, key = _sample(logits[:, -1], key, greedy)
+                out.append(np.asarray(tok))
+            toks = jnp.concatenate(out, axis=1)
+        toks.block_until_ready()
         t_decode = time.monotonic() - t0
-        toks = np.concatenate(out, axis=1)
-        return GenerationResult(toks, t_prefill, t_decode,
-                                b * n_new / max(t_decode, 1e-9))
+        return GenerationResult(np.asarray(toks), t_prefill, t_decode,
+                                b * n_new / max(t_decode, 1e-9),
+                                decode_dispatches=dispatches,
+                                decode_steps=n_new - 1)

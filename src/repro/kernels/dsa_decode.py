@@ -1,0 +1,124 @@
+"""Fused DSA decode kernel — gather + attend over predicted cache blocks.
+
+Decode-step companion of repro.kernels.dsa_attention (the prefill/train
+block-sparse kernel): one Pallas kernel walks ONLY the cache blocks selected
+by the block-pooled prediction path, with online softmax accumulated in VMEM
+scratch.  The dynamic block indices, their validity bits, and the ragged
+per-row cache lengths all arrive through scalar prefetch
+(PrefetchScalarGridSpec), so the grid stays static while HBM->VMEM traffic
+scales with the number of selected blocks — the paper's decode-time FLOP
+saving made visible to the memory system.
+
+Layouts (kernel-native; repro.kernels.ops.dsa_decode adapts model layout):
+
+  q:       (B, Hq, 1, hd)     current query token, per head
+  k/v:     (B, S, Hkv, hd)    KV cache in its natural engine layout
+                              (S padded to a multiple of block_k)
+  idx/ok:  (B, nb) int32      selected cache-block indices + validity
+  kv_len:  (B,) int32         valid cache rows (ragged batches)
+  out:     (B, Hq, 1, hd)
+
+Grid: (B, Hq, nb); the innermost axis accumulates online softmax and
+finalizes on the last selected block.  GQA: query head h reads KV head
+h // (Hq // Hkv) straight from the cache — no head repetition is ever
+materialized.  Selected indices are pre-sorted ascending by the mask
+builder (contiguous HBM streams, paper §5.2 reordering analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, block_k: int, nb: int, scale: float):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kb = idx_ref[b, j]
+    ok = ok_ref[b, j]
+    kvl = kvl_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, Bk)
+    kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = (kpos < kvl) & (ok > 0)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]                                    # (1, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit zero under the mask: a fully-invalid block would otherwise
+    # contribute exp(NEG - NEG) = 1 while m is still at its NEG init
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)           # (1, Bk)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _fini():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def dsa_decode_gather_attention(q, k_cache, v_cache, idx, ok, kv_len, *,
+                                block_k: int = 128,
+                                interpret: bool = False) -> jax.Array:
+    """q: (B,Hq,1,hd); k/v cache: (B,S,Hkv,hd); idx/ok: (B,nb);
+    kv_len: (B,).  Returns (B,Hq,1,hd)."""
+    b, hq, _, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    nb = idx.shape[-1]
+    scale = hd ** -0.5
+    n_kb = -(-s_len // block_k)
+    pad = n_kb * block_k - s_len
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    grid = (b, hq, nb)
+
+    def qmap(bi, hi, ji, idx_ref, ok_ref, kvl_ref):
+        return (bi, hi, 0, 0)
+
+    def kmap(bi, hi, ji, idx_ref, ok_ref, kvl_ref):
+        return (bi, idx_ref[bi, ji], hi // g, 0)
+
+    kern = functools.partial(_kernel, block_k=block_k, nb=nb, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), qmap),
+            pl.BlockSpec((1, block_k, 1, hd), kmap),
+            pl.BlockSpec((1, block_k, 1, hd), kmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, hd), q.dtype),
+        interpret=interpret,
+    )
+    return fn(idx.astype(jnp.int32), ok.astype(jnp.int32),
+              kv_len.astype(jnp.int32), q, k_cache, v_cache)

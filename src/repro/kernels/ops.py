@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dsa_attention import dsa_block_sparse_attention
+from repro.kernels.dsa_decode import dsa_decode_gather_attention
 from repro.kernels.wkv6 import wkv6_chunked
 
 
@@ -33,6 +34,22 @@ def dsa_attention(q, k, v, idx, valid, *, block_q=128, block_k=128,
                                      block_q=block_q, block_k=block_k,
                                      causal=causal, window=window,
                                      interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def dsa_decode(q, k_cache, v_cache, idx, ok, kv_len, *, block_k=128,
+               interpret=None):
+    """Fused DSA decode step (decode fast path).
+
+    q: (B,1,Hq,hd) [model layout]; k/v cache: (B,S,Hkv,hd); idx/ok: (B,nb)
+    selected cache-block indices; kv_len: (B,).  Returns (B,1,Hq,hd).
+    The pure-XLA twin is core.attention.dsa_decode_block_attention.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,1,hd)
+    out = dsa_decode_gather_attention(qt, k_cache, v_cache, idx, ok, kv_len,
+                                      block_k=block_k, interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 

@@ -1,7 +1,13 @@
 """Serving driver: batched prefill + decode with the Engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --reduced \
-        --batch 8 --prompt-len 128 --new-tokens 64 [--dsa]
+        --batch 8 --prompt-len 128 --new-tokens 64 [--dsa] \
+        [--dsa-mode block|faithful|kernel] [--loop scan|python]
+
+``--loop scan`` (default) is the decode fast path: all new tokens are
+generated in one fused on-device ``lax.scan`` dispatch.  ``--dsa-mode
+kernel`` additionally routes each decode step through the fused Pallas
+gather kernel (interpret mode off-TPU).
 """
 from __future__ import annotations
 
@@ -26,6 +32,13 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=0)
     ap.add_argument("--dsa", action="store_true",
                     help="DSA long-context decode (predicted-key cache)")
+    ap.add_argument("--dsa-mode", default="block",
+                    choices=["faithful", "block", "kernel"],
+                    help="DSA decode path (with --dsa): token top-k | "
+                         "XLA block gather | fused Pallas kernel")
+    ap.add_argument("--loop", default="scan", choices=["scan", "python"],
+                    help="fused on-device generation loop vs legacy "
+                         "per-token host loop")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -34,9 +47,11 @@ def main(argv=None):
         cfg = reduced(cfg)
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.max_len or (args.prompt_len + args.new_tokens + 16)
+    dsa_on = args.dsa and cfg.dsa.enabled
     eng = Engine(cfg, params, max_len=max_len,
-                 long_context=args.dsa and cfg.dsa.enabled,
-                 dsa_mode="block" if args.dsa and cfg.dsa.enabled else "off")
+                 long_context=dsa_on,
+                 dsa_mode=args.dsa_mode if dsa_on else "off",
+                 loop=args.loop)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(1, cfg.vocab - 4,
                            size=(args.batch, args.prompt_len)).astype(np.int32)
@@ -50,7 +65,9 @@ def main(argv=None):
     res = eng.generate(prompts, args.new_tokens, extras=extras or None)
     print(f"prefill: {res.prefill_s*1e3:.1f} ms   "
           f"decode: {res.decode_s:.2f} s   "
-          f"throughput: {res.tokens_per_s:.1f} tok/s")
+          f"throughput: {res.tokens_per_s:.1f} tok/s   "
+          f"({res.decode_steps} steps in {res.decode_dispatches} "
+          f"dispatch{'es' if res.decode_dispatches != 1 else ''})")
     print("first new tokens:", res.tokens[:, :8].tolist())
     return res
 

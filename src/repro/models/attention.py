@@ -7,6 +7,23 @@ DSA integration (paper §3): when ``cfg.dsa.enabled`` and the run flags ask
 for it, the module computes approximate scores S~ through the prediction
 path, derives the dynamic sparse pattern, executes the sparse attention, and
 returns the MSE term for the joint loss (Eq. 7) in ``aux``.
+
+Decode fast path (RunFlags(mode="decode", long_context=True)): the KV cache
+carries the predicted-key cache ``kt`` (B, S, k) AND its block-pooled twin
+``ktb`` (B, ceil(S/block_k), k) — running block sums, so per-step selection
+is a top-k over S/block_k block scores instead of S token scores.
+``dsa_mode`` picks the execution path per step:
+
+  faithful  token-granularity top-k over the full ``kt`` cache
+            (core.attention.dsa_decode_attention — paper-faithful)
+  block     block-granularity selection over ``ktb`` + XLA block gather
+            (core.attention.dsa_decode_block_attention)
+  kernel    same selection, fused Pallas gather+attend kernel
+            (repro.kernels.dsa_decode via kernels.ops.dsa_decode)
+
+The long-context cache never wraps (it is only allocated when
+``cfg.swa_window == 0`` and sized to max_len), so block sums stay exact —
+each cache slot is written once.
 """
 from __future__ import annotations
 
@@ -24,9 +41,19 @@ from repro.distributed.sharding import shard
 from repro.models.common import dense_init, rms_norm, rope
 
 
+# Trailing tokens always attended at decode (keeps softmax support and the
+# local neighbourhood regardless of prediction quality; DESIGN.md §4).
+DECODE_LOCAL = 64
+
+
 @dataclasses.dataclass(frozen=True)
 class RunFlags:
-    """Runtime execution choices (not architecture)."""
+    """Runtime execution choices (not architecture).
+
+    dsa_mode at decode selects the long-context execution path (see module
+    docstring): "faithful" = token top-k, "block" = block-pooled selection +
+    XLA gather, "kernel" = block-pooled selection + fused Pallas kernel.
+    """
     mode: str = "train"            # train | prefill | decode
     dsa_mode: str = "block"        # off | faithful | block | kernel
     with_mse: bool = True          # compute L_MSE (training)
@@ -120,8 +147,8 @@ def _dsa_train_mask_and_aux(params, cfg: ArchConfig, flags: RunFlags,
         params["dsa"], x, x_kv, bits=dsa.quant_bits,
         block_q=dsa.block_q, block_k=dsa.block_k, pooled=True)
     n_kb = lk // dsa.block_k
-    nb_keep = max(dsa.min_blocks + dsa.local_blocks,
-                  M.keep_count(n_kb, dsa.sparsity))
+    nb_keep = min(n_kb, max(dsa.min_blocks + dsa.local_blocks,
+                            M.keep_count(n_kb, dsa.sparsity)))
     wb = cfg.swa_window // dsa.block_k if cfg.swa_window else 0
     idx, ok = M.block_topk_indices(
         bs, nb_keep, causal=causal, window_blocks=wb,
@@ -200,14 +227,24 @@ def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
     hd = cfg.resolved_head_dim
     s = min(max_len, flags.decode_window or max_len,
             cfg.swa_window or max_len)
+    dsa_decode = cfg.dsa.enabled and flags.long_context and not cfg.swa_window
+    if dsa_decode:
+        # round the cache up to a block_k multiple: the block-gather decode
+        # paths would otherwise jnp.pad the ENTIRE cache every step (an
+        # O(S) copy inside the generation scan)
+        s = -(-s // cfg.dsa.block_k) * cfg.dsa.block_k
     c = {
         "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
         "pos": jnp.zeros((), jnp.int32),
     }
-    if cfg.dsa.enabled and flags.long_context and not cfg.swa_window:
+    if dsa_decode:
         kp = PRED.predictor_k(cfg.d_model, cfg.dsa.sigma)
         c["kt"] = jnp.zeros((batch, s, kp), dtype)
+        # block-pooled twin: running sums of kt per block_k-sized cache
+        # block; per-step selection reads these S/block_k scores instead of
+        # S token scores (decode fast path)
+        c["ktb"] = jnp.zeros((batch, s // cfg.dsa.block_k, kp), dtype)
     return c
 
 
@@ -217,6 +254,8 @@ def cache_specs_attention(cache) -> Dict:
            "pos": ()}
     if "kt" in cache:
         out["kt"] = ("batch", "cache_seq", "pred_k")
+    if "ktb" in cache:
+        out["ktb"] = ("batch", "blocks", "pred_k")
     return out
 
 
@@ -245,6 +284,13 @@ def _fill_cache(cfg, flags, cache, k, v, params, x):
         new["kt"] = jax.lax.dynamic_update_slice_in_dim(
             cache["kt"].astype(k_t.dtype), ring(k_t).astype(cache["kt"].dtype),
             0, axis=1)
+        # rebuild the block-pooled score cache from the freshly filled kt
+        # (unwritten tail slots are zero, so plain block sums are exact)
+        bkd = cfg.dsa.block_k
+        n_kb = cache["ktb"].shape[1]
+        pad = n_kb * bkd - s
+        ktp = jnp.pad(new["kt"], ((0, 0), (0, pad), (0, 0))) if pad else new["kt"]
+        new["ktb"] = ktp.reshape(ktp.shape[0], n_kb, bkd, -1).sum(axis=2)
     return new
 
 
@@ -266,19 +312,65 @@ def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     new = dict(cache, k=kc, v=vc, pos=pos + 1)
     kv_len = jnp.minimum(pos + 1, s) * jnp.ones((b,), jnp.int32)
     if "kt" in cache:
-        q_t, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
-        new["kt"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["kt"], k_t.astype(cache["kt"].dtype), slot, axis=1)
-        s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
-                             new["kt"].astype(jnp.float32))
-        keep = M.keep_count(s, cfg.dsa.sparsity)
-        out = A.dsa_decode_attention(q, kc, vc, s_tilde, keep=keep,
-                                     kv_len=kv_len)
+        out = _dsa_decode(params, cfg, flags, x, q, kc, vc, new, slot, kv_len)
     else:
+        # SWA window semantics: init_cache_attention sizes the ring buffer
+        # at s = min(max_len, decode_window, swa_window) slots, so with SWA
+        # on (s <= window) the buffer can never hold more than one window
+        # of live tokens — the window is enforced STRUCTURALLY and masking
+        # reduces to kv_len validity.  A positional window over *slot*
+        # indices would be wrong after wrap-around (slot order != temporal
+        # order); the explicit mask below is only correct for externally
+        # built caches that are larger than the window and not yet wrapped.
+        # Pinned by tests/test_decode_fastpath.py::test_swa_window_ring_wrap.
+        win = cfg.swa_window or 0
         out = A.decode_attention(q, kc, vc, kv_len=kv_len,
-                                 window=0 if s <= (cfg.swa_window or s) else cfg.swa_window)
+                                 window=win if win and s > win else 0)
     out = out.reshape(b, 1, -1) @ params["wo"]
     return out, new, {}
+
+
+def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
+                new, slot, kv_len):
+    """DSA long-context decode step: update the prediction-path caches,
+    select cache rows/blocks from predicted scores, gather + attend.
+
+    Mutates ``new`` in place with the updated kt/ktb caches and returns the
+    attention output (B, 1, Hq, hd).  Sub-quadratic: O(S*k) ("faithful") or
+    O(S/block_k * k) ("block"/"kernel") prediction + O(gathered * d) attend.
+    """
+    dsa = cfg.dsa
+    s = kc.shape[1]
+    q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
+    new["kt"] = jax.lax.dynamic_update_slice_in_dim(
+        new["kt"], k_t.astype(new["kt"].dtype), slot, axis=1)
+    keep = M.keep_count(s, dsa.sparsity)
+    if flags.dsa_mode == "faithful":
+        # paper-faithful token granularity: top-k over all S cached scores
+        s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
+                             new["kt"].astype(jnp.float32))
+        return A.dsa_decode_attention(q, kc, vc, s_tilde, keep=keep,
+                                      kv_len=kv_len, local=DECODE_LOCAL)
+    # block granularity (decode fast path): maintain running block sums of
+    # kt, score S/block_k blocks, select, then gather whole blocks.  The
+    # long-context cache never wraps (module docstring), so the slot being
+    # written was zero and a plain add keeps the block sum exact.
+    bkd = dsa.block_k
+    jb = slot // bkd
+    old = jax.lax.dynamic_slice_in_dim(new["ktb"], jb, 1, axis=1)
+    new["ktb"] = jax.lax.dynamic_update_slice_in_dim(
+        new["ktb"], old + k_t.astype(new["ktb"].dtype), jb, axis=1)
+    n_kb = new["ktb"].shape[1]
+    s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
+                       new["ktb"].astype(jnp.float32)) / bkd
+    nb_keep = min(n_kb, -(-keep // bkd) + -(-DECODE_LOCAL // bkd) + 1)
+    idx, ok = M.decode_block_topk_indices(s_blk, nb_keep, kv_len=kv_len,
+                                          block_k=bkd, local=DECODE_LOCAL)
+    if flags.dsa_mode == "kernel":
+        from repro.kernels.ops import dsa_decode as dsa_decode_kernel
+        return dsa_decode_kernel(q, kc, vc, idx, ok, kv_len, block_k=bkd)
+    return A.dsa_decode_block_attention(q, kc, vc, idx, ok, block_k=bkd,
+                                        kv_len=kv_len)
 
 
 # ---------------------------------------------------------------------------

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import get_rules, resolve_spec, shard
+from repro.distributed.sharding import (current_mesh, get_rules, resolve_spec,
+                                        shard)
 from repro.models.common import dense_init
 
 
@@ -210,7 +211,7 @@ def apply_moe(params, cfg: ArchConfig, x, *, decode: bool = False
               ) -> Tuple[jax.Array, Dict]:
     """x: (B, S, d) -> (y, aux).  Chooses EP / TP / decode-dense path."""
     mo = cfg.moe
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     has_mesh = mesh is not None and not mesh.empty and "model" in mesh.axis_names
     n_model = _axis_size(mesh, "model") if has_mesh else 1
     aux: Dict[str, jax.Array] = {}

@@ -5,6 +5,14 @@ Public API:
   forward(params, cfg, flags, batch)    -> (logits, aux)        train/prefill
   decode_step(params, cfg, flags, tok, cache) -> (logits, cache)
   init_cache(cfg, batch, max_len, flags)-> cache (+ cache_logical_specs)
+
+Decode fast path: ``decode_step`` is a pure (tokens, caches) -> (logits,
+caches) function of statically-shaped pytrees, which is what lets the
+serving engine fuse whole generations into one ``jax.lax.scan`` over it
+(repro.inference.engine) — cache update, DSA prediction/selection, attention
+and sampling all stay on device.  With RunFlags(long_context=True) the
+attention caches also carry the predicted-key cache and its block-pooled
+score cache (repro.models.attention module docstring).
 """
 from __future__ import annotations
 
@@ -126,6 +134,35 @@ def _encode(params, cfg: ArchConfig, flags: RunFlags, enc_x):
     return rms_norm(x, params["enc_norm"].astype(x.dtype), cfg.norm_eps), aux
 
 
+def unstack_group_caches(caches):
+    """Decode fast path: turn the stacked (n_groups, ...) group cache into a
+    per-layer list so each group's buffers are separate carry leaves of the
+    generation loop — the single-token dynamic_update_slice then updates
+    each layer's cache IN PLACE inside ``lax.scan`` instead of restacking
+    (copying) the whole KV cache every decode step.  One-time copy; forward
+    dispatches on the list structure."""
+    gc = caches["groups"]
+    ng = jax.tree.leaves(gc)[0].shape[0]
+    groups = [jax.tree.map(lambda a, i=i: a[i], gc) for i in range(ng)]
+    return dict(caches, groups=groups)
+
+
+def _loop_groups_unstacked(gparams, cfg: ArchConfig, flags: RunFlags, defs,
+                           x, caches, enc=None):
+    """Python-unrolled twin of _scan_groups over a per-layer cache list
+    (decode fast path).  Per-layer param slices are loop-invariant, so XLA
+    hoists them out of any enclosing generation scan."""
+    aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+    new_caches = []
+    for i, c in enumerate(caches):
+        p = jax.tree.map(lambda a, i=i: a[i], gparams)
+        x, nc, a = B.apply_group(p, cfg, flags, defs, x, cache=c, enc=enc)
+        a = _norm_aux(a)
+        aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+        new_caches.append(nc)
+    return x, aux, new_caches
+
+
 def forward(params, cfg: ArchConfig, flags: RunFlags,
             batch: Dict[str, jax.Array], caches=None):
     """batch: {"tokens": (B,S) int32, ["enc_x"|"img"]: (B,T,d)}.
@@ -156,8 +193,12 @@ def forward(params, cfg: ArchConfig, flags: RunFlags,
                 new_pro_caches.append(nc)
     defs = B.group_defs(cfg)
     gc = None if caches is None else caches["groups"]
-    x, aux, new_gc = _scan_groups(params["groups"], cfg, flags, defs, x,
-                                  caches=gc, enc=enc)
+    if isinstance(gc, (list, tuple)):       # decode fast path (unstacked)
+        x, aux, new_gc = _loop_groups_unstacked(params["groups"], cfg, flags,
+                                                defs, x, gc, enc=enc)
+    else:
+        x, aux, new_gc = _scan_groups(params["groups"], cfg, flags, defs, x,
+                                      caches=gc, enc=enc)
     for extra in (aux_pro, aux_enc or {}):
         for k in AUX_KEYS:
             if k in extra:

@@ -1,0 +1,231 @@
+"""Decode fast path: Pallas decode-kernel equivalence vs the XLA twin
+(GQA + ragged kv_len), block-gather exactness vs dense decode, fused
+scan-loop vs legacy python-loop token equivalence, decode dispatch
+accounting, block score-cache consistency, and SWA ring-buffer + window
+semantics at cache wrap-around."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import attention as A
+from repro.core import masks as M
+from repro.inference.engine import Engine
+from repro.kernels.ops import dsa_decode
+from repro.models.attention import RunFlags
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_model)
+
+
+def _mk_decode_case(key, b, s, hq, hkv, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd)).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd)).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd)).astype(dtype)
+    return q, kc, vc, ks[3]
+
+
+# ---------------------------------------------------------------------------
+# kernel vs XLA twin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])       # MHA + GQA
+@pytest.mark.parametrize("s,bk", [(104, 16), (256, 32),    # ragged tail,
+                                  (100, 16)])              # non-divisible S
+def test_dsa_decode_kernel_matches_xla_twin(rng, hq, hkv, s, bk):
+    b, hd = 2, 32
+    q, kc, vc, k2 = _mk_decode_case(rng, b, s, hq, hkv, hd)
+    kv_len = jnp.array([s, max(1, s - 37)], jnp.int32)     # ragged batch
+    n_kb = -(-s // bk)
+    sb = jax.random.normal(k2, (b, n_kb))
+    nb = min(n_kb, 5)
+    idx, ok = M.decode_block_topk_indices(sb, nb, kv_len=kv_len,
+                                          block_k=bk, local=32)
+    out = dsa_decode(q, kc, vc, idx, ok, kv_len, block_k=bk)
+    ref = A.dsa_decode_block_attention(q, kc, vc, idx, ok, block_k=bk,
+                                       kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-3),
+                                       (jnp.bfloat16, 3e-2)])
+def test_dsa_decode_kernel_dtypes(rng, dtype, tol):
+    b, s, hq, hkv, hd, bk = 2, 128, 8, 2, 64, 32
+    q, kc, vc, k2 = _mk_decode_case(rng, b, s, hq, hkv, hd, dtype)
+    kv_len = jnp.array([128, 77], jnp.int32)
+    idx, ok = M.decode_block_topk_indices(
+        jax.random.normal(k2, (b, s // bk)), 3, kv_len=kv_len,
+        block_k=bk, local=32)
+    out = dsa_decode(q, kc, vc, idx, ok, kv_len, block_k=bk)
+    ref = A.dsa_decode_block_attention(q, kc, vc, idx, ok, block_k=bk,
+                                       kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_block_gather_equals_dense_when_all_blocks_kept(rng):
+    """Selecting every valid block reduces both the XLA twin and the Pallas
+    kernel to exact dense decode (mechanism correctness)."""
+    b, s, hq, hkv, hd, bk = 2, 96, 4, 2, 16, 16
+    q, kc, vc, k2 = _mk_decode_case(rng, b, s, hq, hkv, hd)
+    kv_len = jnp.array([96, 50], jnp.int32)
+    idx, ok = M.decode_block_topk_indices(
+        jax.random.normal(k2, (b, s // bk)), s // bk, kv_len=kv_len,
+        block_k=bk, local=16)
+    full = A.decode_attention(q, kc, vc, kv_len=kv_len)
+    blk = A.dsa_decode_block_attention(q, kc, vc, idx, ok, block_k=bk,
+                                       kv_len=kv_len)
+    kern = dsa_decode(q, kc, vc, idx, ok, kv_len, block_k=bk)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(full), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused generation loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dsa_mode,long_ctx", [("off", False),
+                                               ("block", True),
+                                               ("kernel", True)])
+def test_scan_loop_matches_python_loop(rng, dsa_mode, long_ctx):
+    """Token-for-token: fused scan generation == legacy per-token loop,
+    greedy and sampled (fixed seed), across decode paths."""
+    cfg = reduced(get_config("stablelm_3b"))
+    params, _ = init_model(rng, cfg)
+    prompts = np.random.default_rng(0).integers(
+        1, cfg.vocab - 4, size=(2, 32)).astype(np.int32)
+    kw = dict(max_len=96, dsa_mode=dsa_mode, long_context=long_ctx)
+    e_scan = Engine(cfg, params, loop="scan", **kw)
+    e_py = Engine(cfg, params, loop="python", **kw)
+    r_scan = e_scan.generate(prompts, 8)
+    r_py = e_py.generate(prompts, 8)
+    np.testing.assert_array_equal(r_scan.tokens, r_py.tokens)
+    r_scan = e_scan.generate(prompts, 8, greedy=False, seed=7)
+    r_py = e_py.generate(prompts, 8, greedy=False, seed=7)
+    np.testing.assert_array_equal(r_scan.tokens, r_py.tokens)
+
+
+def test_decode_dispatch_accounting(rng):
+    """Exactly n_new sampled tokens cost n_new - 1 decode steps: one fused
+    dispatch on the scan path, n_new - 1 jitted dispatches on the legacy
+    loop (the seed wasted a final decode whose logits were discarded)."""
+    cfg = reduced(get_config("stablelm_3b"))
+    params, _ = init_model(rng, cfg)
+    prompts = np.ones((2, 16), np.int32)
+    n_new = 8
+    r_scan = Engine(cfg, params, max_len=64, loop="scan").generate(
+        prompts, n_new)
+    r_py = Engine(cfg, params, max_len=64, loop="python").generate(
+        prompts, n_new)
+    assert r_scan.tokens.shape == (2, n_new)
+    assert r_scan.decode_steps == n_new - 1
+    assert r_scan.decode_dispatches == 1
+    assert r_py.decode_steps == n_new - 1
+    assert r_py.decode_dispatches == n_new - 1
+    np.testing.assert_array_equal(r_scan.tokens, r_py.tokens)
+    # n_new=1 needs no decode dispatch at all
+    r_one = Engine(cfg, params, max_len=64, loop="scan").generate(prompts, 1)
+    assert r_one.tokens.shape == (2, 1) and r_one.decode_dispatches == 0
+
+
+def test_engine_kernel_mode_end_to_end(rng):
+    """dsa_mode="kernel" works through Engine.generate and agrees with the
+    XLA block twin token-for-token (identical selection, same gather)."""
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    prompts = np.random.default_rng(1).integers(
+        1, cfg.vocab - 4, size=(2, 48)).astype(np.int32)
+    kw = dict(max_len=96, long_context=True, loop="scan")
+    r_blk = Engine(cfg, params, dsa_mode="block", **kw).generate(prompts, 8)
+    r_ker = Engine(cfg, params, dsa_mode="kernel", **kw).generate(prompts, 8)
+    assert r_ker.tokens.shape == (2, 8)
+    np.testing.assert_array_equal(r_ker.tokens, r_blk.tokens)
+
+
+# ---------------------------------------------------------------------------
+# block score cache consistency
+# ---------------------------------------------------------------------------
+
+
+def test_block_score_cache_tracks_token_cache(rng):
+    """After prefill + decode steps, ktb equals the block sums of kt."""
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    toks = jax.random.randint(rng, (2, 40), 0, cfg.vocab)
+    pf = RunFlags(mode="prefill", dsa_mode="block", with_mse=False,
+                  long_context=True)
+    df = RunFlags(mode="decode", dsa_mode="block", with_mse=False,
+                  long_context=True)
+    cache = init_cache(cfg, 2, 72, df, dtype=jnp.float32)
+    c0 = cache["groups"]["b0"]["attn"]
+    assert "kt" in c0 and "ktb" in c0
+    bkd = cfg.dsa.block_k
+    assert c0["ktb"].shape[2] == -(-c0["kt"].shape[2] // bkd)
+    _, _, cache = forward(params, cfg, pf, {"tokens": toks[:, :32]},
+                          caches=cache)
+    for i in range(4):
+        _, cache = decode_step(params, cfg, df, toks[:, 32 + i:33 + i], cache)
+    c = cache["groups"]["b0"]["attn"]
+    kt, ktb = np.asarray(c["kt"]), np.asarray(c["ktb"])
+    n_kb = ktb.shape[2]
+    pad = n_kb * bkd - kt.shape[2]
+    ktp = np.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    expect = ktp.reshape(*kt.shape[:2], n_kb, bkd, kt.shape[-1]).sum(axis=3)
+    np.testing.assert_allclose(ktb, expect, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SWA ring buffer + window semantics (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_swa_window_ring_wrap(rng):
+    """Pin ring-buffer + window semantics when the cache EQUALS the window:
+    the buffer enforces the window structurally, so decode across the
+    wrap-around point must keep matching teacher forcing — a positional
+    window mask over slot indices would corrupt logits right here."""
+    cfg = reduced(get_config("h2o_danube_1_8b"))       # swa_window=64 reduced
+    params, _ = init_model(rng, cfg)
+    win = cfg.swa_window
+    n = 4
+    for s0 in (win - 2, win, 2 * win + 3):             # pre/at/post wrap
+        toks = jax.random.randint(jax.random.fold_in(rng, s0),
+                                  (1, s0 + n), 0, cfg.vocab)
+        tf = RunFlags(mode="train", dsa_mode="off", with_mse=False)
+        full_logits, _, _ = forward(params, cfg, tf, {"tokens": toks})
+        pf = RunFlags(mode="prefill", dsa_mode="off", with_mse=False)
+        df = RunFlags(mode="decode", dsa_mode="off", with_mse=False)
+        cache = init_cache(cfg, 1, s0 + n, df, dtype=jnp.float32)
+        assert cache["groups"]["b0"]["attn"]["k"].shape[2] == win
+        _, _, cache = forward(params, cfg, pf, {"tokens": toks[:, :s0]},
+                              caches=cache)
+        for i in range(n):
+            logits, cache = decode_step(params, cfg, df,
+                                        toks[:, s0 + i:s0 + i + 1], cache)
+            np.testing.assert_allclose(
+                np.asarray(logits[:, 0]), np.asarray(full_logits[:, s0 + i]),
+                atol=2e-3, rtol=2e-3, err_msg=f"s0={s0} step={i}")
+
+
+def test_decode_attention_window_masks_slots_pre_wrap(rng):
+    """The explicit window arg of decode_attention is a *slot-positional*
+    mask: correct only pre-wrap (kv_len <= cache size).  Pin that contract
+    so external callers with over-sized caches keep working."""
+    b, s, h, hd, win = 1, 32, 2, 8, 8
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    kc = jax.random.normal(ks[1], (b, s, h, hd))
+    vc = jax.random.normal(ks[2], (b, s, h, hd))
+    kv_len = jnp.array([20], jnp.int32)
+    out = A.decode_attention(q, kc, vc, kv_len=kv_len, window=win)
+    # reference: dense attention over exactly the window's slots
+    ref = A.decode_attention(q, kc[:, 12:20], vc[:, 12:20],
+                             kv_len=jnp.array([8], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
