@@ -1,0 +1,105 @@
+"""Bench-regression gate: compare the latest BENCH_<name>.json run against
+the most recent PRIOR comparable run and fail on a large regression.
+
+    python benchmarks/check_regression.py --bench decode \
+        --variants dense_scan,dsa_scan --threshold 0.30
+
+``benchmarks/run.py --smoke`` appends a run to the committed
+BENCH_decode.json, so in CI the latest run is the one the job just
+produced and the prior comparable run is the committed baseline (or a
+downloaded bench-json artifact laid over the checkout).  Runs are only
+comparable when their ``smoke`` flag and backend match, and rows are
+matched by (batch, cache_len, variant).
+
+Absolute tokens/s is machine-dependent (CI runners vary wildly), so the
+gate compares ``speedup_vs_seed`` — each row's throughput normalized by
+the same-run python-loop baseline, which cancels the host speed.  A row
+fails when its normalized speedup drops by more than ``--threshold``
+relative to the baseline run.  Missing baselines pass with a notice (the
+first run on a new configuration has nothing to gate against).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _row_key(r):
+    return (r.get("batch"), r.get("cache_len"), r.get("variant"))
+
+
+def check(bench: str, variants, threshold: float, path: str = "") -> int:
+    path = path or os.path.join(_REPO_ROOT, f"BENCH_{bench}.json")
+    if not os.path.exists(path):
+        print(f"check_regression: {path} missing — nothing to gate")
+        return 0
+    with open(path) as f:
+        runs = json.load(f).get("runs", [])
+    if len(runs) < 2:
+        print(f"check_regression: {len(runs)} run(s) in {path} — "
+              "no prior baseline, passing")
+        return 0
+    new = runs[-1]
+    prior = [r for r in runs[:-1]
+             if r.get("smoke") == new.get("smoke")
+             and r.get("backend") == new.get("backend")]
+    if not prior:
+        print("check_regression: no comparable prior run "
+              f"(smoke={new.get('smoke')}, backend={new.get('backend')}) — "
+              "passing")
+        return 0
+    present = {r.get("variant") for r in new["rows"]}
+    missing = set(variants) - present
+    if missing:
+        # a gated variant vanishing from the bench IS the worst regression
+        print(f"check_regression: gated variant(s) {sorted(missing)} "
+              "missing from the latest run — failing")
+        return 1
+    base = {_row_key(r): r for r in prior[-1]["rows"]}
+    failed = 0
+    checked = 0
+    for r in new["rows"]:
+        if r.get("variant") not in variants:
+            continue
+        b = base.get(_row_key(r))
+        if b is None or "speedup_vs_seed" not in b:
+            continue
+        checked += 1
+        old_s, new_s = b["speedup_vs_seed"], r.get("speedup_vs_seed", 0.0)
+        drop = 1.0 - new_s / max(old_s, 1e-9)
+        status = "FAIL" if drop > threshold else "ok"
+        if drop > threshold:
+            failed += 1
+        print(f"{status}: {r['variant']} b{r.get('batch')}_s"
+              f"{r.get('cache_len')}: speedup {old_s:.2f} -> {new_s:.2f} "
+              f"({-drop * 100:+.1f}%)")
+    if not checked:
+        print("check_regression: no matching rows to compare — passing")
+        return 0
+    if failed:
+        print(f"check_regression: {failed}/{checked} gated rows regressed "
+              f"more than {threshold:.0%}")
+        return 1
+    print(f"check_regression: {checked} rows within {threshold:.0%}")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="decode")
+    ap.add_argument("--variants", default="dense_scan,dsa_scan",
+                    help="comma-separated variant names to gate")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional drop in speedup_vs_seed")
+    ap.add_argument("--path", default="", help="override BENCH json path")
+    args = ap.parse_args()
+    sys.exit(check(args.bench, set(args.variants.split(",")),
+                   args.threshold, args.path))
+
+
+if __name__ == "__main__":
+    main()

@@ -31,15 +31,15 @@ def main() -> None:
     from benchmarks import (dryrun_table, fig7_macs, fig8_energy,
                             fig10_softmax, table1_oracle_sparsity,
                             table3_sensitivity, table4_kernels,
-                            table5_reordering, table_decode)
+                            table5_reordering, table_decode, table_serve)
     from benchmarks import table2_lra_accuracy
     mods = [table1_oracle_sparsity, table2_lra_accuracy, table3_sensitivity,
             fig7_macs, fig8_energy, table4_kernels, fig10_softmax,
-            table5_reordering, table_decode, dryrun_table]
+            table5_reordering, table_decode, table_serve, dryrun_table]
     if args.skip_slow:
         mods.remove(table2_lra_accuracy)
     if args.smoke:
-        mods = [table4_kernels, fig10_softmax, table_decode]
+        mods = [table4_kernels, fig10_softmax, table_decode, table_serve]
     if args.only:
         keys = args.only.split(",")
         mods = [m for m in mods if any(k in m.__name__ for k in keys)]

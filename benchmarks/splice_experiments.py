@@ -1,5 +1,4 @@
 """Splice generated tables into EXPERIMENTS.md at the HTML-comment markers."""
-import re
 
 from benchmarks.make_experiments import baseline_table, dryrun_table, tagged_table
 

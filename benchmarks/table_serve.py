@@ -1,0 +1,128 @@
+"""Serving throughput: continuous batching vs the static-batch engine.
+
+Drives all serving modes with synthetic open-loop Poisson arrival traffic
+(mixed prompt lengths 64-512 and generation lengths — the north-star heavy
+mixed-length workload) on the reduced stablelm_3b family at B=4:
+
+  static_exact     the PR-1 static-batch engine (no n_new bucketing):
+                   batches of 4 in arrival order, n_new = batch max,
+                   recompiles the generation scan for every novel length.
+  static_bucketed  this PR's Engine defaults (pow2 n_new/prompt buckets):
+                   no compile stalls, pays max-of-batch + bucket-rounding
+                   slot waste.
+  continuous       ContinuousEngine: resident 4-slot engine, fused decode
+                   in fixed segments, per-segment retirement + admission.
+
+Methodology — warm on one traffic sample, measure on another: every server
+first serves a seed-A workload (and the continuous engine runs its
+explicit ``warmup``, its whole point being a FIXED precompilable shape
+set), then goodput/latency are measured serving a fresh seed-B workload.
+The bucketed modes meet no new shapes; the exact-length engine meets the
+seed-B batch maxima for the first time and stalls on compilation — the
+failure mode the continuous scheduler exists to remove.  static_exact uses
+a fresh Engine per trial (jit caches are per-instance) so the stall is
+measured each time; warm modes take best-of-N interleaved trials (this
+box's CPU throughput drifts by ~30%).
+
+Emits goodput (delivered new tokens / wall second) and p50/p95 request
+latency per mode, appends to BENCH_serve.json, and derives the
+continuous/static goodput ratios.  Acceptance: continuous >= 2x the
+static-batch engine (static_exact — the engine this repo had before the
+scheduler) under mixed-length Poisson traffic; the steady-state ratio vs
+static_bucketed is reported alongside.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, write_bench_json
+from repro.configs import get_config, reduced
+from repro.inference.engine import Engine
+from repro.inference.scheduler import (ContinuousEngine, StaticBatchServer,
+                                       summarize, synthetic_workload)
+from repro.models.transformer import init_model
+
+
+def _measure(server, workload):
+    results = server.serve(list(workload))
+    wall = (max(r.finish_s for r in results)
+            - min(r.arrival_s for r in results))
+    return summarize(results, wall)
+
+
+def _best(summaries):
+    return max(summaries, key=lambda s: s["goodput_tok_s"])
+
+
+def run(smoke: bool = False) -> list:
+    cfg = reduced(get_config("stablelm_3b"))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    if smoke:
+        slots, seg_len, max_len = 2, 4, 96
+        kw = dict(rate_rps=50.0, prompt_lens=(16, 48), n_new_range=(4, 12),
+                  vocab=cfg.vocab)
+        n_req, trials, exact_trials = 6, 1, 1
+    else:
+        slots, seg_len, max_len = 4, 16, 768
+        kw = dict(rate_rps=100.0, prompt_lens=(64, 512),
+                  n_new_range=(16, 192), vocab=cfg.vocab)
+        n_req, trials, exact_trials = 24, 3, 2
+    wl_warm = synthetic_workload(n_req, seed=1, **kw)
+    wl = synthetic_workload(n_req, seed=0, **kw)
+
+    cont = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
+                            seg_len=seg_len)
+    cont.warmup([len(r.prompt) for r in wl_warm] + list(kw["prompt_lens"]))
+    cont.serve(list(wl_warm))
+    bucketed = StaticBatchServer(Engine(cfg, params, max_len=max_len),
+                                 batch_size=slots)
+    bucketed.serve(list(wl_warm))
+    bucketed.serve(list(wl))      # its finite shape set is precompilable too
+
+    cont_runs, bucketed_runs, exact_runs = [], [], []
+    for _ in range(trials):       # interleave: CPU drift hits modes equally
+        bucketed_runs.append(_measure(bucketed, wl))
+        cont_runs.append(_measure(cont, wl))
+    for _ in range(exact_trials):
+        # fresh engine per trial: the compile stall on each novel batch-max
+        # n_new is the measured effect; seed-A pass warms prefill + its own
+        # lengths only
+        exact = StaticBatchServer(
+            Engine(cfg, params, max_len=max_len, step_buckets=False),
+            batch_size=slots)
+        exact.serve(list(wl_warm))
+        exact_runs.append(_measure(exact, wl))
+
+    s_cont, s_buck, s_exact = (_best(cont_runs), _best(bucketed_runs),
+                               _best(exact_runs))
+    ratio_vs_exact = s_cont["goodput_tok_s"] / max(
+        s_exact["goodput_tok_s"], 1e-9)
+    ratio_vs_bucketed = s_cont["goodput_tok_s"] / max(
+        s_buck["goodput_tok_s"], 1e-9)
+
+    lines, jrows = [], []
+    for mode, s in (("static_exact", s_exact), ("static_bucketed", s_buck),
+                    ("continuous", s_cont)):
+        lines.append(row(f"table_serve/{mode}",
+                         1e6 / max(s["goodput_tok_s"], 1e-9),
+                         f"{s['goodput_tok_s']:.1f}tok/s_p50_"
+                         f"{s['p50_latency_s']:.2f}s_p95_"
+                         f"{s['p95_latency_s']:.2f}s"))
+        jrows.append(dict(s, mode=mode, slots=slots, seg_len=seg_len,
+                          max_len=max_len))
+    jrows.append({"mode": "ratio", "slots": slots, "seg_len": seg_len,
+                  "goodput_ratio_vs_static": round(ratio_vs_exact, 3),
+                  "goodput_ratio_vs_bucketed": round(ratio_vs_bucketed, 3)})
+    path = write_bench_json("serve", jrows,
+                            meta={"model": "stablelm_3b/reduced",
+                                  "smoke": smoke})
+    lines.append(row("table_serve/goodput_ratio", 0.0,
+                     f"{ratio_vs_exact:.2f}x_vs_static_"
+                     f"{ratio_vs_bucketed:.2f}x_vs_bucketed"))
+    lines.append(row("table_serve/json", 0.0, path))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -3,7 +3,6 @@ all three DSA modes, inspect the predicted sparse pattern vs the oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Sequence, Tuple
+from typing import Optional
 
 # ---------------------------------------------------------------------------
 # Sub-configs

@@ -24,8 +24,7 @@ Decode fast path (single-token step vs the KV cache):
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

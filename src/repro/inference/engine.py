@@ -1,32 +1,49 @@
-"""Batched serving engine: prefill + decode with KV/state caches.
+"""Batched serving engine: bucketed prefill + fused decode with KV caches.
 
-Jit-compiles one prefill function per (batch, prompt_len) bucket; requests
-are right-padded into the bucket.  DSA long-context decode is enabled
-through RunFlags(long_context=True) — the prediction-path key cache makes
-decode sub-quadratic (DESIGN.md §4), and ``dsa_mode`` picks the decode
-execution path ("faithful" token top-k, "block" XLA block gather, "kernel"
-fused Pallas gather — see repro.models.attention).
+Prefill bucketing: prompts are right-padded to a power-of-two bucket and
+the prefill jit takes the TRUE length as a traced argument, so one compile
+per (batch, bucket) serves every prompt length in the bucket.  Inside the
+jit the padded logits row at ``length - 1`` is extracted and the cache is
+sanitized (transformer.truncate_cache): pad rows beyond the true length
+are zeroed, the DSA block-score cache ``ktb`` is rebuilt from the masked
+``kt``, and the per-slot ``pos`` is set to the true length — so a bucketed
+prefill leaves the cache in exactly the state an unpadded prefill would
+have (modulo the zeroed tail).  Bucketing is automatically disabled for
+architectures where right-padding is not a no-op for the live state
+(recurrent ssm/rwkv layers, SWA ring buffers, enc-dec).
 
 Decode fast path (``loop="scan"``, the default): the whole generation of
 ``n_new`` tokens after prefill — cache update, DSA prediction, attention,
 and greedy/categorical sampling — is ONE jitted ``jax.lax.scan`` dispatch.
-The first token is sampled from the prefill logits, so exactly ``n_new``
-sampled tokens cost ``n_new - 1`` fused decode steps and there is no
-per-token host round-trip.  Before entering the scan the stacked
-(n_groups, ...) cache is unstacked into per-layer carry leaves
+The first token is sampled from the prefill logits, so ``n_new`` tokens
+need ``n_new - 1`` fused decode steps.  The scan LENGTH is also bucketed
+(power of two, floor 4): varied ``n_new`` traffic hits a small fixed set
+of compiled scans instead of one compile per distinct length; surplus
+steps run and their tokens are truncated.  Before entering the scan the
+stacked (n_groups, ...) cache is unstacked into per-layer carry leaves
 (transformer.unstack_group_caches) so each step's single-token cache write
-is an in-place dynamic_update_slice — the legacy path restacks (copies)
-the full KV cache every step, which dominates once the cache is long.
-``loop="python"`` keeps the legacy per-token loop (one jitted dispatch +
-one host sync per token) as the equivalence / baseline twin; both loops
-thread the PRNG key identically, so they are token-for-token identical at
-a fixed seed.
+is an in-place scatter.  ``loop="python"`` keeps the legacy per-token loop
+(one jitted dispatch + one host sync per token, exactly n_new - 1 steps)
+as the equivalence / baseline twin; both loops thread the PRNG key
+identically, so they are token-for-token identical at a fixed seed.
+
+Recompilation contract — a new XLA compile is triggered only by a new
+(batch, prompt_bucket) prefill shape, a new bucketed scan length, or a new
+loop/dsa_mode/greedy flag; prompt length and n_new WITHIN a bucket, and
+all traced values (true length, tokens, seeds), never recompile.
+
+Throughput accounting: ``decode_steps`` counts decode steps actually
+EXECUTED (the bucketed scan length on the scan path, exactly n_new - 1 on
+the python path) and ``tokens_per_s = B * decode_steps / decode_s`` is the
+pure decode-phase step throughput — the first token comes from prefill
+logits and is not attributed to decode time on either path.  For n_new=1
+no decode step runs and tokens_per_s is reported as 0.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,21 +52,43 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models.attention import RunFlags
 from repro.models.transformer import (decode_step, forward, init_cache,
-                                      unstack_group_caches)
+                                      truncate_cache, unstack_group_caches)
+
+# floor for power-of-two buckets: prompt lengths and scan step counts are
+# rounded up to at least this (tiny shapes all share one compile)
+PROMPT_BUCKET_FLOOR = 16
+STEP_BUCKET_FLOOR = 4
+
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= n (and >= floor).  Static/host-side."""
+    n = max(int(n), floor)
+    return 1 << (n - 1).bit_length()
+
+
+def can_bucket_prompts(cfg: ArchConfig) -> bool:
+    """Right-padded prefill is only sound when pad rows can be masked out
+    afterwards: recurrent state (mamba/rwkv) and SWA ring buffers absorb
+    pad tokens irreversibly, and enc-dec decoders use absolute sinusoidal
+    positions over the padded length."""
+    return (cfg.mamba is None and cfg.rwkv is None
+            and cfg.swa_window == 0 and not cfg.enc_dec)
 
 
 @dataclasses.dataclass
 class GenerationResult:
-    tokens: np.ndarray           # (B, n_new)
+    tokens: np.ndarray           # (B, n_new) delivered tokens
     prefill_s: float
     decode_s: float
-    tokens_per_s: float
+    tokens_per_s: float          # B * decode_steps / decode_s (0 if no steps)
     decode_dispatches: int = 0   # jitted decode dispatches issued
-    decode_steps: int = 0        # decode steps executed (n_new - 1)
+    decode_steps: int = 0        # decode steps EXECUTED (bucketed on scan)
 
 
 def _sample(logits, key, greedy: bool):
-    """Sample the next token from (B, V) logits; returns ((B,1) i32, key)."""
+    """Sample the next token from (B, V) logits; returns ((B,1) i32, key).
+    Greedy never consumes the key — the per-request key chain is therefore
+    identical across engines and the continuous scheduler."""
     if greedy:
         return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), key
     key, sk = jax.random.split(key)
@@ -59,12 +98,17 @@ def _sample(logits, key, greedy: bool):
 class Engine:
     def __init__(self, cfg: ArchConfig, params, *, max_len: int = 2048,
                  long_context: bool = False, dsa_mode: str = "off",
-                 cache_dtype=jnp.float32, loop: str = "scan"):
+                 cache_dtype=jnp.float32, loop: str = "scan",
+                 prompt_buckets: bool = True, step_buckets: bool = True,
+                 pad_id: int = 0):
         assert loop in ("scan", "python"), loop
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.loop = loop
+        self.pad_id = pad_id
+        self.bucket_prompts = prompt_buckets and can_bucket_prompts(cfg)
+        self.bucket_steps = step_buckets
         self.prefill_flags = RunFlags(mode="prefill", dsa_mode=dsa_mode,
                                       with_mse=False,
                                       long_context=long_context)
@@ -73,10 +117,13 @@ class Engine:
                                      long_context=long_context)
         self.cache_dtype = cache_dtype
 
-        def _prefill(params, batch, caches):
+        def _prefill(params, batch, caches, lengths):
             logits, _, caches = forward(params, cfg, self.prefill_flags,
                                         batch, caches=caches)
-            return logits[:, -1:], caches
+            caches = truncate_cache(cfg, caches, lengths)
+            idx = (lengths - 1)[:, None, None]       # per-row last position
+            last = jnp.take_along_axis(logits, idx, axis=1)
+            return last, caches
 
         def _decode(params, tok, caches):
             return decode_step(params, cfg, self.decode_flags, tok, caches)
@@ -101,36 +148,82 @@ class Engine:
                                     static_argnames=("n_steps", "greedy"),
                                     donate_argnums=(2,))
 
-    def generate(self, prompts: np.ndarray, n_new: int,
-                 extras: Optional[Dict[str, np.ndarray]] = None,
-                 greedy: bool = True, seed: int = 0) -> GenerationResult:
-        assert n_new >= 1, "generate() needs n_new >= 1"
-        b, s = prompts.shape
-        caches = init_cache(self.cfg, b, self.max_len, self.decode_flags,
-                            dtype=self.cache_dtype)
+    # -- prefill ------------------------------------------------------------
+
+    def prompt_bucket(self, prompt_len: int) -> int:
+        if not self.bucket_prompts:
+            return prompt_len
+        return min(pow2_bucket(prompt_len, PROMPT_BUCKET_FLOOR), self.max_len)
+
+    def prefill(self, prompts: np.ndarray,
+                extras: Optional[Dict[str, np.ndarray]] = None,
+                cache_len: Optional[int] = None,
+                lengths: Optional[np.ndarray] = None
+                ) -> Tuple[jax.Array, Dict, float]:
+        """Bucketed prefill of a (B, L) prompt batch into a fresh cache.
+
+        Returns (last_logits (B,1,V), caches, prefill_seconds).  The cache
+        is allocated at ``cache_len`` (default: engine max_len) — the
+        continuous scheduler passes the prompt bucket here and zero-extends
+        at slot insertion.  ``lengths`` (B,) gives per-row true prompt
+        lengths for batched admission prefill (rows right-padded to a
+        common width); default: every row is full width.
+        """
+        b, s = np.asarray(prompts).shape
+        padded = self.prompt_bucket(s)
+        assert padded >= s, (padded, s)
+        if padded > s:
+            pad = np.full((b, padded - s), self.pad_id, np.int32)
+            prompts = np.concatenate([np.asarray(prompts, np.int32), pad], 1)
+        if lengths is None:
+            lengths = np.full((b,), s, np.int32)
+        caches = init_cache(self.cfg, b, cache_len or self.max_len,
+                            self.decode_flags, dtype=self.cache_dtype)
         batch = {"tokens": jnp.asarray(prompts)}
         if extras:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
         t0 = time.monotonic()
-        logits, caches = self._prefill(self.params, batch, caches)
-        logits.block_until_ready()
-        t_prefill = time.monotonic() - t0
+        last, caches = self._prefill(self.params, batch, caches,
+                                     jnp.asarray(lengths, jnp.int32))
+        last.block_until_ready()
+        return last, caches, time.monotonic() - t0
+
+    # -- generation ---------------------------------------------------------
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 extras: Optional[Dict[str, np.ndarray]] = None,
+                 greedy: bool = True, seed: int = 0,
+                 lengths: Optional[np.ndarray] = None) -> GenerationResult:
+        """``lengths`` (B,): per-row true prompt lengths for a ragged batch
+        whose rows are RIGHT-padded to a common width — pad rows are zeroed
+        from the cache and each row prefills/decodes at its own depth (the
+        per-slot ``pos``), so every row's generation is what it would be
+        unpadded.  Default: all rows full width."""
+        assert n_new >= 1, "generate() needs n_new >= 1"
+        b = np.asarray(prompts).shape[0]
+        logits, caches, t_prefill = self.prefill(prompts, extras,
+                                                 lengths=lengths)
         key = jax.random.PRNGKey(seed)
         t0 = time.monotonic()
-        # token 1 comes from the prefill logits: n_new tokens cost exactly
-        # n_new - 1 decode steps
+        # token 1 comes from the prefill logits: n_new tokens need exactly
+        # n_new - 1 decode steps (the scan path may execute a few more to
+        # stay on a bucketed scan length; surplus tokens are truncated)
         tok, key = _sample(logits[:, -1], key, greedy)
         dispatches = 0
+        steps_exec = 0
         if self.loop == "scan":
             if n_new > 1:
+                steps = n_new - 1
+                steps_exec = (pow2_bucket(steps, STEP_BUCKET_FLOOR)
+                              if self.bucket_steps else steps)
                 # per-layer cache leaves: in-place slot updates inside the
                 # scan instead of restacking the whole KV cache per step
                 caches = unstack_group_caches(caches)
                 rest, caches = self._decode_loop(self.params, tok, caches,
-                                                 key, n_steps=n_new - 1,
+                                                 key, n_steps=steps_exec,
                                                  greedy=greedy)
                 dispatches = 1
-                toks = jnp.concatenate([tok, rest], axis=1)
+                toks = jnp.concatenate([tok, rest], axis=1)[:, :n_new]
             else:
                 toks = tok
         else:
@@ -140,10 +233,11 @@ class Engine:
                 dispatches += 1
                 tok, key = _sample(logits[:, -1], key, greedy)
                 out.append(np.asarray(tok))
+            steps_exec = n_new - 1
             toks = jnp.concatenate(out, axis=1)
         toks.block_until_ready()
         t_decode = time.monotonic() - t0
-        return GenerationResult(np.asarray(toks), t_prefill, t_decode,
-                                b * n_new / max(t_decode, 1e-9),
+        tps = b * steps_exec / max(t_decode, 1e-9) if steps_exec else 0.0
+        return GenerationResult(np.asarray(toks), t_prefill, t_decode, tps,
                                 decode_dispatches=dispatches,
-                                decode_steps=n_new - 1)
+                                decode_steps=steps_exec)

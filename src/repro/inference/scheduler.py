@@ -1,0 +1,450 @@
+"""Continuous-batching serving layer over the fused decode fast path.
+
+The static ``Engine.generate`` runs ONE fixed batch end-to-end: every slot
+waits for the longest request, and a new batch cannot start until the whole
+previous one retires.  This module keeps a single RESIDENT engine of
+``slots`` cache rows alive instead and streams requests through it:
+
+  request queue   FIFO of submitted requests (an open-loop arrival process
+                  in serving benchmarks); admission requires
+                  prompt_len + n_new <= max_len.
+  slot map        per-slot host state (request id, tokens collected,
+                  remaining budget) mirroring the device-side carries.
+  segments        decode runs in fixed-size jitted segments of ``seg_len``
+                  fused scan steps over ALL slots (active or not).  Between
+                  segments, finished sequences retire and queued requests
+                  are admitted into freed slots.  The segment shape never
+                  changes, so the generation scan COMPILES EXACTLY ONCE.
+  admission       a request is prefilled alone at its power-of-two prompt
+                  bucket (Engine.prefill — padded, sanitized, one compile
+                  per bucket), its first token is sampled from the prefill
+                  logits with its own PRNG chain, and its bucket-sized
+                  cache is inserted into the freed slot: every per-token
+                  cache row beyond the prefill is ZEROED by the insert
+                  (zero-extend + full-slot overwrite), so a slot can never
+                  leak KV/kt/ktb state from a previous tenant.
+  per-slot state  models/attention keeps ``pos`` per slot and takes an
+                  ``active`` mask: inactive slots freeze their cache, drop
+                  their writes, and attend with kv_len = 0.
+
+Token-exactness: a request served here produces exactly the tokens of
+``Engine(cfg, params, max_len=<same>).generate(prompt[None], n_new)`` at
+the same seed — prefill shares the same bucketed code path, the per-slot
+sampling chain replays Engine's B=1 key chain, and DSA block selection
+sees the same cache geometry (selection top-k depends on max_len, so the
+equivalence requires equal ``max_len``).  Pinned by tests/test_scheduler.py.
+
+Recompilation contract: one compile per prompt bucket for prefill and slot
+insertion, one compile total for the decode segment.  Nothing recompiles
+per request, per n_new, or per arrival pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.inference.engine import Engine, _sample
+from repro.models.transformer import decode_step, init_cache, \
+    unstack_group_caches
+
+# cache leaves with a per-token row axis right after the batch axis; their
+# slot row is zero-extended from the prefill bucket to the resident length
+# at insertion (everything beyond the prefill is wiped)
+_SEQ_KEYS = {"k", "v", "kt", "ktb", "c_kv", "k_rope"}
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    n_new: int
+    greedy: bool = True
+    seed: int = 0
+    arrival_s: float = 0.0        # offset from serve() start (open loop)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray            # (n_new,)
+    prompt_len: int
+    n_new: int
+    arrival_s: float
+    admit_s: float
+    finish_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    tok0: int
+    collected: List[np.ndarray]
+    remaining: int
+    admit_s: float
+
+
+def _leaf_name(path) -> Optional[str]:
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            return k.key
+    return None
+
+
+class ContinuousEngine:
+    """Resident continuous-batching engine (see module docstring)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 2048, seg_len: int = 16,
+                 long_context: bool = False, dsa_mode: str = "off",
+                 cache_dtype=jnp.float32, pad_id: int = 0):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.seg_len = seg_len
+        # prefill machinery + flags are shared with the static engine so the
+        # scheduler is token-exact against Engine.generate per request
+        self.engine = Engine(cfg, params, max_len=max_len,
+                             long_context=long_context, dsa_mode=dsa_mode,
+                             cache_dtype=cache_dtype, loop="scan",
+                             pad_id=pad_id)
+        dflags = self.engine.decode_flags
+
+        def _insert_fn(resident, pre, slot, row):
+            """Overwrite resident slot ``slot`` with row ``row`` of a
+            bucket-sized prefill cache, zero-extending per-token rows —
+            the in-place slot reset."""
+            def one(path, res, p):
+                name = _leaf_name(path)
+                leaf = p[row].astype(res.dtype)
+                if name in _SEQ_KEYS and res.shape[1] != p.shape[1]:
+                    full = jnp.zeros(res.shape[1:], res.dtype)
+                    leaf = jax.lax.dynamic_update_slice(
+                        full, leaf, (0,) * leaf.ndim)
+                return res.at[slot].set(leaf)
+            return jax.tree_util.tree_map_with_path(one, resident, pre)
+
+        def _segment_fn(params, tok, caches, keys, active, greedy,
+                        remaining):
+            """seg_len fused decode steps over all slots; inactive slots
+            freeze.  Mirrors Engine._decode_loop's body per active row,
+            with a per-slot PRNG chain (split + categorical per row)."""
+            def body(carry, _):
+                tok, caches, keys, active, remaining = carry
+                logits, caches = decode_step(params, cfg, dflags, tok,
+                                             caches, active=active)
+                lg = logits[:, -1]
+                ks = jax.vmap(jax.random.split)(keys)         # (B, 2, 2)
+                nxt_s = jax.vmap(jax.random.categorical)(ks[:, 1], lg)
+                nxt_g = jnp.argmax(lg, -1)
+                nxt = jnp.where(greedy, nxt_g, nxt_s).astype(jnp.int32)
+                keys = jnp.where(greedy[:, None], keys, ks[:, 0])
+                nxt = jnp.where(active, nxt, tok[:, 0])[:, None]
+                remaining = remaining - active.astype(jnp.int32)
+                active = active & (remaining > 0)
+                return (nxt, caches, keys, active, remaining), nxt[:, 0]
+
+            carry, toks = jax.lax.scan(
+                body, (tok, caches, keys, active, remaining), None,
+                length=seg_len)
+            tok, caches, keys, active, remaining = carry
+            return tok, caches, keys, active, remaining, toks.swapaxes(0, 1)
+
+        self._insert = jax.jit(_insert_fn, donate_argnums=(0,))
+        self._segment = jax.jit(_segment_fn, donate_argnums=(2,))
+
+        self.queue: deque = deque()
+        self.reset()     # resident caches + host mirrors of device carries
+
+    # -- queue / admission --------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        plen = int(np.asarray(req.prompt).shape[-1])
+        if plen + req.n_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + n_new {req.n_new} "
+                f"exceeds max_len {self.max_len}")
+        self.queue.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.slots) if self._slot[i] is None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self._slot)
+
+    def _group_for_admission(self, k: int) -> List[Request]:
+        """Pop up to ``k`` queued requests sharing the head-of-queue's
+        prompt bucket for one shared prefill batch.  Same-bucket only: a
+        row's prefill program (and hence its tokens, bitwise) must match
+        what a solo ``Engine.generate`` at that prompt bucket would run.
+        Skipped other-bucket requests keep their relative order."""
+        first = self.queue.popleft()
+        group = [first]
+        b0 = self.engine.prompt_bucket(len(first.prompt))
+        rest: deque = deque()
+        while self.queue and len(group) < k:
+            r = self.queue.popleft()
+            if self.engine.prompt_bucket(len(r.prompt)) == b0:
+                group.append(r)
+            else:
+                rest.append(r)
+        while rest:
+            self.queue.appendleft(rest.pop())
+        return group
+
+    def _admit_group(self, slots: List[int], group: List[Request],
+                     clock, results: List[RequestResult]) -> None:
+        """Prefill a same-bucket group in ONE padded batch and insert each
+        row into a freed slot.  Two fixed prefill batch shapes per bucket
+        (1 row for singleton groups, ``slots`` rows otherwise — surplus
+        rows repeat a real prompt and are discarded), so admission never
+        recompiles per group; ``warmup`` precompiles both."""
+        bpf = 1 if len(group) == 1 else self.slots
+        bucket = self.engine.prompt_bucket(len(group[0].prompt))
+        mat = np.full((bpf, bucket), self.engine.pad_id, np.int32)
+        lengths = np.empty((bpf,), np.int32)
+        for j in range(bpf):
+            r = group[min(j, len(group) - 1)]
+            p = np.asarray(r.prompt, np.int32)
+            mat[j, :len(p)] = p
+            lengths[j] = len(p)
+        last, pcaches, tp = self.engine.prefill(mat, cache_len=bucket,
+                                                lengths=lengths)
+        self.stats["prefill_s"] += tp
+        self.stats["admitted"] += len(group)
+        now = clock()                     # prefill has completed (blocking)
+        pcaches = unstack_group_caches(pcaches)
+        free = iter(slots)
+        for j, req in enumerate(group):
+            key = jax.random.PRNGKey(req.seed)
+            tok0, key = _sample(last[j:j + 1, -1], key, req.greedy)
+            tok0 = int(np.asarray(tok0)[0, 0])
+            if req.n_new == 1:   # first token IS the whole generation
+                self.stats["useful_tokens"] += 1
+                results.append(RequestResult(
+                    req.rid, np.asarray([tok0], np.int32), len(req.prompt),
+                    req.n_new, req.arrival_s, now, now))
+                continue
+            slot = next(free)
+            self.stats["useful_tokens"] += 1      # the prefill-sampled tok0
+            self._caches = self._insert(self._caches, pcaches,
+                                        jnp.asarray(slot, jnp.int32),
+                                        jnp.asarray(j, jnp.int32))
+            self._tok[slot, 0] = tok0
+            self._keys[slot] = np.asarray(key)
+            self._active[slot] = True
+            self._greedy[slot] = req.greedy
+            self._slot[slot] = _SlotState(req, tok0, [], req.n_new - 1, now)
+
+    def admit_ready(self, clock, results: List[RequestResult]) -> None:
+        """``clock``: zero-arg callable giving seconds since serve start;
+        admission/finish timestamps are sampled AFTER blocking work."""
+        while self.queue:
+            free = self.free_slots()
+            if not free:
+                break
+            group = self._group_for_admission(len(free))
+            self._admit_group(free, group, clock, results)
+
+    # -- warmup / reset ------------------------------------------------------
+
+    def reset(self) -> None:
+        """Zero all slots, the queue, and stats (compiled functions are
+        kept)."""
+        self.stats = {"segments": 0, "useful_tokens": 0, "admitted": 0,
+                      "prefill_s": 0.0}
+        self._caches = unstack_group_caches(
+            init_cache(self.cfg, self.slots, self.max_len,
+                       self.engine.decode_flags,
+                       dtype=self.engine.cache_dtype))
+        self._tok = np.zeros((self.slots, 1), np.int32)
+        self._keys = np.zeros((self.slots, 2), np.uint32)
+        self._active = np.zeros((self.slots,), bool)
+        self._greedy = np.ones((self.slots,), bool)
+        self._slot = [None] * self.slots
+        self.queue.clear()
+
+    def warmup(self, prompt_lens: Sequence[int]) -> None:
+        """Precompile every admission/prefill/segment shape for the prompt
+        buckets covering ``prompt_lens``, then reset.  A serving loop that
+        skips this compiles lazily on first use of each bucket."""
+        buckets = sorted({self.engine.prompt_bucket(int(l))
+                          for l in prompt_lens})
+        sink: List[RequestResult] = []
+        rid = -1
+        for b in buckets:
+            prompt = np.ones((min(b, self.max_len - 2),), np.int32)
+            for n in (1, min(self.slots + 1, self.slots * 2)):
+                group = [Request(rid - j, prompt, 2) for j in range(n)]
+                for r in group:
+                    self.submit(r)
+                while self.has_work():
+                    self.admit_ready(lambda: 0.0, sink)
+                    self.run_segment(lambda: 0.0, sink)
+                rid -= n
+        self.reset()
+
+    # -- decode segments ----------------------------------------------------
+
+    def run_segment(self, clock,
+                    results: List[RequestResult]) -> None:
+        remaining = np.asarray(
+            [s.remaining if s else 0 for s in self._slot], np.int32)
+        tok, caches, keys, active, rem, toks = self._segment(
+            self.engine.params, jnp.asarray(self._tok), self._caches,
+            jnp.asarray(self._keys), jnp.asarray(self._active),
+            jnp.asarray(self._greedy), jnp.asarray(remaining))
+        self._caches = caches
+        self._tok = np.array(tok)           # np.array: writable host copies
+        self._keys = np.array(keys)
+        self._active = np.array(active)
+        toks = np.asarray(toks)                       # (slots, seg_len)
+        now = clock()                     # host copies above synced the step
+        self.stats["segments"] += 1
+        for i, st in enumerate(self._slot):
+            if st is None:
+                continue
+            emitted = min(st.remaining, self.seg_len)
+            st.collected.append(toks[i, :emitted])
+            st.remaining -= emitted
+            self.stats["useful_tokens"] += emitted
+            if st.remaining == 0:
+                seq = np.concatenate(
+                    [np.asarray([st.tok0], np.int32)] + st.collected)
+                results.append(RequestResult(
+                    st.req.rid, seq.astype(np.int32),
+                    int(np.asarray(st.req.prompt).shape[-1]),
+                    st.req.n_new, st.req.arrival_s, st.admit_s, now))
+                self._slot[i] = None          # slot freed; reset at admit
+
+    # -- serving loops ------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
+        """Deterministic drain (tests): queue everything, serve to empty,
+        return {rid: tokens}."""
+        for r in requests:
+            self.submit(r)
+        results: List[RequestResult] = []
+        clock = lambda: 0.0
+        while self.has_work():
+            self.admit_ready(clock, results)
+            if any(s is not None for s in self._slot):
+                self.run_segment(clock, results)
+        return {r.rid: r.tokens for r in results}
+
+    def serve(self, workload: Sequence[Request]) -> List[RequestResult]:
+        """Open-loop wall-clock serving: requests become visible at their
+        ``arrival_s`` offsets; admission happens between segments."""
+        items = sorted(workload, key=lambda r: r.arrival_s)
+        results: List[RequestResult] = []
+        i = 0
+        t0 = time.monotonic()
+        clock = lambda: time.monotonic() - t0
+        while i < len(items) or self.has_work():
+            now = clock()
+            while i < len(items) and items[i].arrival_s <= now:
+                self.submit(items[i])
+                i += 1
+            self.admit_ready(clock, results)
+            if any(s is not None for s in self._slot):
+                self.run_segment(clock, results)
+            elif i < len(items):
+                time.sleep(max(0.0, min(items[i].arrival_s - now, 0.05)))
+        return sorted(results, key=lambda r: r.rid)
+
+
+# ---------------------------------------------------------------------------
+# static-batch baseline + synthetic open-loop workloads
+# ---------------------------------------------------------------------------
+
+
+class StaticBatchServer:
+    """The PR-1 serving pattern as a baseline: requests form fixed batches
+    of ``batch_size`` in arrival order (fill the batch, then go), prompts
+    are left-padded to the batch max, ``Engine.generate`` runs with
+    n_new = batch max, and every request waits for the whole batch — both
+    batch formation and the longest co-tenant gate each request's latency.
+    Batch composition is deterministic (arrival order), so a warmup pass
+    over the same workload compiles exactly the shapes a measured pass
+    uses."""
+
+    def __init__(self, engine: Engine, batch_size: int):
+        self.engine = engine
+        self.batch_size = batch_size
+
+    def serve(self, workload: Sequence[Request]) -> List[RequestResult]:
+        items = sorted(workload, key=lambda r: r.arrival_s)
+        results: List[RequestResult] = []
+        t0 = time.monotonic()
+        for k in range(0, len(items), self.batch_size):
+            batch = items[k:k + self.batch_size]
+            # the batch launches only once its last member has arrived
+            gate = max(r.arrival_s for r in batch)
+            wait = gate - (time.monotonic() - t0)
+            if wait > 0:
+                time.sleep(wait)
+            lmax = max(len(r.prompt) for r in batch)
+            mat = np.full((len(batch), lmax), self.engine.pad_id, np.int32)
+            lengths = np.empty((len(batch),), np.int32)
+            for j, r in enumerate(batch):
+                mat[j, :len(r.prompt)] = r.prompt          # right-pad
+                lengths[j] = len(r.prompt)
+            n = max(r.n_new for r in batch)
+            admit = time.monotonic() - t0
+            # per-row lengths: pad rows are zeroed from the cache and each
+            # row decodes at its own depth, so shorter requests still get
+            # their real generation (not pad-conditioned garbage)
+            res = self.engine.generate(mat, n, lengths=lengths)
+            finish = time.monotonic() - t0
+            for j, r in enumerate(batch):
+                results.append(RequestResult(
+                    r.rid, res.tokens[j, :r.n_new], len(r.prompt), r.n_new,
+                    r.arrival_s, admit, finish))
+        return sorted(results, key=lambda r: r.rid)
+
+
+def synthetic_workload(n_requests: int, *, rate_rps: float,
+                       prompt_lens=(64, 512), n_new_range=(16, 256),
+                       vocab: int = 512, seed: int = 0,
+                       greedy: bool = True) -> List[Request]:
+    """Open-loop Poisson arrival process with mixed request shapes:
+    exponential inter-arrival gaps at ``rate_rps``, prompt lengths uniform
+    over [prompt_lens[0], prompt_lens[1]], n_new uniform over n_new_range."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        n = int(rng.integers(n_new_range[0], n_new_range[1] + 1))
+        prompt = rng.integers(1, vocab - 4, size=(plen,)).astype(np.int32)
+        out.append(Request(rid, prompt, n, greedy=greedy, seed=rid,
+                           arrival_s=t))
+    return out
+
+
+def summarize(results: Sequence[RequestResult],
+              wall_s: float) -> Dict[str, float]:
+    """Serving metrics: goodput (delivered new tokens per wall second) and
+    request latency percentiles."""
+    lats = np.asarray([r.latency_s for r in results])
+    toks = sum(r.n_new for r in results)
+    return {
+        "n_requests": len(results),
+        "delivered_tokens": int(toks),
+        "wall_s": round(wall_s, 3),
+        "goodput_tok_s": round(toks / max(wall_s, 1e-9), 2),
+        "p50_latency_s": round(float(np.percentile(lats, 50)), 3),
+        "p95_latency_s": round(float(np.percentile(lats, 95)), 3),
+        "mean_latency_s": round(float(lats.mean()), 3),
+    }

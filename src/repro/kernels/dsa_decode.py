@@ -15,7 +15,11 @@ Layouts (kernel-native; repro.kernels.ops.dsa_decode adapts model layout):
   k/v:     (B, S, Hkv, hd)    KV cache in its natural engine layout
                               (S padded to a multiple of block_k)
   idx/ok:  (B, nb) int32      selected cache-block indices + validity
-  kv_len:  (B,) int32         valid cache rows (ragged batches)
+  kv_len:  (B,) int32         valid cache rows — ragged per row: batches mix
+                              prompt lengths, and under continuous batching
+                              every resident slot decodes at its own cache
+                              depth (retired/unadmitted slots pass 0 and
+                              contribute no valid attention support)
   out:     (B, Hq, 1, hd)
 
 Grid: (B, Hq, nb); the innermost axis accumulates online softmax and

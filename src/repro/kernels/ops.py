@@ -1,15 +1,18 @@
 """jit'd public wrappers for the Pallas kernels.
 
 ``interpret`` defaults to True off-TPU so the same call sites work in CPU
-tests and on real hardware.  Model code calls these through
-RunFlags(dsa_mode="kernel").
+tests and on real hardware.  Setting the environment variable
+``JAX_PALLAS_INTERPRET=1`` forces interpret mode regardless of backend —
+CI uses it in a dedicated job so kernel-vs-XLA-twin equivalence is
+exercised explicitly on CPU runners rather than relying on the backend
+default.  Model code calls these through RunFlags(dsa_mode="kernel").
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.dsa_attention import dsa_block_sparse_attention
 from repro.kernels.dsa_decode import dsa_decode_gather_attention
@@ -17,6 +20,8 @@ from repro.kernels.wkv6 import wkv6_chunked
 
 
 def _default_interpret() -> bool:
+    if os.environ.get("JAX_PALLAS_INTERPRET", "").lower() in ("1", "true"):
+        return True
     return jax.default_backend() != "tpu"
 
 

@@ -8,18 +8,50 @@
 generated in one fused on-device ``lax.scan`` dispatch.  ``--dsa-mode
 kernel`` additionally routes each decode step through the fused Pallas
 gather kernel (interpret mode off-TPU).
+
+``--continuous`` switches from one static batch to the continuous-batching
+serving loop (repro.inference.scheduler): a synthetic open-loop Poisson
+arrival process of ``--requests`` mixed-length requests at ``--rate``
+req/s streams through a resident ``--slots``-slot engine, decoding in
+fused ``--seg-len``-step segments with per-segment retirement/admission:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b \
+        --reduced --continuous --requests 16 --rate 4 --slots 4
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.inference.engine import Engine
+from repro.inference.scheduler import (ContinuousEngine, summarize,
+                                       synthetic_workload)
 from repro.models.transformer import init_model
+
+
+def _serve_continuous(cfg, args, params, max_len, dsa_on):
+    eng = ContinuousEngine(
+        cfg, params, slots=args.slots or args.batch, max_len=max_len,
+        seg_len=args.seg_len, long_context=dsa_on,
+        dsa_mode=args.dsa_mode if dsa_on else "off")
+    workload = synthetic_workload(
+        args.requests, rate_rps=args.rate,
+        prompt_lens=(max(8, args.prompt_len // 4), args.prompt_len),
+        n_new_range=(max(2, args.new_tokens // 4), args.new_tokens),
+        vocab=cfg.vocab, seed=args.seed)
+    eng.warmup([len(r.prompt) for r in workload])
+    results = eng.serve(workload)
+    s = summarize(results, max(r.finish_s for r in results))
+    print(f"continuous: {s['n_requests']} requests, "
+          f"{s['delivered_tokens']} tokens in {s['wall_s']:.2f} s -> "
+          f"{s['goodput_tok_s']:.1f} tok/s goodput, "
+          f"p50 {s['p50_latency_s']:.2f} s / p95 {s['p95_latency_s']:.2f} s "
+          f"latency ({int(eng.stats['segments'])} segments, "
+          f"{int(eng.stats['admitted'])} admissions)")
+    return results
 
 
 def main(argv=None):
@@ -39,6 +71,17 @@ def main(argv=None):
     ap.add_argument("--loop", default="scan", choices=["scan", "python"],
                     help="fused on-device generation loop vs legacy "
                          "per-token host loop")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching serving loop over an "
+                         "open-loop Poisson arrival process")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="resident slots for --continuous (default: --batch)")
+    ap.add_argument("--seg-len", type=int, default=16,
+                    help="decode steps per fused segment (--continuous)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="synthetic requests to serve (--continuous)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate, requests/s (--continuous)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -48,6 +91,8 @@ def main(argv=None):
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.max_len or (args.prompt_len + args.new_tokens + 16)
     dsa_on = args.dsa and cfg.dsa.enabled
+    if args.continuous:
+        return _serve_continuous(cfg, args, params, max_len, dsa_on)
     eng = Engine(cfg, params, max_len=max_len,
                  long_context=dsa_on,
                  dsa_mode=args.dsa_mode if dsa_on else "off",

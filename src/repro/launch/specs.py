@@ -7,8 +7,7 @@ frame embeddings, llama-vision gets precomputed patch embeddings.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,14 +12,9 @@ straggler watchdog, elastic re-mesh on restart.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpoint import AsyncCheckpointer
 from repro.configs.base import get_config, reduced

@@ -14,6 +14,14 @@ carries the predicted-key cache ``kt`` (B, S, k) AND its block-pooled twin
 is a top-k over S/block_k block scores instead of S token scores.
 ``dsa_mode`` picks the execution path per step:
 
+Continuous batching: the cache position ``pos`` is PER SLOT — a (B,) vector
+rather than a shared scalar — so every batch row decodes at its own cache
+depth (its own RoPE position, write slot, and ragged ``kv_len``).  An
+optional ``active`` (B,) bool gates each slot: inactive slots freeze their
+``pos``, drop their cache writes (out-of-bounds scatter indices, which JAX
+drops), and attend with ``kv_len = 0`` so a retired/unadmitted slot costs no
+attention support and can never leak state into a later tenant.
+
   faithful  token-granularity top-k over the full ``kt`` cache
             (core.attention.dsa_decode_attention — paper-faithful)
   block     block-granularity selection over ``ktb`` + XLA block gather
@@ -28,7 +36,7 @@ each cache slot is written once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -163,15 +171,19 @@ def _dsa_train_mask_and_aux(params, cfg: ArchConfig, flags: RunFlags,
 
 def apply_attention(params, cfg: ArchConfig, flags: RunFlags, x, *,
                     x_kv=None, cache=None, causal=True, use_rope=True,
-                    pos_offset=0):
-    """Returns (out, new_cache, aux).  x: (B, S, d)."""
+                    pos_offset=0, active=None):
+    """Returns (out, new_cache, aux).  x: (B, S, d).
+
+    active: optional (B,) bool slot mask (decode only) — see module
+    docstring; inactive slots freeze their cache and attend nothing.
+    """
     dsa = cfg.dsa
     hd = cfg.resolved_head_dim
     aux: Dict[str, jax.Array] = {}
     cross = x_kv is not None or (cache is not None and "ck" in cache)
 
     if flags.mode == "decode" and not cross:
-        return _apply_decode(params, cfg, flags, x, cache, use_rope)
+        return _apply_decode(params, cfg, flags, x, cache, use_rope, active)
 
     if cross and flags.mode == "decode":   # cross decode: static enc k/v cache
         q = (x @ params["wq"]).reshape(*x.shape[:2], cfg.n_heads, hd)
@@ -236,7 +248,9 @@ def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
     c = {
         "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        # per-slot cache depth: (B,) so continuous batching can decode rows
+        # at independent positions (slot-ragged batches)
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
     if dsa_decode:
         kp = PRED.predictor_k(cfg.d_model, cfg.dsa.sigma)
@@ -251,7 +265,7 @@ def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
 def cache_specs_attention(cache) -> Dict:
     out = {"k": ("batch", "cache_seq", "kv_heads", "qkv"),
            "v": ("batch", "cache_seq", "kv_heads", "qkv"),
-           "pos": ()}
+           "pos": ("batch",)}
     if "kt" in cache:
         out["kt"] = ("batch", "cache_seq", "pred_k")
     if "ktb" in cache:
@@ -278,7 +292,7 @@ def _fill_cache(cfg, flags, cache, k, v, params, x):
         cache["k"].astype(kc.dtype), kc.astype(cache["k"].dtype), 0, axis=1)
     new["v"] = jax.lax.dynamic_update_slice_in_dim(
         cache["v"].astype(vc.dtype), vc.astype(cache["v"].dtype), 0, axis=1)
-    new["pos"] = jnp.asarray(t, jnp.int32)
+    new["pos"] = jnp.full((k.shape[0],), t, jnp.int32)
     if "kt" in cache:
         _, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
         new["kt"] = jax.lax.dynamic_update_slice_in_dim(
@@ -294,25 +308,44 @@ def _fill_cache(cfg, flags, cache, k, v, params, x):
     return new
 
 
-def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
-                  use_rope):
-    """Single-token decode with KV cache (ring buffer under SWA)."""
-    hd = cfg.resolved_head_dim
-    b = x.shape[0]
+def _slot_pos(cache, b):
+    """Per-slot cache depth (B,); tolerates legacy scalar ``pos`` caches."""
     pos = cache["pos"]
+    return jnp.full((b,), pos, jnp.int32) if pos.ndim == 0 else pos
+
+
+def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                  use_rope, active=None):
+    """Single-token decode with KV cache (ring buffer under SWA).
+
+    ``pos`` is per slot, so each batch row decodes at its own depth.  With
+    ``active`` (B,) given, inactive rows freeze: their write slot is pushed
+    out of bounds (JAX drops OOB scatter updates), pos does not advance,
+    and kv_len is zeroed so they contribute no attention support.
+    """
+    b = x.shape[0]
+    pos = _slot_pos(cache, b)                              # (B,)
     q, k, v = _proj_qkv(params, cfg, x)
     if use_rope:
-        p = jnp.full((1,), pos, jnp.int32)
+        p = pos[:, None]                                   # per-row positions
         q = rope(q, p, cfg.rope_theta)
         k = rope(k, p, cfg.rope_theta)
     s = cache["k"].shape[1]
     slot = jnp.where(jnp.asarray(s) > pos, pos, pos % s)   # ring for SWA
-    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    new = dict(cache, k=kc, v=vc, pos=pos + 1)
-    kv_len = jnp.minimum(pos + 1, s) * jnp.ones((b,), jnp.int32)
+    wslot = slot if active is None else jnp.where(active, slot, s)
+    rows = jnp.arange(b)
+    kc = cache["k"].at[rows, wslot].set(k[:, 0].astype(cache["k"].dtype),
+                                        mode="drop")
+    vc = cache["v"].at[rows, wslot].set(v[:, 0].astype(cache["v"].dtype),
+                                        mode="drop")
+    new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
+    new = dict(cache, k=kc, v=vc, pos=new_pos)
+    kv_len = jnp.minimum(pos + 1, s).astype(jnp.int32)
+    if active is not None:
+        kv_len = jnp.where(active, kv_len, 0)
     if "kt" in cache:
-        out = _dsa_decode(params, cfg, flags, x, q, kc, vc, new, slot, kv_len)
+        out = _dsa_decode(params, cfg, flags, x, q, kc, vc, new, wslot,
+                          kv_len)
     else:
         # SWA window semantics: init_cache_attention sizes the ring buffer
         # at s = min(max_len, decode_window, swa_window) slots, so with SWA
@@ -331,19 +364,22 @@ def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
 
 
 def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
-                new, slot, kv_len):
+                new, wslot, kv_len):
     """DSA long-context decode step: update the prediction-path caches,
     select cache rows/blocks from predicted scores, gather + attend.
 
     Mutates ``new`` in place with the updated kt/ktb caches and returns the
     attention output (B, 1, Hq, hd).  Sub-quadratic: O(S*k) ("faithful") or
     O(S/block_k * k) ("block"/"kernel") prediction + O(gathered * d) attend.
+    ``wslot`` is the per-row write slot; out-of-bounds rows (frozen slots)
+    drop their kt/ktb updates.
     """
     dsa = cfg.dsa
-    s = kc.shape[1]
+    b, s = kc.shape[0], kc.shape[1]
+    rows = jnp.arange(b)
     q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
-    new["kt"] = jax.lax.dynamic_update_slice_in_dim(
-        new["kt"], k_t.astype(new["kt"].dtype), slot, axis=1)
+    new["kt"] = new["kt"].at[rows, wslot].set(
+        k_t[:, 0].astype(new["kt"].dtype), mode="drop")
     keep = M.keep_count(s, dsa.sparsity)
     if flags.dsa_mode == "faithful":
         # paper-faithful token granularity: top-k over all S cached scores
@@ -354,12 +390,12 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
     # block granularity (decode fast path): maintain running block sums of
     # kt, score S/block_k blocks, select, then gather whole blocks.  The
     # long-context cache never wraps (module docstring), so the slot being
-    # written was zero and a plain add keeps the block sum exact.
+    # written was zero and a plain scatter-add keeps the block sum exact
+    # (frozen rows carry an OOB block index and drop their add).
     bkd = dsa.block_k
-    jb = slot // bkd
-    old = jax.lax.dynamic_slice_in_dim(new["ktb"], jb, 1, axis=1)
-    new["ktb"] = jax.lax.dynamic_update_slice_in_dim(
-        new["ktb"], old + k_t.astype(new["ktb"].dtype), jb, axis=1)
+    jb = wslot // bkd
+    new["ktb"] = new["ktb"].at[rows, jb].add(
+        k_t[:, 0].astype(new["ktb"].dtype), mode="drop")
     n_kb = new["ktb"].shape[1]
     s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
                        new["ktb"].astype(jnp.float32)) / bkd
@@ -423,12 +459,12 @@ def _mla_qkv(params, cfg: ArchConfig, x, pos):
 
 
 def apply_mla(params, cfg: ArchConfig, flags: RunFlags, x, *, cache=None,
-              pos_offset=0):
+              pos_offset=0, active=None):
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
     if flags.mode == "decode":
-        return _apply_mla_decode(params, cfg, flags, x, cache)
+        return _apply_mla_decode(params, cfg, flags, x, cache, active)
     pos = jnp.arange(s) + pos_offset
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, pos)
     kvb = (c_kv @ params["kv_b"]).reshape(
@@ -463,7 +499,7 @@ def apply_mla(params, cfg: ArchConfig, flags: RunFlags, x, *, cache=None,
         new_cache["k_rope"] = jax.lax.dynamic_update_slice_in_dim(
             cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype),
             0, axis=1)
-        new_cache["pos"] = jnp.asarray(s, jnp.int32)
+        new_cache["pos"] = jnp.full((b,), s, jnp.int32)
     out = out.reshape(b, s, -1) @ params["wo"]
     return out, new_cache, aux
 
@@ -474,30 +510,35 @@ def init_cache_mla(cfg: ArchConfig, batch: int, max_len: int,
     return {
         "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
 def cache_specs_mla(cache) -> Dict:
     return {"c_kv": ("batch", "cache_seq", "lora"),
-            "k_rope": ("batch", "cache_seq", None), "pos": ()}
+            "k_rope": ("batch", "cache_seq", None), "pos": ("batch",)}
 
 
-def _apply_mla_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache):
+def _apply_mla_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                      active=None):
     """Absorbed MLA decode: scores and values live in the latent space,
-    cache stores only (c_kv, k_rope) — 576 floats/token for DSv3."""
+    cache stores only (c_kv, k_rope) — 576 floats/token for DSv3.
+    Per-slot ``pos`` and the ``active`` mask follow _apply_decode."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
-    pos = cache["pos"]
-    p = jnp.full((1,), pos, jnp.int32)
+    pos = _slot_pos(cache, b)                              # (B,)
+    p = pos[:, None]
     q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, cfg, x, p)
-    ckc = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    krc = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope_new[:, :, 0].astype(cache["k_rope"].dtype),
-        pos, axis=1)
-    new = dict(cache, c_kv=ckc, k_rope=krc, pos=pos + 1)
+    s_cache = cache["c_kv"].shape[1]
+    wslot = pos if active is None else jnp.where(active, pos, s_cache)
+    rows = jnp.arange(b)
+    ckc = cache["c_kv"].at[rows, wslot].set(
+        c_kv_new[:, 0].astype(cache["c_kv"].dtype), mode="drop")
+    krc = cache["k_rope"].at[rows, wslot].set(
+        k_rope_new[:, 0, 0].astype(cache["k_rope"].dtype), mode="drop")
+    new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
+    new = dict(cache, c_kv=ckc, k_rope=krc, pos=new_pos)
     # absorb kv_b: W_uk (r, h, nope), W_uv (r, h, v)
     kvb = params["kv_b"].reshape(m.kv_lora_rank, h,
                                  m.qk_nope_head_dim + m.v_head_dim)
@@ -507,8 +548,9 @@ def _apply_mla_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache):
     s_lat = jnp.einsum("bohr,bsr->bhs", q_eff, ckc.astype(q_eff.dtype))
     s_rope = jnp.einsum("bohn,bsn->bhs", q_rope, krc.astype(q_rope.dtype))
     s_all = (s_lat + s_rope) * scale
+    kv_len = pos + 1 if active is None else jnp.where(active, pos + 1, 0)
     kj = jnp.arange(ckc.shape[1])[None, None, :]
-    s_all = jnp.where(kj < pos + 1, s_all, A.NEG)
+    s_all = jnp.where(kj < kv_len[:, None, None], s_all, A.NEG)
     pattn = jax.nn.softmax(s_all.astype(jnp.float32), axis=-1)
     o_lat = jnp.einsum("bhs,bsr->bhr", pattn.astype(ckc.dtype), ckc)
     out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(o_lat.dtype))

@@ -10,12 +10,12 @@ A *group* is the repeating unit scanned over with stacked params:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, is_moe_layer, layer_kind
+from repro.configs.base import ArchConfig, is_moe_layer
 from repro.distributed.sharding import shard
 from repro.models import ssm
 from repro.models.attention import (RunFlags, apply_attention, apply_mla,
@@ -161,8 +161,13 @@ def subblock_cache_specs(cfg: ArchConfig, d: SubBlockDef, cache):
 
 
 def apply_subblock(params, cfg: ArchConfig, flags: RunFlags, d: SubBlockDef,
-                   x, cache=None, enc=None, pos_offset=0):
-    """Pre-norm residual block.  Returns (x, new_cache, aux)."""
+                   x, cache=None, enc=None, pos_offset=0, active=None):
+    """Pre-norm residual block.  Returns (x, new_cache, aux).
+
+    active: optional (B,) bool decode slot mask (continuous batching) —
+    inactive slots freeze their attention caches; recurrent (ssm) state is
+    instead fully overwritten at slot admission.
+    """
     aux: Dict[str, jax.Array] = {}
     new_cache = dict(cache) if cache is not None else None
     h = rms_norm(x, params["norm1"].astype(x.dtype), cfg.norm_eps)
@@ -171,12 +176,12 @@ def apply_subblock(params, cfg: ArchConfig, flags: RunFlags, d: SubBlockDef,
         y, c, a = apply_attention(params["attn"], cfg, flags, h,
                                   cache=None if cache is None else cache["attn"],
                                   causal=d.causal, pos_offset=pos_offset,
-                                  use_rope=not cfg.enc_dec)
+                                  use_rope=not cfg.enc_dec, active=active)
         aux.update(a)
     elif d.kind == "mla":
         y, c, a = apply_mla(params["attn"], cfg, flags, h,
                             cache=None if cache is None else cache["attn"],
-                            pos_offset=pos_offset)
+                            pos_offset=pos_offset, active=active)
         aux.update(a)
     elif d.kind == "mamba":
         y, c = ssm.apply_mamba(params["attn"], cfg, h,
@@ -232,13 +237,13 @@ def init_group(key, cfg: ArchConfig, decoder: bool = True,
 
 
 def apply_group(params, cfg: ArchConfig, flags: RunFlags, defs, x,
-                cache=None, enc=None, pos_offset=0):
+                cache=None, enc=None, pos_offset=0, active=None):
     auxes: Dict[str, jax.Array] = {}
     new_cache = {} if cache is not None else None
     for i, d in enumerate(defs):
         x, c, a = apply_subblock(params[f"b{i}"], cfg, flags, d, x,
                                  cache=None if cache is None else cache[f"b{i}"],
-                                 enc=enc, pos_offset=pos_offset)
+                                 enc=enc, pos_offset=pos_offset, active=active)
         if new_cache is not None:
             new_cache[f"b{i}"] = c
         for k, v in a.items():

@@ -8,7 +8,7 @@ chunked Pallas kernel (repro.kernels.wkv6).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,7 @@ score cache (repro.models.attention module docstring).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -88,14 +87,16 @@ def init_model(key, cfg: ArchConfig):
 
 
 def _scan_groups(gparams, cfg: ArchConfig, flags: RunFlags, defs, x,
-                 caches=None, enc=None, pos_offset=0, decoder=True):
+                 caches=None, enc=None, pos_offset=0, decoder=True,
+                 active=None):
     """lax.scan over stacked groups; python loop fallback for tiny models."""
     def body(carry, xs):
         xc, aux_c = carry
         p = xs if caches is None else xs[0]
         c = None if caches is None else xs[1]
         xc, newc, aux = B.apply_group(p, cfg, flags, defs, xc, cache=c,
-                                      enc=enc, pos_offset=pos_offset)
+                                      enc=enc, pos_offset=pos_offset,
+                                      active=active)
         aux = _norm_aux(aux)
         carry = (xc, {k: aux_c[k] + aux[k] for k in AUX_KEYS})
         return carry, (newc if caches is not None else 0)
@@ -147,8 +148,78 @@ def unstack_group_caches(caches):
     return dict(caches, groups=groups)
 
 
+# Cache leaves holding one row per cached token, keyed by their dict name;
+# value = seq-axis index counted from the END of the leaf's shape, so the
+# same rule covers stacked (n_groups, B, S, ...) and unstacked (B, S, ...)
+# layouts.  ktb is excluded: it is rebuilt from the masked kt.
+_SEQ_AXIS_FROM_END = {"k": 3, "v": 3, "kt": 2, "c_kv": 2, "k_rope": 2}
+
+
+def _mask_rows(a, length, axis_from_end: int):
+    ax = a.ndim - axis_from_end
+    s = a.shape[ax]
+    shape = [1] * a.ndim
+    shape[ax] = s
+    if length.ndim == 0:
+        m = jnp.arange(s) < length
+    else:                      # per-row lengths: batch axis precedes seq
+        m = jnp.arange(s)[None, :] < length[:, None]
+        shape[ax - 1] = a.shape[ax - 1]
+    return a * m.reshape(shape).astype(a.dtype)
+
+
+def truncate_cache(cfg: ArchConfig, caches, length):
+    """Sanitize a freshly prefilled cache to its true prompt length(s).
+
+    Bucketed prefill right-pads the prompt, so cache rows at positions
+    >= length hold pad-token K/V/kt junk.  Dense decode masks them through
+    kv_len, but the DSA block-score cache ``ktb`` is a running SUM per
+    block — pad rows inside a partial block would poison block selection
+    and the in-scan `add` update assumes the next slot is zero.  This
+    zeroes all per-token rows at positions >= length, rebuilds ktb from the
+    masked kt, and resets every per-slot ``pos`` to ``length``.  Recurrent
+    (ssm) and encoder cross-attention leaves are left untouched (prompt
+    bucketing is disabled for those architectures).  ``length`` may be
+    traced, a scalar or per-row (B,) true lengths (batched admission
+    prefill); works on stacked or unstacked group caches.
+    """
+    length = jnp.asarray(length, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for name, v in node.items():
+                if name == "pos":
+                    out[name] = jnp.broadcast_to(length, v.shape).astype(
+                        v.dtype)
+                elif name == "ktb":
+                    continue                    # rebuilt below from kt
+                elif name in _SEQ_AXIS_FROM_END:
+                    out[name] = _mask_rows(v, length,
+                                           _SEQ_AXIS_FROM_END[name])
+                else:
+                    out[name] = walk(v)
+            if "ktb" in node:
+                kt = out["kt"]
+                bkd = cfg.dsa.block_k
+                n_kb = node["ktb"].shape[-2]
+                pad = n_kb * bkd - kt.shape[-2]
+                if pad:
+                    kt = jnp.pad(kt, [(0, 0)] * (kt.ndim - 2)
+                                 + [(0, pad), (0, 0)])
+                out["ktb"] = kt.reshape(*kt.shape[:-2], n_kb, bkd,
+                                        kt.shape[-1]).sum(axis=-2).astype(
+                                            node["ktb"].dtype)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(caches)
+
+
 def _loop_groups_unstacked(gparams, cfg: ArchConfig, flags: RunFlags, defs,
-                           x, caches, enc=None):
+                           x, caches, enc=None, active=None):
     """Python-unrolled twin of _scan_groups over a per-layer cache list
     (decode fast path).  Per-layer param slices are loop-invariant, so XLA
     hoists them out of any enclosing generation scan."""
@@ -156,7 +227,8 @@ def _loop_groups_unstacked(gparams, cfg: ArchConfig, flags: RunFlags, defs,
     new_caches = []
     for i, c in enumerate(caches):
         p = jax.tree.map(lambda a, i=i: a[i], gparams)
-        x, nc, a = B.apply_group(p, cfg, flags, defs, x, cache=c, enc=enc)
+        x, nc, a = B.apply_group(p, cfg, flags, defs, x, cache=c, enc=enc,
+                                 active=active)
         a = _norm_aux(a)
         aux = {k: aux[k] + a[k] for k in AUX_KEYS}
         new_caches.append(nc)
@@ -164,9 +236,12 @@ def _loop_groups_unstacked(gparams, cfg: ArchConfig, flags: RunFlags, defs,
 
 
 def forward(params, cfg: ArchConfig, flags: RunFlags,
-            batch: Dict[str, jax.Array], caches=None):
+            batch: Dict[str, jax.Array], caches=None, active=None):
     """batch: {"tokens": (B,S) int32, ["enc_x"|"img"]: (B,T,d)}.
-    Returns (logits, aux, new_caches)."""
+    Returns (logits, aux, new_caches).
+
+    active: optional (B,) bool decode slot mask — continuous batching
+    freezes inactive slots' caches (see models.attention docstring)."""
     tokens = batch["tokens"]
     dt = jnp.dtype(cfg.dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
@@ -186,7 +261,8 @@ def forward(params, cfg: ArchConfig, flags: RunFlags,
         new_pro_caches = [] if caches is not None else None
         for i, p in enumerate(params["prologue"]):
             c = None if caches is None else caches["prologue"][i]
-            x, nc, a = B.apply_subblock(p, cfg, flags, d, x, cache=c, enc=enc)
+            x, nc, a = B.apply_subblock(p, cfg, flags, d, x, cache=c, enc=enc,
+                                        active=active)
             for k, v in a.items():
                 aux_pro[k] = aux_pro.get(k, 0.0) + v
             if new_pro_caches is not None:
@@ -195,10 +271,11 @@ def forward(params, cfg: ArchConfig, flags: RunFlags,
     gc = None if caches is None else caches["groups"]
     if isinstance(gc, (list, tuple)):       # decode fast path (unstacked)
         x, aux, new_gc = _loop_groups_unstacked(params["groups"], cfg, flags,
-                                                defs, x, gc, enc=enc)
+                                                defs, x, gc, enc=enc,
+                                                active=active)
     else:
         x, aux, new_gc = _scan_groups(params["groups"], cfg, flags, defs, x,
-                                      caches=gc, enc=enc)
+                                      caches=gc, enc=enc, active=active)
     for extra in (aux_pro, aux_enc or {}):
         for k in AUX_KEYS:
             if k in extra:
@@ -217,11 +294,17 @@ def forward(params, cfg: ArchConfig, flags: RunFlags,
 
 
 def decode_step(params, cfg: ArchConfig, flags: RunFlags, tokens, caches,
-                enc: Optional[jax.Array] = None):
-    """tokens: (B, 1).  Returns (logits (B,1,V), new_caches)."""
+                enc: Optional[jax.Array] = None,
+                active: Optional[jax.Array] = None):
+    """tokens: (B, 1).  Returns (logits (B,1,V), new_caches).
+
+    active: optional (B,) bool — continuous-batching slot mask; inactive
+    slots freeze their per-slot cache ``pos``, drop cache writes, and
+    attend with kv_len=0 (their logits are garbage and must be ignored)."""
     assert flags.mode == "decode"
     logits, _, new_caches = forward(params, cfg, flags,
-                                    {"tokens": tokens}, caches=caches)
+                                    {"tokens": tokens}, caches=caches,
+                                    active=active)
     return logits, new_caches
 
 

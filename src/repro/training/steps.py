@@ -6,15 +6,12 @@ with microbatched gradient accumulation (memory control for train_4k).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import shard
 from repro.models.attention import RunFlags
 from repro.models.transformer import decode_step, forward, init_model
 from repro.optim import adamw

@@ -3,7 +3,6 @@
 scan-loop vs legacy python-loop token equivalence, decode dispatch
 accounting, block score-cache consistency, and SWA ring-buffer + window
 semantics at cache wrap-around."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -113,26 +112,51 @@ def test_scan_loop_matches_python_loop(rng, dsa_mode, long_ctx):
 
 
 def test_decode_dispatch_accounting(rng):
-    """Exactly n_new sampled tokens cost n_new - 1 decode steps: one fused
-    dispatch on the scan path, n_new - 1 jitted dispatches on the legacy
-    loop (the seed wasted a final decode whose logits were discarded)."""
+    """decode_steps counts steps EXECUTED: the scan path runs the bucketed
+    scan length (pow2, floor STEP_BUCKET_FLOOR) in one fused dispatch and
+    truncates surplus tokens; the legacy loop runs exactly n_new - 1 jitted
+    dispatches.  Tokens are identical either way."""
+    from repro.inference.engine import STEP_BUCKET_FLOOR, pow2_bucket
     cfg = reduced(get_config("stablelm_3b"))
     params, _ = init_model(rng, cfg)
     prompts = np.ones((2, 16), np.int32)
-    n_new = 8
-    r_scan = Engine(cfg, params, max_len=64, loop="scan").generate(
-        prompts, n_new)
-    r_py = Engine(cfg, params, max_len=64, loop="python").generate(
-        prompts, n_new)
-    assert r_scan.tokens.shape == (2, n_new)
-    assert r_scan.decode_steps == n_new - 1
-    assert r_scan.decode_dispatches == 1
-    assert r_py.decode_steps == n_new - 1
-    assert r_py.decode_dispatches == n_new - 1
-    np.testing.assert_array_equal(r_scan.tokens, r_py.tokens)
+    for n_new in (6, 8):       # off-bucket and exact-bucket step counts
+        r_scan = Engine(cfg, params, max_len=64, loop="scan").generate(
+            prompts, n_new)
+        r_py = Engine(cfg, params, max_len=64, loop="python").generate(
+            prompts, n_new)
+        assert r_scan.tokens.shape == (2, n_new)
+        assert r_scan.decode_steps == pow2_bucket(n_new - 1,
+                                                  STEP_BUCKET_FLOOR)
+        assert r_scan.decode_dispatches == 1
+        assert r_py.decode_steps == n_new - 1
+        assert r_py.decode_dispatches == n_new - 1
+        np.testing.assert_array_equal(r_scan.tokens, r_py.tokens)
+    # step_buckets=False restores the exact scan length
+    r_exact = Engine(cfg, params, max_len=64, loop="scan",
+                     step_buckets=False).generate(prompts, 6)
+    assert r_exact.decode_steps == 5
     # n_new=1 needs no decode dispatch at all
     r_one = Engine(cfg, params, max_len=64, loop="scan").generate(prompts, 1)
     assert r_one.tokens.shape == (2, 1) and r_one.decode_dispatches == 0
+
+
+def test_tokens_per_s_counts_executed_decode_steps(rng):
+    """Satellite regression: tokens_per_s is B * decode_steps / decode_s on
+    BOTH loops — the first token comes from prefill logits and is never
+    attributed to decode time, and the scan path counts its bucketed
+    (executed) steps, not the delivered n_new."""
+    cfg = reduced(get_config("stablelm_3b"))
+    params, _ = init_model(rng, cfg)
+    prompts = np.ones((2, 16), np.int32)
+    for loop in ("scan", "python"):
+        res = Engine(cfg, params, max_len=64, loop=loop).generate(prompts, 6)
+        expect = 2 * res.decode_steps / res.decode_s
+        assert res.tokens_per_s == pytest.approx(expect, rel=1e-6), loop
+        assert res.tokens.shape == (2, 6)
+    # n_new=1: zero decode steps -> rate reported as 0, not inf
+    res = Engine(cfg, params, max_len=64).generate(prompts, 1)
+    assert res.decode_steps == 0 and res.tokens_per_s == 0.0
 
 
 def test_engine_kernel_mode_end_to_end(rng):

@@ -3,7 +3,6 @@ quality vs oracle, mask semantics, quantization trade-off direction."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import masks as M
 from repro.core import prediction as P

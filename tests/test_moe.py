@@ -3,11 +3,10 @@ path equivalence; shared experts; capacity drop behavior."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
-from repro.models.moe import (_expert_ffn, _moe_decode_dense, _moe_local,
-                              _route, apply_moe, init_moe)
+from repro.models.moe import (_moe_decode_dense, _moe_local, _route,
+                              apply_moe, init_moe)
 
 
 def _naive(params, cfg, x2):

@@ -3,9 +3,8 @@ toy scale)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import DSAConfig, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.core import masks as M
 from repro.data.synthetic import DataConfig, make_batches
 from repro.models.attention import RunFlags

@@ -3,10 +3,8 @@ loss goes down, joint MSE objective improves prediction accuracy."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
-from repro.models.attention import RunFlags
 from repro.optim import adamw
 from repro.training import steps as ST
 
