@@ -3,20 +3,25 @@ the most recent PRIOR comparable run and fail on a large regression.
 
     python benchmarks/check_regression.py --bench decode \
         --variants dense_scan,dsa_scan --threshold 0.30
+    python benchmarks/check_regression.py --bench serve --threshold 0.35
 
-``benchmarks/run.py --smoke`` appends a run to the committed
-BENCH_decode.json, so in CI the latest run is the one the job just
-produced and the prior comparable run is the committed baseline (or a
-downloaded bench-json artifact laid over the checkout).  Runs are only
-comparable when their ``smoke`` flag and backend match, and rows are
+``benchmarks/run.py --smoke`` / ``table_serve.py --smoke`` append a run to
+the committed BENCH_*.json, so in CI the latest run is the one the job
+just produced and the prior comparable run is the committed baseline (or
+a downloaded bench-json artifact laid over the checkout).  Runs are only
+comparable when their ``smoke`` flag and backend match; decode rows are
 matched by (batch, cache_len, variant).
 
-Absolute tokens/s is machine-dependent (CI runners vary wildly), so the
-gate compares ``speedup_vs_seed`` — each row's throughput normalized by
-the same-run python-loop baseline, which cancels the host speed.  A row
-fails when its normalized speedup drops by more than ``--threshold``
-relative to the baseline run.  Missing baselines pass with a notice (the
-first run on a new configuration has nothing to gate against).
+Absolute tokens/s is machine-dependent (CI runners vary wildly), so both
+gates compare machine-normalized quantities: decode rows gate
+``speedup_vs_seed`` (throughput normalized by the same-run python-loop
+baseline), and serve runs gate the ``mode == "ratio"`` row — same-run
+goodput ratios of the continuous engine vs the static baselines and of
+chunked vs blocking admission (higher is better), plus the chunked /
+blocking long-prompt p95 latency ratio (lower is better).  A value fails
+when it worsens by more than ``--threshold`` relative to the baseline
+run.  Missing baselines pass with a notice (the first run on a new
+configuration has nothing to gate against).
 """
 from __future__ import annotations
 
@@ -32,17 +37,26 @@ def _row_key(r):
     return (r.get("batch"), r.get("cache_len"), r.get("variant"))
 
 
-def check(bench: str, variants, threshold: float, path: str = "") -> int:
-    path = path or os.path.join(_REPO_ROOT, f"BENCH_{bench}.json")
+# serve-gate metrics on the ratio row: True = higher is better
+_SERVE_RATIO_KEYS = {
+    "goodput_ratio_vs_static": True,
+    "goodput_ratio_vs_bucketed": True,
+    "goodput_ratio_chunked_vs_blocking": True,
+    "goodput_ratio_chunked_vs_blocking_long": True,
+    "p95_ratio_chunked_vs_blocking_long": False,
+}
+
+
+def _latest_and_prior(path: str):
     if not os.path.exists(path):
         print(f"check_regression: {path} missing — nothing to gate")
-        return 0
+        return None, None
     with open(path) as f:
         runs = json.load(f).get("runs", [])
     if len(runs) < 2:
         print(f"check_regression: {len(runs)} run(s) in {path} — "
               "no prior baseline, passing")
-        return 0
+        return None, None
     new = runs[-1]
     prior = [r for r in runs[:-1]
              if r.get("smoke") == new.get("smoke")
@@ -51,6 +65,61 @@ def check(bench: str, variants, threshold: float, path: str = "") -> int:
         print("check_regression: no comparable prior run "
               f"(smoke={new.get('smoke')}, backend={new.get('backend')}) — "
               "passing")
+        return None, None
+    return new, prior[-1]
+
+
+def check_serve(threshold: float, path: str = "") -> int:
+    """Gate the serve bench's same-run ratio row (machine-normalized)."""
+    path = path or os.path.join(_REPO_ROOT, "BENCH_serve.json")
+    new, base = _latest_and_prior(path)
+    if new is None:
+        return 0
+
+    def ratio_row(run):
+        for r in run.get("rows", []):
+            if r.get("mode") == "ratio":
+                return r
+        return {}
+
+    nr, br = ratio_row(new), ratio_row(base)
+    keys = _SERVE_RATIO_KEYS
+    if new.get("smoke"):
+        # smoke-scale static ratios are dominated by static_exact's compile
+        # stall and swing ~50% between identical runs — gate only the
+        # chunked-vs-blocking structural ratio there
+        keys = {"goodput_ratio_chunked_vs_blocking": True}
+    failed = checked = 0
+    for key, higher_better in keys.items():
+        if key not in nr:
+            if key in br:
+                # a ratio the baseline had vanishing IS a regression
+                print(f"FAIL: serve ratio {key} missing from latest run")
+                failed += 1
+            continue          # absent in both (e.g. long keys at smoke)
+        if key not in br:
+            continue          # new metric: nothing to gate against yet
+        checked += 1
+        old_v, new_v = br[key], nr[key]
+        worsened = (1.0 - new_v / max(old_v, 1e-9) if higher_better
+                    else new_v / max(old_v, 1e-9) - 1.0)
+        status = "FAIL" if worsened > threshold else "ok"
+        if worsened > threshold:
+            failed += 1
+        print(f"{status}: serve {key}: {old_v:.3f} -> {new_v:.3f} "
+              f"({-worsened * 100:+.1f}%)")
+    if failed:
+        print(f"check_regression: {failed} serve ratio(s) regressed more "
+              f"than {threshold:.0%}")
+        return 1
+    print(f"check_regression: {checked} serve ratios within {threshold:.0%}")
+    return 0
+
+
+def check(bench: str, variants, threshold: float, path: str = "") -> int:
+    path = path or os.path.join(_REPO_ROOT, f"BENCH_{bench}.json")
+    new, base = _latest_and_prior(path)
+    if new is None:
         return 0
     present = {r.get("variant") for r in new["rows"]}
     missing = set(variants) - present
@@ -59,13 +128,13 @@ def check(bench: str, variants, threshold: float, path: str = "") -> int:
         print(f"check_regression: gated variant(s) {sorted(missing)} "
               "missing from the latest run — failing")
         return 1
-    base = {_row_key(r): r for r in prior[-1]["rows"]}
+    base_rows = {_row_key(r): r for r in base["rows"]}
     failed = 0
     checked = 0
     for r in new["rows"]:
         if r.get("variant") not in variants:
             continue
-        b = base.get(_row_key(r))
+        b = base_rows.get(_row_key(r))
         if b is None or "speedup_vs_seed" not in b:
             continue
         checked += 1
@@ -97,6 +166,8 @@ def main() -> None:
                     help="max allowed fractional drop in speedup_vs_seed")
     ap.add_argument("--path", default="", help="override BENCH json path")
     args = ap.parse_args()
+    if args.bench == "serve":
+        sys.exit(check_serve(args.threshold, args.path))
     sys.exit(check(args.bench, set(args.variants.split(",")),
                    args.threshold, args.path))
 

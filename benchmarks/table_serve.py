@@ -1,37 +1,49 @@
-"""Serving throughput: continuous batching vs the static-batch engine.
+"""Serving throughput: continuous batching (chunked vs blocking admission)
+vs the static-batch engine.
 
 Drives all serving modes with synthetic open-loop Poisson arrival traffic
-(mixed prompt lengths 64-512 and generation lengths — the north-star heavy
-mixed-length workload) on the reduced stablelm_3b family at B=4:
+on the reduced stablelm_3b family:
 
   static_exact     the PR-1 static-batch engine (no n_new bucketing):
                    batches of 4 in arrival order, n_new = batch max,
                    recompiles the generation scan for every novel length.
-  static_bucketed  this PR's Engine defaults (pow2 n_new/prompt buckets):
-                   no compile stalls, pays max-of-batch + bucket-rounding
-                   slot waste.
-  continuous       ContinuousEngine: resident 4-slot engine, fused decode
-                   in fixed segments, per-segment retirement + admission.
+  static_bucketed  pow2 n_new/prompt buckets: no compile stalls, pays
+                   max-of-batch + bucket-rounding slot waste.
+  continuous_blocking
+                   the PR-2 scheduler with LEGACY blocking admission: the
+                   whole padded prompt prefills in one call while every
+                   resident decoder stalls.
+  continuous       the default CHUNKED-admission scheduler: prompts stream
+                   through a bucket-sized staging cache one chunk-step at
+                   a time, interleaved with decode segments — decoders
+                   keep producing during ingestion, and chunking stops at
+                   the prompt's last chunk instead of computing the whole
+                   padded bucket.
+
+Two workloads: the mixed-length north-star traffic (prompts 64-512) and a
+LONG-PROMPT-HEAVY config (prompts near max_len, short generations) where
+admission stall dominates — the case chunked admission exists for.  Each
+continuous row reports ``admission_stall_frac``: the fraction of serving
+wall spent on admission work while at least one resident decoder sat idle
+(before/after evidence for the chunked path).
 
 Methodology — warm on one traffic sample, measure on another: every server
-first serves a seed-A workload (and the continuous engine runs its
-explicit ``warmup``, its whole point being a FIXED precompilable shape
-set), then goodput/latency are measured serving a fresh seed-B workload.
-The bucketed modes meet no new shapes; the exact-length engine meets the
-seed-B batch maxima for the first time and stalls on compilation — the
-failure mode the continuous scheduler exists to remove.  static_exact uses
-a fresh Engine per trial (jit caches are per-instance) so the stall is
-measured each time; warm modes take best-of-N interleaved trials (this
-box's CPU throughput drifts by ~30%).
+first serves a seed-A workload (the continuous engines also run their
+explicit ``warmup``, their whole point being a FIXED precompilable shape
+set), then goodput/latency/TTFT are measured serving a fresh seed-B
+workload.  static_exact uses a fresh Engine per trial (jit caches are
+per-instance) so its compile stall is measured each time; warm modes take
+best-of-N interleaved trials (this box's CPU throughput drifts by ~30%).
 
-Emits goodput (delivered new tokens / wall second) and p50/p95 request
-latency per mode, appends to BENCH_serve.json, and derives the
-continuous/static goodput ratios.  Acceptance: continuous >= 2x the
-static-batch engine (static_exact — the engine this repo had before the
-scheduler) under mixed-length Poisson traffic; the steady-state ratio vs
-static_bucketed is reported alongside.
+Emits goodput / p50 / p95 latency / p95 TTFT per mode, appends to
+BENCH_serve.json, and derives ratio rows: continuous vs both statics
+(trajectory keys from PR 2) plus chunked-vs-blocking goodput and p95
+ratios on both workloads.  Acceptance: chunked >= blocking goodput and
+strictly lower p95 on the long-prompt-heavy workload.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 
@@ -44,10 +56,15 @@ from repro.models.transformer import init_model
 
 
 def _measure(server, workload):
+    stats0 = dict(getattr(server, "stats", {}))
     results = server.serve(list(workload))
     wall = (max(r.finish_s for r in results)
             - min(r.arrival_s for r in results))
-    return summarize(results, wall)
+    s = summarize(results, wall)
+    if stats0:
+        stall = server.stats["stall_s"] - stats0.get("stall_s", 0.0)
+        s["admission_stall_frac"] = round(stall / max(wall, 1e-9), 4)
+    return s
 
 
 def _best(summaries):
@@ -59,30 +76,62 @@ def run(smoke: bool = False) -> list:
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
     if smoke:
         slots, seg_len, max_len = 2, 4, 96
+        max_len_long = 96
         kw = dict(rate_rps=50.0, prompt_lens=(16, 48), n_new_range=(4, 12),
                   vocab=cfg.vocab)
-        n_req, trials, exact_trials = 6, 1, 1
+        kw_long = dict(rate_rps=50.0, prompt_lens=(48, 80),
+                       n_new_range=(3, 8), vocab=cfg.vocab)
+        n_req, n_req_long, trials, exact_trials = 6, 4, 1, 1
     else:
         slots, seg_len, max_len = 4, 16, 768
+        # long-prompt-heavy: prompts near a 2k context, short generations —
+        # admission is the dominant bill (the DSA paper's long-seq case)
+        max_len_long = 2048
         kw = dict(rate_rps=100.0, prompt_lens=(64, 512),
                   n_new_range=(16, 192), vocab=cfg.vocab)
-        n_req, trials, exact_trials = 24, 3, 2
+        kw_long = dict(rate_rps=100.0, prompt_lens=(1100, 1900),
+                       n_new_range=(16, 96), vocab=cfg.vocab)
+        n_req, n_req_long, trials, exact_trials = 24, 10, 3, 2
     wl_warm = synthetic_workload(n_req, seed=1, **kw)
     wl = synthetic_workload(n_req, seed=0, **kw)
+    wl_long_warm = synthetic_workload(n_req_long, seed=3, **kw_long)
+    wl_long = synthetic_workload(n_req_long, seed=2, **kw_long)
 
     cont = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
-                            seg_len=seg_len)
-    cont.warmup([len(r.prompt) for r in wl_warm] + list(kw["prompt_lens"]))
-    cont.serve(list(wl_warm))
+                            seg_len=seg_len)          # chunked (default)
+    assert cont.chunked
+    block = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
+                             seg_len=seg_len, chunked_prefill=False)
+    if max_len_long == max_len:
+        cont_l, block_l = cont, block
+    else:
+        cont_l = ContinuousEngine(cfg, params, slots=slots,
+                                  max_len=max_len_long, seg_len=seg_len)
+        block_l = ContinuousEngine(cfg, params, slots=slots,
+                                   max_len=max_len_long, seg_len=seg_len,
+                                   chunked_prefill=False)
+    mixed_lens = [len(r.prompt) for r in wl_warm] + list(kw["prompt_lens"])
+    long_lens = ([len(r.prompt) for r in wl_long_warm]
+                 + list(kw_long["prompt_lens"]))
+    for eng, lens, wls in ((cont, mixed_lens, wl_warm),
+                           (block, mixed_lens, wl_warm),
+                           (cont_l, long_lens, wl_long_warm),
+                           (block_l, long_lens, wl_long_warm)):
+        eng.warmup(lens)
+        eng.serve(list(wls))
     bucketed = StaticBatchServer(Engine(cfg, params, max_len=max_len),
                                  batch_size=slots)
     bucketed.serve(list(wl_warm))
     bucketed.serve(list(wl))      # its finite shape set is precompilable too
 
-    cont_runs, bucketed_runs, exact_runs = [], [], []
+    cont_runs, block_runs, bucketed_runs, exact_runs = [], [], [], []
+    cont_long_runs, block_long_runs = [], []
     for _ in range(trials):       # interleave: CPU drift hits modes equally
         bucketed_runs.append(_measure(bucketed, wl))
+        block_runs.append(_measure(block, wl))
         cont_runs.append(_measure(cont, wl))
+        block_long_runs.append(_measure(block_l, wl_long))
+        cont_long_runs.append(_measure(cont_l, wl_long))
     for _ in range(exact_trials):
         # fresh engine per trial: the compile stall on each novel batch-max
         # n_new is the measured effect; seed-A pass warms prefill + its own
@@ -93,36 +142,70 @@ def run(smoke: bool = False) -> list:
         exact.serve(list(wl_warm))
         exact_runs.append(_measure(exact, wl))
 
-    s_cont, s_buck, s_exact = (_best(cont_runs), _best(bucketed_runs),
-                               _best(exact_runs))
-    ratio_vs_exact = s_cont["goodput_tok_s"] / max(
-        s_exact["goodput_tok_s"], 1e-9)
-    ratio_vs_bucketed = s_cont["goodput_tok_s"] / max(
-        s_buck["goodput_tok_s"], 1e-9)
+    s_cont, s_block, s_buck, s_exact = (
+        _best(cont_runs), _best(block_runs), _best(bucketed_runs),
+        _best(exact_runs))
+    s_cont_l, s_block_l = _best(cont_long_runs), _best(block_long_runs)
+    ratios = {
+        "goodput_ratio_vs_static":
+            s_cont["goodput_tok_s"] / max(s_exact["goodput_tok_s"], 1e-9),
+        "goodput_ratio_vs_bucketed":
+            s_cont["goodput_tok_s"] / max(s_buck["goodput_tok_s"], 1e-9),
+        "goodput_ratio_chunked_vs_blocking":
+            s_cont["goodput_tok_s"] / max(s_block["goodput_tok_s"], 1e-9),
+    }
+    if not smoke:
+        # long-prompt latencies at smoke scale are single milliseconds —
+        # their ratios are scheduling noise, so only full runs emit them
+        # (and only full runs carry them into the regression gate)
+        ratios.update({
+            "goodput_ratio_chunked_vs_blocking_long":
+                s_cont_l["goodput_tok_s"] / max(s_block_l["goodput_tok_s"],
+                                                1e-9),
+            "p95_ratio_chunked_vs_blocking_long":
+                s_cont_l["p95_latency_s"] / max(s_block_l["p95_latency_s"],
+                                                1e-9),
+        })
 
     lines, jrows = [], []
     for mode, s in (("static_exact", s_exact), ("static_bucketed", s_buck),
-                    ("continuous", s_cont)):
+                    ("continuous_blocking", s_block), ("continuous", s_cont),
+                    ("continuous_blocking_longprompt", s_block_l),
+                    ("continuous_longprompt", s_cont_l)):
+        stall = s.get("admission_stall_frac")
         lines.append(row(f"table_serve/{mode}",
                          1e6 / max(s["goodput_tok_s"], 1e-9),
                          f"{s['goodput_tok_s']:.1f}tok/s_p50_"
                          f"{s['p50_latency_s']:.2f}s_p95_"
-                         f"{s['p95_latency_s']:.2f}s"))
+                         f"{s['p95_latency_s']:.2f}s_ttft95_"
+                         f"{s['p95_ttft_s']:.2f}s"
+                         + (f"_stall_{stall:.0%}" if stall is not None
+                            else "")))
         jrows.append(dict(s, mode=mode, slots=slots, seg_len=seg_len,
-                          max_len=max_len))
-    jrows.append({"mode": "ratio", "slots": slots, "seg_len": seg_len,
-                  "goodput_ratio_vs_static": round(ratio_vs_exact, 3),
-                  "goodput_ratio_vs_bucketed": round(ratio_vs_bucketed, 3)})
+                          max_len=(max_len_long if "longprompt" in mode
+                                   else max_len)))
+    jrows.append(dict({k: round(v, 3) for k, v in ratios.items()},
+                      mode="ratio", slots=slots, seg_len=seg_len))
     path = write_bench_json("serve", jrows,
                             meta={"model": "stablelm_3b/reduced",
                                   "smoke": smoke})
     lines.append(row("table_serve/goodput_ratio", 0.0,
-                     f"{ratio_vs_exact:.2f}x_vs_static_"
-                     f"{ratio_vs_bucketed:.2f}x_vs_bucketed"))
+                     f"{ratios['goodput_ratio_vs_static']:.2f}x_vs_static_"
+                     f"{ratios['goodput_ratio_vs_bucketed']:.2f}x_vs_bucketed"))
+    derived = f"{ratios['goodput_ratio_chunked_vs_blocking']:.2f}x_goodput"
+    if not smoke:
+        derived += (
+            f"_{ratios['goodput_ratio_chunked_vs_blocking_long']:.2f}x_long"
+            f"_p95x{ratios['p95_ratio_chunked_vs_blocking_long']:.2f}_long")
+    lines.append(row("table_serve/chunked_vs_blocking", 0.0, derived))
     lines.append(row("table_serve/json", 0.0, path))
     return lines
 
 
 if __name__ == "__main__":
-    for line in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few requests (CI bench-gate)")
+    args = ap.parse_args()
+    for line in run(smoke=args.smoke):
         print(line)

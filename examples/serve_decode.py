@@ -6,10 +6,17 @@ vs the fused on-device scan loop, dense vs DSA long-context decode
 (interpret mode off-TPU).
 
 Part 2 feeds a synthetic open-loop Poisson arrival process (mixed prompt
-and generation lengths) through the continuous-batching scheduler and the
-static-batch baseline, printing goodput and latency side by side — the
-continuous engine admits/retires requests between fixed decode segments,
-so short requests are not held hostage by long co-tenants.
+and generation lengths) through the static-batch baseline and the
+continuous-batching scheduler under BOTH admission policies, printing
+goodput, latency, and time-to-first-token side by side:
+
+  blocking admission   a new prompt prefills whole while every resident
+                       decoder stalls (the PR-2 behavior),
+  chunked admission    (default) the prompt streams through a staging
+                       cache one chunk-step at a time, interleaved with
+                       decode segments — decoders keep producing tokens
+                       during ingestion and the padded-bucket tail is
+                       never computed.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -47,18 +54,30 @@ def continuous_vs_static(cfg, params):
     workload = synthetic_workload(10, rate_rps=20.0, prompt_lens=(32, 128),
                                   n_new_range=(8, 48), vocab=cfg.vocab,
                                   seed=0)
-    cont = ContinuousEngine(cfg, params, slots=2, max_len=192, seg_len=8)
-    cont.warmup([len(r.prompt) for r in workload])
+    chunked = ContinuousEngine(cfg, params, slots=2, max_len=192, seg_len=8)
+    blocking = ContinuousEngine(cfg, params, slots=2, max_len=192,
+                                seg_len=8, chunked_prefill=False)
+    for eng in (chunked, blocking):
+        eng.warmup([len(r.prompt) for r in workload])
     static = StaticBatchServer(Engine(cfg, params, max_len=192),
                                batch_size=2)
-    for name, server in (("static    ", static), ("continuous", cont)):
+    for name, server in (("static            ", static),
+                         ("continuous/block  ", blocking),
+                         ("continuous/chunked", chunked)):
         server.serve(list(workload))          # warm compile pass
+        stats0 = dict(getattr(server, "stats", {}))
         results = server.serve(list(workload))
-        s = summarize(results, max(r.finish_s for r in results))
+        wall = max(r.finish_s for r in results)
+        s = summarize(results, wall)
+        extra = ""
+        if stats0:
+            stall = server.stats["stall_s"] - stats0.get("stall_s", 0.0)
+            extra = f", {stall / wall:.0%} admission stall"
         print(f"{name}: {s['goodput_tok_s']:.0f} tok/s goodput, "
               f"p50 {s['p50_latency_s']:.2f} s / "
-              f"p95 {s['p95_latency_s']:.2f} s latency "
-              f"({s['n_requests']} requests)")
+              f"p95 {s['p95_latency_s']:.2f} s latency, "
+              f"ttft p95 {s['p95_ttft_s']:.2f} s "
+              f"({s['n_requests']} requests{extra})")
 
 
 def main():

@@ -179,6 +179,89 @@ def dsa_sparse_attention(q, k, v, idx, idx_valid, *, block_q: int,
     return outs.swapaxes(0, 1).reshape(b, lq, hq, hdv)
 
 
+def chunk_attention(q, k_cache, v_cache, q_pos, *,
+                    token_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Chunk-append attention: C fresh queries against a cache prefix.
+
+    q: (B, C, Hq, hd); k/v cache: (B, S, Hkv, hd) — the caller slices the
+    cache to the selection geometry (the prompt bucket) so the softmax
+    reduction shape matches whole-prompt prefill's.  q_pos: (B, C) GLOBAL
+    query positions (per-slot cache depth + intra-chunk index); key row j
+    is visible to query (b, i) iff j <= q_pos[b, i] — the causal mask of a
+    whole-prompt prefill restricted to these query rows, which is what
+    makes chunked prefill token-exact.  token_mask: optional (B, C, S)
+    DSA keep mask applied on top (Eq. 4 style, like dense_attention).
+    """
+    b, c, hq, hd = q.shape
+    s_len = k_cache.shape[1]
+    s = _gqa_scores(q, k_cache)                        # (B,Hkv,G,C,S)
+    kj = jnp.arange(s_len)[None, None, :]
+    m = kj <= q_pos[:, :, None]                        # (B, C, S)
+    s = jnp.where(m[:, None, None], s, NEG)
+    if token_mask is not None:
+        s = jnp.where(token_mask[:, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return _gqa_out(p.astype(v_cache.dtype), v_cache)
+
+
+def dsa_chunk_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
+                              block_q: int, block_k: int,
+                              q_offset: jax.Array,
+                              kv_len: Optional[jax.Array] = None
+                              ) -> jax.Array:
+    """Block-gather DSA chunk prefill — the pure-XLA twin of the fused
+    Pallas kernel in repro.kernels.dsa_chunk_prefill.
+
+    q: (B, C, Hq, hd) chunk queries; k/v cache: (B, S, Hkv, hd); idx/ok:
+    (B, C/block_q, nb) selected cache-block indices per chunk query block
+    (from masks.chunk_block_topk_indices); q_offset: (B,) the chunk's
+    global start position (per-slot cache depth, a block_q multiple);
+    kv_len: optional (B,) valid cache rows (ragged slots).  Per query
+    block this performs exactly the gather + masked softmax of
+    ``dsa_sparse_attention``'s scan step with the query positions shifted
+    by q_offset, so a chunk at depth 0..L reproduces whole-prompt sparse
+    prefill bitwise on its rows.
+    """
+    b, c, hq, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    nb = idx.shape[-1]
+    n_qb = c // block_q
+    n_kb = -(-s_len // block_k)
+    pad = n_kb * block_k - s_len
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k_cache.reshape(b, n_kb, block_k, hkv, hd)
+    vb = v_cache.reshape(b, n_kb, block_k, hkv, hdv)
+    qs = q.reshape(b, n_qb, block_q, hq, hd).swapaxes(0, 1)   # (nQb, B, ...)
+    idx_s = idx.swapaxes(0, 1)                                # (nQb, B, nb)
+    val_s = idx_valid.swapaxes(0, 1)
+    lim = None if kv_len is None else kv_len[:, None, None]
+
+    def step(_, inp):
+        qc, ib, vb_ok, qb_i = inp                 # qc: (B, Bq, Hq, hd)
+        ks = jnp.take_along_axis(kb, ib[:, :, None, None, None], axis=1)
+        vs = jnp.take_along_axis(vb, ib[:, :, None, None, None], axis=1)
+        ks = ks.reshape(b, nb * block_k, hkv, hd)
+        vs = vs.reshape(b, nb * block_k, hkv, hdv)
+        s = _gqa_scores(qc, ks)                   # (B,Hkv,G,Bq,nb*Bk)
+        kpos = (ib[:, :, None] * block_k
+                + jnp.arange(block_k)[None, None, :]).reshape(b, nb * block_k)
+        qpos = (q_offset[:, None] + qb_i * block_q
+                + jnp.arange(block_q)[None, :])             # (B, Bq)
+        ok = vb_ok[:, :, None].repeat(block_k, axis=2).reshape(b, nb * block_k)
+        m = ok[:, None, :] & (kpos[:, None, :] <= qpos[:, :, None])
+        if lim is not None:
+            m = m & (kpos[:, None, :] < lim)
+        s = jnp.where(m[:, None, None], s, NEG)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        return None, _gqa_out(p.astype(v_cache.dtype), vs)
+
+    _, outs = _scan(step, None, (qs, idx_s, val_s, jnp.arange(n_qb)))
+    return outs.swapaxes(0, 1).reshape(b, c, hq, hdv)
+
+
 def decode_attention(q, k_cache, v_cache, *, kv_len: Optional[jax.Array] = None,
                      window: int = 0, pos: Optional[jax.Array] = None
                      ) -> jax.Array:

@@ -124,6 +124,41 @@ def block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
     return idx.astype(jnp.int32), ok
 
 
+def chunk_block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
+                             q_block_offset: jax.Array,
+                             local_blocks: int = 1,
+                             sort: bool = True
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-prefill block selection — ``block_topk_indices`` with the query
+    blocks living at a traced per-row GLOBAL offset.
+
+    block_scores: (B, nQb, nKb) approximate scores of a C-token chunk's
+    query blocks against every cache key block; q_block_offset: (B,) the
+    global index of each row's first chunk query block (its cache depth in
+    blocks).  Validity/local force-keep use the global query-block index
+    ``q_block_offset + i`` so a chunk at depth p selects exactly what the
+    matching rows of a whole-prompt ``block_topk_indices`` would (the
+    chunk-prefill token-exactness contract); kept indices are sorted
+    ascending for contiguous HBM streams like the other builders.
+    """
+    b, n_qb, n_kb = block_scores.shape
+    qi = jnp.arange(n_qb)[None, :, None] + q_block_offset[:, None, None]
+    kj = jnp.arange(n_kb)[None, None, :]
+    valid = kj <= qi                                   # block-causal
+    local = (kj <= qi) & (kj > qi - local_blocks - 1)
+    s = jnp.where(valid, block_scores, NEG)
+    s = jnp.where(local, jnp.inf, s)                   # force-keep local
+    vals, idx = jax.lax.top_k(s, nb_keep)              # (B, nQb, nb_keep)
+    ok = vals > NEG / 2
+    if sort:
+        key = jnp.where(ok, idx, n_kb + 1)
+        order = jnp.argsort(key, axis=-1)
+        idx = jnp.take_along_axis(idx, order, axis=-1)
+        ok = jnp.take_along_axis(ok, order, axis=-1)
+    idx = jnp.where(ok, idx, jnp.maximum(0, jnp.minimum(qi, n_kb - 1)))
+    return idx.astype(jnp.int32), ok
+
+
 def decode_block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
                               kv_len: jax.Array, block_k: int,
                               local: int = 64, sort: bool = True

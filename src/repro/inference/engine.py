@@ -29,8 +29,10 @@ identically, so they are token-for-token identical at a fixed seed.
 
 Recompilation contract — a new XLA compile is triggered only by a new
 (batch, prompt_bucket) prefill shape, a new bucketed scan length, or a new
-loop/dsa_mode/greedy flag; prompt length and n_new WITHIN a bucket, and
-all traced values (true length, tokens, seeds), never recompile.
+loop/dsa_mode/greedy flag (RunFlags is a static jit argument, so per-call
+``dsa_mode`` overrides cache like any other flag); prompt length and n_new
+WITHIN a bucket, and all traced values (true length, tokens, seeds,
+sampling temperature), never recompile.
 
 Throughput accounting: ``decode_steps`` counts decode steps actually
 EXECUTED (the bucketed scan length on the scan path, exactly n_new - 1 on
@@ -75,6 +77,19 @@ def can_bucket_prompts(cfg: ArchConfig) -> bool:
             and cfg.swa_window == 0 and not cfg.enc_dec)
 
 
+def can_chunk_prefill(cfg: ArchConfig, dsa_mode: str = "off") -> bool:
+    """Chunked (interleavable) admission prefill is supported wherever it
+    is token-exact against the whole-prompt bucketed prefill: everything
+    prompt bucketing covers, MINUS MoE archs (prefill routes tokens
+    through the capacity-dispatch path while chunk steps run the
+    decode-dense expert path — same math, different summation order),
+    cross-attn decoders (no image side-channel at admission), and
+    DSA-over-MLA (no predicted-key cache to resume per chunk)."""
+    return (can_bucket_prompts(cfg) and cfg.moe is None
+            and cfg.cross_attn_period == 0
+            and not (cfg.mla is not None and dsa_mode != "off"))
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray           # (B, n_new) delivered tokens
@@ -85,14 +100,17 @@ class GenerationResult:
     decode_steps: int = 0        # decode steps EXECUTED (bucketed on scan)
 
 
-def _sample(logits, key, greedy: bool):
+def _sample(logits, key, greedy: bool, temperature=1.0):
     """Sample the next token from (B, V) logits; returns ((B,1) i32, key).
     Greedy never consumes the key — the per-request key chain is therefore
-    identical across engines and the continuous scheduler."""
+    identical across engines and the continuous scheduler.  ``temperature``
+    scales sampled logits only; 1.0 divides exactly (IEEE), so the default
+    is bit-identical to the unscaled chain."""
     if greedy:
         return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), key
     key, sk = jax.random.split(key)
-    return jax.random.categorical(sk, logits)[:, None].astype(jnp.int32), key
+    return (jax.random.categorical(sk, logits / temperature)[:, None]
+            .astype(jnp.int32), key)
 
 
 class Engine:
@@ -117,36 +135,39 @@ class Engine:
                                      long_context=long_context)
         self.cache_dtype = cache_dtype
 
-        def _prefill(params, batch, caches, lengths):
-            logits, _, caches = forward(params, cfg, self.prefill_flags,
-                                        batch, caches=caches)
+        def _prefill(params, batch, caches, lengths, flags: RunFlags):
+            logits, _, caches = forward(params, cfg, flags, batch,
+                                        caches=caches)
             caches = truncate_cache(cfg, caches, lengths)
             idx = (lengths - 1)[:, None, None]       # per-row last position
             last = jnp.take_along_axis(logits, idx, axis=1)
             return last, caches
 
-        def _decode(params, tok, caches):
-            return decode_step(params, cfg, self.decode_flags, tok, caches)
+        def _decode(params, tok, caches, flags: RunFlags):
+            return decode_step(params, cfg, flags, tok, caches)
 
-        def _decode_loop(params, tok0, caches, key, n_steps: int,
-                         greedy: bool):
+        def _decode_loop(params, tok0, caches, key, temperature,
+                         n_steps: int, greedy: bool, flags: RunFlags):
             """Fused on-device generation: scan n_steps decode steps."""
             def body(carry, _):
                 tok, caches, key = carry
-                logits, caches = decode_step(params, cfg, self.decode_flags,
-                                             tok, caches)
-                nxt, key = _sample(logits[:, -1], key, greedy)
+                logits, caches = decode_step(params, cfg, flags, tok, caches)
+                nxt, key = _sample(logits[:, -1], key, greedy, temperature)
                 return (nxt, caches, key), nxt[:, 0]
 
             (tok, caches, key), toks = jax.lax.scan(
                 body, (tok0, caches, key), None, length=n_steps)
             return toks.swapaxes(0, 1), caches      # (B, n_steps)
 
-        self._prefill = jax.jit(_prefill, donate_argnums=(2,))
-        self._decode = jax.jit(_decode, donate_argnums=(2,))
-        self._decode_loop = jax.jit(_decode_loop,
-                                    static_argnames=("n_steps", "greedy"),
-                                    donate_argnums=(2,))
+        # RunFlags is frozen/hashable, so per-call flag overrides (e.g. a
+        # per-request dsa_mode) jit-cache like any other static argument
+        self._prefill = jax.jit(_prefill, static_argnames=("flags",),
+                                donate_argnums=(2,))
+        self._decode = jax.jit(_decode, static_argnames=("flags",),
+                               donate_argnums=(2,))
+        self._decode_loop = jax.jit(
+            _decode_loop, static_argnames=("n_steps", "greedy", "flags"),
+            donate_argnums=(2,))
 
     # -- prefill ------------------------------------------------------------
 
@@ -155,10 +176,20 @@ class Engine:
             return prompt_len
         return min(pow2_bucket(prompt_len, PROMPT_BUCKET_FLOOR), self.max_len)
 
+    def run_flags(self, mode: str, dsa_mode: Optional[str] = None
+                  ) -> RunFlags:
+        """The engine's prefill/decode flags, optionally with a per-call
+        ``dsa_mode`` override (per-request modes in the scheduler)."""
+        base = self.prefill_flags if mode == "prefill" else self.decode_flags
+        if dsa_mode is None or dsa_mode == base.dsa_mode:
+            return base
+        return dataclasses.replace(base, dsa_mode=dsa_mode)
+
     def prefill(self, prompts: np.ndarray,
                 extras: Optional[Dict[str, np.ndarray]] = None,
                 cache_len: Optional[int] = None,
-                lengths: Optional[np.ndarray] = None
+                lengths: Optional[np.ndarray] = None,
+                dsa_mode: Optional[str] = None
                 ) -> Tuple[jax.Array, Dict, float]:
         """Bucketed prefill of a (B, L) prompt batch into a fresh cache.
 
@@ -167,7 +198,8 @@ class Engine:
         continuous scheduler passes the prompt bucket here and zero-extends
         at slot insertion.  ``lengths`` (B,) gives per-row true prompt
         lengths for batched admission prefill (rows right-padded to a
-        common width); default: every row is full width.
+        common width); default: every row is full width.  ``dsa_mode``
+        overrides the engine's DSA execution path for this call.
         """
         b, s = np.asarray(prompts).shape
         padded = self.prompt_bucket(s)
@@ -184,7 +216,9 @@ class Engine:
             batch.update({k: jnp.asarray(v) for k, v in extras.items()})
         t0 = time.monotonic()
         last, caches = self._prefill(self.params, batch, caches,
-                                     jnp.asarray(lengths, jnp.int32))
+                                     jnp.asarray(lengths, jnp.int32),
+                                     flags=self.run_flags("prefill",
+                                                          dsa_mode))
         last.block_until_ready()
         return last, caches, time.monotonic() - t0
 
@@ -193,22 +227,30 @@ class Engine:
     def generate(self, prompts: np.ndarray, n_new: int,
                  extras: Optional[Dict[str, np.ndarray]] = None,
                  greedy: bool = True, seed: int = 0,
-                 lengths: Optional[np.ndarray] = None) -> GenerationResult:
+                 lengths: Optional[np.ndarray] = None,
+                 temperature: float = 1.0,
+                 dsa_mode: Optional[str] = None) -> GenerationResult:
         """``lengths`` (B,): per-row true prompt lengths for a ragged batch
         whose rows are RIGHT-padded to a common width — pad rows are zeroed
         from the cache and each row prefills/decodes at its own depth (the
         per-slot ``pos``), so every row's generation is what it would be
-        unpadded.  Default: all rows full width."""
+        unpadded.  Default: all rows full width.  ``temperature`` scales
+        sampled (non-greedy) logits; ``dsa_mode`` overrides the engine's
+        DSA execution path for this call (same cache layout required —
+        ``long_context`` stays the engine's)."""
         assert n_new >= 1, "generate() needs n_new >= 1"
         b = np.asarray(prompts).shape[0]
         logits, caches, t_prefill = self.prefill(prompts, extras,
-                                                 lengths=lengths)
+                                                 lengths=lengths,
+                                                 dsa_mode=dsa_mode)
+        dflags = self.run_flags("decode", dsa_mode)
+        temp = jnp.asarray(temperature, jnp.float32)
         key = jax.random.PRNGKey(seed)
         t0 = time.monotonic()
         # token 1 comes from the prefill logits: n_new tokens need exactly
         # n_new - 1 decode steps (the scan path may execute a few more to
         # stay on a bucketed scan length; surplus tokens are truncated)
-        tok, key = _sample(logits[:, -1], key, greedy)
+        tok, key = _sample(logits[:, -1], key, greedy, temp)
         dispatches = 0
         steps_exec = 0
         if self.loop == "scan":
@@ -220,8 +262,9 @@ class Engine:
                 # scan instead of restacking the whole KV cache per step
                 caches = unstack_group_caches(caches)
                 rest, caches = self._decode_loop(self.params, tok, caches,
-                                                 key, n_steps=steps_exec,
-                                                 greedy=greedy)
+                                                 key, temp,
+                                                 n_steps=steps_exec,
+                                                 greedy=greedy, flags=dflags)
                 dispatches = 1
                 toks = jnp.concatenate([tok, rest], axis=1)[:, :n_new]
             else:
@@ -229,9 +272,10 @@ class Engine:
         else:
             out: List[jax.Array] = [tok]
             for _ in range(n_new - 1):
-                logits, caches = self._decode(self.params, tok, caches)
+                logits, caches = self._decode(self.params, tok, caches,
+                                              flags=dflags)
                 dispatches += 1
-                tok, key = _sample(logits[:, -1], key, greedy)
+                tok, key = _sample(logits[:, -1], key, greedy, temp)
                 out.append(np.asarray(tok))
             steps_exec = n_new - 1
             toks = jnp.concatenate(out, axis=1)

@@ -14,44 +14,73 @@ previous one retires.  This module keeps a single RESIDENT engine of
                   fused scan steps over ALL slots (active or not).  Between
                   segments, finished sequences retire and queued requests
                   are admitted into freed slots.  The segment shape never
-                  changes, so the generation scan COMPILES EXACTLY ONCE.
-  admission       a request is prefilled alone at its power-of-two prompt
-                  bucket (Engine.prefill — padded, sanitized, one compile
-                  per bucket), its first token is sampled from the prefill
-                  logits with its own PRNG chain, and its bucket-sized
-                  cache is inserted into the freed slot: every per-token
-                  cache row beyond the prefill is ZEROED by the insert
-                  (zero-extend + full-slot overwrite), so a slot can never
-                  leak KV/kt/ktb state from a previous tenant.
+                  changes, so the generation scan COMPILES EXACTLY ONCE
+                  (per dsa_mode in use — see per-request overrides below).
+  admission       DEFAULT (chunked): an admission group's prompts stream
+                  through a bucket-sized STAGING cache in fixed-size
+                  chunk-steps (transformer.chunk_step), and the serving
+                  loop alternates stall-bounded chunk BURSTS (roughly one
+                  segment's worth of chunk compute, self-tuned from the
+                  running timings; the whole tail when no decoder is
+                  resident) with decode segments, so decoders keep
+                  producing tokens while a long prompt is ingested;
+                  chunking also stops at the last real chunk instead of
+                  computing the full padded bucket.  Each request's first
+                  token is sampled from its final chunk's logits row with
+                  its own PRNG chain, and its staging row is inserted into
+                  its reserved slot IMMEDIATELY (zero-extend + full-slot
+                  overwrite, so a slot can never leak KV/kt/ktb state from
+                  a previous tenant) — it decodes in the next segment even
+                  while co-admitted longer prompts are still chunking.
+                  LEGACY (blocking, ``chunked_prefill=False`` or archs
+                  where chunk steps aren't token-exact —
+                  engine.can_chunk_prefill): the whole padded prompt runs
+                  in one Engine.prefill call while every resident decoder
+                  stalls.
   per-slot state  models/attention keeps ``pos`` per slot and takes an
                   ``active`` mask: inactive slots freeze their cache, drop
                   their writes, and attend with kv_len = 0.
+  per-request     ``Request.temperature`` scales that request's sampled
+                  logits (greedy/seed were already per request), and
+                  ``Request.dsa_mode`` overrides the engine's DSA decode
+                  path.  Modes are STATIC code paths, so segments are
+                  mode-affine: one segment runs one dsa_mode, admission
+                  only co-schedules same-mode requests, and the engine
+                  switches modes when it drains idle (one extra segment /
+                  prefill compile per distinct mode used).
 
 Token-exactness: a request served here produces exactly the tokens of
-``Engine(cfg, params, max_len=<same>).generate(prompt[None], n_new)`` at
-the same seed — prefill shares the same bucketed code path, the per-slot
-sampling chain replays Engine's B=1 key chain, and DSA block selection
-sees the same cache geometry (selection top-k depends on max_len, so the
-equivalence requires equal ``max_len``).  Pinned by tests/test_scheduler.py.
+``Engine(cfg, params, max_len=<same>).generate(prompt[None], n_new,
+temperature=..., dsa_mode=...)`` at the same seed — chunked admission
+reproduces the bucketed whole-prompt prefill bitwise (same geometry: the
+staging cache IS the prompt bucket), the per-slot sampling chain replays
+Engine's B=1 key chain, and DSA block selection sees the same cache
+geometry (selection top-k depends on max_len, so the equivalence requires
+equal ``max_len``).  Pinned by tests/test_scheduler.py.
 
-Recompilation contract: one compile per prompt bucket for prefill and slot
-insertion, one compile total for the decode segment.  Nothing recompiles
-per request, per n_new, or per arrival pattern.
+Recompilation contract: one compile per prompt bucket for the chunk step
+(at admission widths 1 and ``slots``), slot insertion, and the legacy
+prefill; one compile total for the decode segment.  Per-request dsa_mode
+overrides add one compile per DISTINCT MODE actually used for the
+segment/chunk/prefill programs.  Nothing recompiles per request, per
+n_new, per temperature, per arrival pattern, or per burst size.
+``warmup`` precompiles the fixed chunk-shape set for its prompt buckets.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.inference.engine import Engine, _sample
-from repro.models.transformer import decode_step, init_cache, \
+from repro.inference.engine import Engine, _sample, can_chunk_prefill, \
+    pow2_bucket
+from repro.models.transformer import chunk_step, decode_step, init_cache, \
     unstack_group_caches
 
 # cache leaves with a per-token row axis right after the batch axis; their
@@ -68,6 +97,8 @@ class Request:
     greedy: bool = True
     seed: int = 0
     arrival_s: float = 0.0        # offset from serve() start (open loop)
+    temperature: float = 1.0      # sampled (non-greedy) logit scale
+    dsa_mode: Optional[str] = None  # override the engine's DSA decode path
 
 
 @dataclasses.dataclass
@@ -79,10 +110,15 @@ class RequestResult:
     arrival_s: float
     admit_s: float
     finish_s: float
+    first_token_s: float = 0.0    # when token 0 was sampled (TTFT anchor)
 
     @property
     def latency_s(self) -> float:
         return self.finish_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
 
 
 @dataclasses.dataclass
@@ -92,6 +128,24 @@ class _SlotState:
     collected: List[np.ndarray]
     remaining: int
     admit_s: float
+    first_token_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _PrefillGroup:
+    """An in-flight chunked admission: one same-bucket same-mode group
+    streaming through a bucket-sized staging cache, one chunk per serving
+    iteration."""
+    reqs: List[Request]
+    slots: List[Optional[int]]    # reserved resident slot per member
+    bucket: int
+    chunk: int                    # chunk width (min(chunk_tokens, bucket))
+    mode: str                     # effective dsa_mode
+    caches: object                # staging cache (unstacked, bpf rows)
+    lengths: np.ndarray           # (bpf,) true prompt length per row
+    j: int = 0                    # next chunk index
+    n_chunks: int = 0
+    mat: Optional[np.ndarray] = None   # (bpf, n_chunks*chunk) padded tokens
 
 
 def _leaf_name(path) -> Optional[str]:
@@ -107,7 +161,9 @@ class ContinuousEngine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_len: int = 2048, seg_len: int = 16,
                  long_context: bool = False, dsa_mode: str = "off",
-                 cache_dtype=jnp.float32, pad_id: int = 0):
+                 cache_dtype=jnp.float32, pad_id: int = 0,
+                 chunked_prefill: Optional[bool] = None,
+                 chunk_tokens: int = 64):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -118,7 +174,22 @@ class ContinuousEngine:
                              long_context=long_context, dsa_mode=dsa_mode,
                              cache_dtype=cache_dtype, loop="scan",
                              pad_id=pad_id)
-        dflags = self.engine.decode_flags
+        # chunked admission is the default wherever it is token-exact; the
+        # legacy whole-prompt blocking prefill stays for ssm/swa/enc-dec
+        # (where bucketing already auto-disables) and moe/vision archs
+        chunk_ok = self.engine.bucket_prompts and can_chunk_prefill(
+            cfg, dsa_mode)
+        self.chunked = chunk_ok if chunked_prefill is None else (
+            chunked_prefill and chunk_ok)
+        # chunk width: pow2, and block-aligned so chunk widths/starts stay
+        # block_q/block_k multiples on the DSA paths (a chunk wider than a
+        # small prompt bucket is fine: the overhang rows drop out of
+        # bounds, the geometry stays the bucket's)
+        self._chunk_floor = 16
+        if cfg.dsa.enabled:
+            self._chunk_floor = max(self._chunk_floor, cfg.dsa.block_q,
+                                    cfg.dsa.block_k)
+        self.chunk_tokens = pow2_bucket(chunk_tokens, self._chunk_floor)
 
         def _insert_fn(resident, pre, slot, row):
             """Overwrite resident slot ``slot`` with row ``row`` of a
@@ -134,18 +205,21 @@ class ContinuousEngine:
                 return res.at[slot].set(leaf)
             return jax.tree_util.tree_map_with_path(one, resident, pre)
 
-        def _segment_fn(params, tok, caches, keys, active, greedy,
-                        remaining):
+        def _segment_fn(params, tok, caches, keys, active, greedy, temps,
+                        remaining, flags):
             """seg_len fused decode steps over all slots; inactive slots
             freeze.  Mirrors Engine._decode_loop's body per active row,
-            with a per-slot PRNG chain (split + categorical per row)."""
+            with a per-slot PRNG chain (split + categorical per row) and
+            per-slot sampling temperatures (1.0 divides exactly, so the
+            default is bit-identical to the unscaled chain)."""
             def body(carry, _):
                 tok, caches, keys, active, remaining = carry
-                logits, caches = decode_step(params, cfg, dflags, tok,
+                logits, caches = decode_step(params, cfg, flags, tok,
                                              caches, active=active)
                 lg = logits[:, -1]
                 ks = jax.vmap(jax.random.split)(keys)         # (B, 2, 2)
-                nxt_s = jax.vmap(jax.random.categorical)(ks[:, 1], lg)
+                nxt_s = jax.vmap(jax.random.categorical)(
+                    ks[:, 1], lg / temps[:, None])
                 nxt_g = jnp.argmax(lg, -1)
                 nxt = jnp.where(greedy, nxt_g, nxt_s).astype(jnp.int32)
                 keys = jnp.where(greedy[:, None], keys, ks[:, 0])
@@ -160,13 +234,40 @@ class ContinuousEngine:
             tok, caches, keys, active, remaining = carry
             return tok, caches, keys, active, remaining, toks.swapaxes(0, 1)
 
+        def _chunk_fn(params, caches, toks, chunk_len, active, flags,
+                      sel_len):
+            """One chunk-step of admission prefill over the staging cache;
+            returns each row's logits at its last real chunk token (the
+            prefill-logits row when the chunk is the prompt's last).
+            ``sel_len`` is the prompt bucket — the selection/attention
+            geometry (the physical DSA cache may be block-rounded wider)."""
+            logits, caches = chunk_step(params, cfg, flags, toks, caches,
+                                        chunk_len, active=active,
+                                        sel_len=sel_len)
+            idx = (jnp.maximum(chunk_len, 1) - 1)[:, None, None]
+            last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+            return last, caches
+
         self._insert = jax.jit(_insert_fn, donate_argnums=(0,))
-        self._segment = jax.jit(_segment_fn, donate_argnums=(2,))
+        self._segment = jax.jit(_segment_fn, static_argnames=("flags",),
+                                donate_argnums=(2,))
+        self._chunk = jax.jit(_chunk_fn,
+                              static_argnames=("flags", "sel_len"),
+                              donate_argnums=(1,))
 
         self.queue: deque = deque()
         self.reset()     # resident caches + host mirrors of device carries
 
     # -- queue / admission --------------------------------------------------
+
+    def _eff_mode(self, req: Request) -> str:
+        return (req.dsa_mode if req.dsa_mode is not None
+                else self.engine.decode_flags.dsa_mode)
+
+    def _flags(self, mode: str):
+        """Decode-segment / chunk-step flags for a dsa_mode (static —
+        hashable RunFlags, one compiled instance per mode in use)."""
+        return self.engine.run_flags("decode", mode)
 
     def submit(self, req: Request) -> None:
         plen = int(np.asarray(req.prompt).shape[-1])
@@ -174,27 +275,58 @@ class ContinuousEngine:
             raise ValueError(
                 f"request {req.rid}: prompt {plen} + n_new {req.n_new} "
                 f"exceeds max_len {self.max_len}")
+        if req.temperature <= 0.0:
+            raise ValueError(f"request {req.rid}: temperature must be > 0")
+        if req.dsa_mode is not None:
+            allowed = ({"off", "faithful", "block", "kernel"}
+                       if self.engine.decode_flags.long_context
+                       else {self.engine.decode_flags.dsa_mode})
+            if req.dsa_mode not in allowed:
+                raise ValueError(
+                    f"request {req.rid}: dsa_mode {req.dsa_mode!r} needs a "
+                    f"cache layout this engine doesn't hold ({allowed})")
         self.queue.append(req)
 
     def free_slots(self) -> List[int]:
-        return [i for i in range(self.slots) if self._slot[i] is None]
+        return [i for i in range(self.slots)
+                if self._slot[i] is None and i not in self._reserved]
 
     def has_work(self) -> bool:
-        return bool(self.queue) or any(s is not None for s in self._slot)
+        return (bool(self.queue) or self._pf is not None
+                or any(s is not None for s in self._slot))
 
-    def _group_for_admission(self, k: int) -> List[Request]:
-        """Pop up to ``k`` queued requests sharing the head-of-queue's
-        prompt bucket for one shared prefill batch.  Same-bucket only: a
-        row's prefill program (and hence its tokens, bitwise) must match
-        what a solo ``Engine.generate`` at that prompt bucket would run.
-        Skipped other-bucket requests keep their relative order."""
+    def _next_admissible(self) -> Optional[int]:
+        """Queue index of the first request admissible under the current
+        segment mode (any request when the engine is idle) — segments are
+        mode-affine, so other-mode requests wait for an idle drain."""
+        if not self.queue:
+            return None
+        if self._pf is None and not any(s is not None for s in self._slot):
+            self._cur_mode = None         # idle: free to switch dsa_mode
+        if self._cur_mode is None:
+            return 0
+        for i, r in enumerate(self.queue):
+            if self._eff_mode(r) == self._cur_mode:
+                return i
+        return None
+
+    def _group_for_admission(self, k: int, anchor: int) -> List[Request]:
+        """Pop up to ``k`` queued requests sharing the anchor request's
+        (prompt bucket, dsa_mode) for one shared prefill batch.
+        Same-bucket only: a row's prefill program (and hence its tokens,
+        bitwise) must match what a solo ``Engine.generate`` at that prompt
+        bucket would run.  Skipped requests keep their relative order."""
+        rest: deque = deque()
+        for _ in range(anchor):
+            rest.append(self.queue.popleft())
         first = self.queue.popleft()
         group = [first]
         b0 = self.engine.prompt_bucket(len(first.prompt))
-        rest: deque = deque()
+        m0 = self._eff_mode(first)
         while self.queue and len(group) < k:
             r = self.queue.popleft()
-            if self.engine.prompt_bucket(len(r.prompt)) == b0:
+            if (self.engine.prompt_bucket(len(r.prompt)) == b0
+                    and self._eff_mode(r) == m0):
                 group.append(r)
             else:
                 rest.append(r)
@@ -202,13 +334,33 @@ class ContinuousEngine:
             self.queue.appendleft(rest.pop())
         return group
 
-    def _admit_group(self, slots: List[int], group: List[Request],
+    def _sample_tok0(self, last_row, req: Request):
+        """Sample a request's first token from its prefill logits row with
+        its own PRNG chain (replays Engine.generate's chain bitwise)."""
+        key = jax.random.PRNGKey(req.seed)
+        tok0, key = _sample(last_row, key, req.greedy,
+                            jnp.asarray(req.temperature, jnp.float32))
+        return int(np.asarray(tok0)[0, 0]), np.asarray(key)
+
+    def _activate(self, slot: int, req: Request, tok0: int, key,
+                  admit_s: float, first_s: float) -> None:
+        self._tok[slot, 0] = tok0
+        self._keys[slot] = key
+        self._active[slot] = True
+        self._greedy[slot] = req.greedy
+        self._temps[slot] = req.temperature
+        self._slot[slot] = _SlotState(req, tok0, [], req.n_new - 1, admit_s,
+                                      first_token_s=first_s)
+
+    def _admit_group(self, slots: List[int], group: List[Request], mode,
                      clock, results: List[RequestResult]) -> None:
-        """Prefill a same-bucket group in ONE padded batch and insert each
-        row into a freed slot.  Two fixed prefill batch shapes per bucket
-        (1 row for singleton groups, ``slots`` rows otherwise — surplus
-        rows repeat a real prompt and are discarded), so admission never
-        recompiles per group; ``warmup`` precompiles both."""
+        """LEGACY blocking admission: prefill a same-bucket group in ONE
+        padded whole-prompt batch and insert each row into a freed slot.
+        Two fixed prefill batch shapes per bucket (1 row for singleton
+        groups, ``slots`` rows otherwise — surplus rows repeat a real
+        prompt and are discarded), so admission never recompiles per
+        group; ``warmup`` precompiles both.  Every resident decoder stalls
+        for the whole prompt — the cost the chunked path removes."""
         bpf = 1 if len(group) == 1 else self.slots
         bucket = self.engine.prompt_bucket(len(group[0].prompt))
         mat = np.full((bpf, bucket), self.engine.pad_id, np.int32)
@@ -219,42 +371,168 @@ class ContinuousEngine:
             mat[j, :len(p)] = p
             lengths[j] = len(p)
         last, pcaches, tp = self.engine.prefill(mat, cache_len=bucket,
-                                                lengths=lengths)
+                                                lengths=lengths,
+                                                dsa_mode=mode)
         self.stats["prefill_s"] += tp
+        if any(s is not None for s in self._slot):
+            self.stats["stall_s"] += tp   # resident decoders sat idle
         self.stats["admitted"] += len(group)
         now = clock()                     # prefill has completed (blocking)
         pcaches = unstack_group_caches(pcaches)
         free = iter(slots)
         for j, req in enumerate(group):
-            key = jax.random.PRNGKey(req.seed)
-            tok0, key = _sample(last[j:j + 1, -1], key, req.greedy)
-            tok0 = int(np.asarray(tok0)[0, 0])
+            tok0, key = self._sample_tok0(last[j:j + 1, -1], req)
+            self.stats["useful_tokens"] += 1      # the prefill-sampled tok0
             if req.n_new == 1:   # first token IS the whole generation
-                self.stats["useful_tokens"] += 1
                 results.append(RequestResult(
                     req.rid, np.asarray([tok0], np.int32), len(req.prompt),
-                    req.n_new, req.arrival_s, now, now))
+                    req.n_new, req.arrival_s, now, now, first_token_s=now))
                 continue
             slot = next(free)
-            self.stats["useful_tokens"] += 1      # the prefill-sampled tok0
             self._caches = self._insert(self._caches, pcaches,
                                         jnp.asarray(slot, jnp.int32),
                                         jnp.asarray(j, jnp.int32))
-            self._tok[slot, 0] = tok0
-            self._keys[slot] = np.asarray(key)
-            self._active[slot] = True
-            self._greedy[slot] = req.greedy
-            self._slot[slot] = _SlotState(req, tok0, [], req.n_new - 1, now)
+            self._activate(slot, req, tok0, key, now, now)
+
+    # -- chunked admission (default) ----------------------------------------
+
+    def _start_chunked_group(self, free: List[int], group: List[Request],
+                             mode: str) -> None:
+        """Begin streaming a same-bucket group through a fresh bucket-sized
+        staging cache; resident slots are reserved now, filled at group
+        completion.  Two staging widths per bucket (1 / ``slots``), like
+        the legacy path, so the chunk program set stays fixed."""
+        bucket = self.engine.prompt_bucket(len(group[0].prompt))
+        c = min(self.chunk_tokens, pow2_bucket(bucket, self._chunk_floor))
+        bpf = 1 if len(group) == 1 else self.slots
+        n_chunks = max(1, -(-max(len(r.prompt) for r in group) // c))
+        mat = np.full((bpf, n_chunks * c), self.engine.pad_id, np.int32)
+        lengths = np.empty((bpf,), np.int32)
+        for j in range(bpf):
+            r = group[min(j, len(group) - 1)]
+            p = np.asarray(r.prompt, np.int32)
+            mat[j, :len(p)] = p
+            lengths[j] = len(p)
+        caches = unstack_group_caches(
+            init_cache(self.cfg, bpf, bucket, self.engine.decode_flags,
+                       dtype=self.engine.cache_dtype))
+        slots = []
+        it = iter(free)
+        for r in group:
+            slot = next(it) if r.n_new > 1 else None
+            if slot is not None:
+                self._reserved.add(slot)
+            slots.append(slot)
+        self._pf = _PrefillGroup(group, slots, bucket, c, mode, caches,
+                                 lengths, j=0, n_chunks=n_chunks, mat=mat)
+        self.stats["admitted"] += len(group)
+
+    def _chunk_burst(self) -> int:
+        """How many chunks to run before yielding to a decode segment.
+        With no resident decoder there is no one to yield to — drain the
+        whole group.  Otherwise bound the decoder stall at roughly ONE
+        segment's worth of chunk compute, self-tuned from the running
+        chunk/segment timings (a segment is a fused seg_len-step scan, so
+        one chunk per segment would stretch ingestion by the
+        segment/chunk cost ratio while the reserved slots idle)."""
+        pf = self._pf
+        remaining = pf.n_chunks - pf.j
+        if not any(s is not None for s in self._slot):
+            return remaining
+        st = self.stats
+        if st["chunks"] and st["segments"] and st["chunk_s"] > 0:
+            per_chunk = st["chunk_s"] / st["chunks"]
+            per_seg = st["segment_s"] / st["segments"]
+            return int(np.clip(round(per_seg / max(per_chunk, 1e-9)),
+                               1, remaining))
+        return 1                  # cold start: no timings yet
+
+    def step_prefill(self, clock, results: List[RequestResult]) -> None:
+        """Run a stall-bounded BURST of chunks of the in-flight admission
+        group (no-op without one).  The serving loop alternates this with
+        decode segments, so resident decoders keep producing tokens while
+        a long prompt is ingested.  A member whose prompt completes
+        mid-group is inserted and activated IMMEDIATELY — it decodes in
+        the very next segment while its co-admitted longer prompts are
+        still chunking.  Chunk dispatches only sync the host on a
+        member's final chunk (sampling its first token); intermediate
+        chunks pipeline asynchronously."""
+        pf = self._pf
+        if pf is None:
+            return
+        bpf = pf.lengths.shape[0]
+        active = jnp.ones((bpf,), bool)
+        flags = self._flags(pf.mode)
+        stalled = any(st is not None for st in self._slot)
+        t0 = time.monotonic()
+        synced = False
+        burst = self._chunk_burst()
+        for _ in range(burst):
+            j = pf.j
+            toks = pf.mat[:, j * pf.chunk:(j + 1) * pf.chunk]
+            chunk_len = np.clip(pf.lengths - j * pf.chunk, 0,
+                                pf.chunk).astype(np.int32)
+            last, pf.caches = self._chunk(
+                self.engine.params, pf.caches, jnp.asarray(toks),
+                jnp.asarray(chunk_len), active, flags=flags,
+                sel_len=pf.bucket)
+            pf.j += 1
+            finishing = [i for i, r in enumerate(pf.reqs)
+                         if -(-len(r.prompt) // pf.chunk) == j + 1]
+            if not finishing:
+                continue
+            last = np.asarray(last)       # sync: this chunk has completed
+            synced = True
+            now = clock()
+            for i in finishing:
+                req = pf.reqs[i]
+                tok0, key = self._sample_tok0(last[i:i + 1], req)
+                self.stats["useful_tokens"] += 1
+                if req.n_new == 1:        # retires without touching a slot
+                    results.append(RequestResult(
+                        req.rid, np.asarray([tok0], np.int32),
+                        len(req.prompt), req.n_new, req.arrival_s, now, now,
+                        first_token_s=now))
+                    continue
+                slot = pf.slots[i]        # early activation: decode NOW
+                self._caches = self._insert(self._caches, pf.caches,
+                                            jnp.asarray(slot, jnp.int32),
+                                            jnp.asarray(i, jnp.int32))
+                self._reserved.discard(slot)
+                self._activate(slot, req, tok0, key, now, now)
+        if not synced:
+            jax.block_until_ready(jax.tree.leaves(pf.caches)[0])
+        dt = time.monotonic() - t0
+        self.stats["chunks"] += burst
+        self.stats["chunk_s"] += dt
+        if stalled:
+            self.stats["stall_s"] += dt
+        if pf.j >= pf.n_chunks:
+            self._pf = None               # all members inserted already
 
     def admit_ready(self, clock, results: List[RequestResult]) -> None:
         """``clock``: zero-arg callable giving seconds since serve start;
-        admission/finish timestamps are sampled AFTER blocking work."""
+        admission/finish timestamps are sampled AFTER blocking work.
+        Chunked mode only STARTS a group here (one in flight at a time) —
+        its chunks run via ``step_prefill`` between decode segments."""
         while self.queue:
+            if self._pf is not None:
+                break                     # chunked group already in flight
             free = self.free_slots()
             if not free:
                 break
-            group = self._group_for_admission(len(free))
-            self._admit_group(free, group, clock, results)
+            anchor = self._next_admissible()
+            if anchor is None:
+                break                     # other-mode requests wait: drain
+            group = self._group_for_admission(len(free), anchor)
+            mode = self._eff_mode(group[0])
+            self._cur_mode = mode
+            # a per-request dsa_mode override can leave the chunk-exactness
+            # envelope (DSA-over-MLA): such groups fall back to blocking
+            if self.chunked and can_chunk_prefill(self.cfg, mode):
+                self._start_chunked_group(free, group, mode)
+                break
+            self._admit_group(free, group, mode, clock, results)
 
     # -- warmup / reset ------------------------------------------------------
 
@@ -262,7 +540,8 @@ class ContinuousEngine:
         """Zero all slots, the queue, and stats (compiled functions are
         kept)."""
         self.stats = {"segments": 0, "useful_tokens": 0, "admitted": 0,
-                      "prefill_s": 0.0}
+                      "prefill_s": 0.0, "chunks": 0, "chunk_s": 0.0,
+                      "stall_s": 0.0, "segment_s": 0.0}
         self._caches = unstack_group_caches(
             init_cache(self.cfg, self.slots, self.max_len,
                        self.engine.decode_flags,
@@ -271,13 +550,20 @@ class ContinuousEngine:
         self._keys = np.zeros((self.slots, 2), np.uint32)
         self._active = np.zeros((self.slots,), bool)
         self._greedy = np.ones((self.slots,), bool)
+        self._temps = np.ones((self.slots,), np.float32)
         self._slot = [None] * self.slots
+        self._reserved: Set[int] = set()
+        self._pf: Optional[_PrefillGroup] = None
+        self._cur_mode: Optional[str] = None
         self.queue.clear()
 
     def warmup(self, prompt_lens: Sequence[int]) -> None:
-        """Precompile every admission/prefill/segment shape for the prompt
-        buckets covering ``prompt_lens``, then reset.  A serving loop that
-        skips this compiles lazily on first use of each bucket."""
+        """Precompile every admission/chunk/prefill/segment shape for the
+        prompt buckets covering ``prompt_lens`` (at both admission widths,
+        1 and ``slots``), then reset.  This is the fixed chunk-shape set of
+        the recompilation contract; a serving loop that skips this
+        compiles lazily on first use of each bucket.  Per-request dsa_mode
+        overrides compile lazily on their first segment."""
         buckets = sorted({self.engine.prompt_bucket(int(l))
                           for l in prompt_lens})
         sink: List[RequestResult] = []
@@ -290,7 +576,9 @@ class ContinuousEngine:
                     self.submit(r)
                 while self.has_work():
                     self.admit_ready(lambda: 0.0, sink)
-                    self.run_segment(lambda: 0.0, sink)
+                    self.step_prefill(lambda: 0.0, sink)
+                    if any(s is not None for s in self._slot):
+                        self.run_segment(lambda: 0.0, sink)
                 rid -= n
         self.reset()
 
@@ -300,10 +588,13 @@ class ContinuousEngine:
                     results: List[RequestResult]) -> None:
         remaining = np.asarray(
             [s.remaining if s else 0 for s in self._slot], np.int32)
+        mode = self._cur_mode or self.engine.decode_flags.dsa_mode
+        t0 = time.monotonic()
         tok, caches, keys, active, rem, toks = self._segment(
             self.engine.params, jnp.asarray(self._tok), self._caches,
             jnp.asarray(self._keys), jnp.asarray(self._active),
-            jnp.asarray(self._greedy), jnp.asarray(remaining))
+            jnp.asarray(self._greedy), jnp.asarray(self._temps),
+            jnp.asarray(remaining), flags=self._flags(mode))
         self._caches = caches
         self._tok = np.array(tok)           # np.array: writable host copies
         self._keys = np.array(keys)
@@ -311,6 +602,7 @@ class ContinuousEngine:
         toks = np.asarray(toks)                       # (slots, seg_len)
         now = clock()                     # host copies above synced the step
         self.stats["segments"] += 1
+        self.stats["segment_s"] += time.monotonic() - t0
         for i, st in enumerate(self._slot):
             if st is None:
                 continue
@@ -324,27 +616,33 @@ class ContinuousEngine:
                 results.append(RequestResult(
                     st.req.rid, seq.astype(np.int32),
                     int(np.asarray(st.req.prompt).shape[-1]),
-                    st.req.n_new, st.req.arrival_s, st.admit_s, now))
+                    st.req.n_new, st.req.arrival_s, st.admit_s, now,
+                    first_token_s=st.first_token_s))
                 self._slot[i] = None          # slot freed; reset at admit
+        if self._pf is None and not any(s is not None for s in self._slot):
+            self._cur_mode = None         # idle: free to switch dsa_mode
 
     # -- serving loops ------------------------------------------------------
 
     def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
         """Deterministic drain (tests): queue everything, serve to empty,
-        return {rid: tokens}."""
+        return {rid: tokens}.  One chunk of any in-flight admission runs
+        between decode segments (the chunked-prefill interleave)."""
         for r in requests:
             self.submit(r)
         results: List[RequestResult] = []
         clock = lambda: 0.0
         while self.has_work():
             self.admit_ready(clock, results)
+            self.step_prefill(clock, results)
             if any(s is not None for s in self._slot):
                 self.run_segment(clock, results)
         return {r.rid: r.tokens for r in results}
 
     def serve(self, workload: Sequence[Request]) -> List[RequestResult]:
         """Open-loop wall-clock serving: requests become visible at their
-        ``arrival_s`` offsets; admission happens between segments."""
+        ``arrival_s`` offsets; admission starts between segments and
+        chunked prompt ingestion interleaves with them chunk by chunk."""
         items = sorted(workload, key=lambda r: r.arrival_s)
         results: List[RequestResult] = []
         i = 0
@@ -356,9 +654,10 @@ class ContinuousEngine:
                 self.submit(items[i])
                 i += 1
             self.admit_ready(clock, results)
+            self.step_prefill(clock, results)
             if any(s is not None for s in self._slot):
                 self.run_segment(clock, results)
-            elif i < len(items):
+            elif self._pf is None and not self.queue and i < len(items):
                 time.sleep(max(0.0, min(items[i].arrival_s - now, 0.05)))
         return sorted(results, key=lambda r: r.rid)
 
@@ -407,9 +706,11 @@ class StaticBatchServer:
             res = self.engine.generate(mat, n, lengths=lengths)
             finish = time.monotonic() - t0
             for j, r in enumerate(batch):
+                # tokens only surface when the whole batch retires, so the
+                # static baseline's TTFT is its full batch latency
                 results.append(RequestResult(
                     r.rid, res.tokens[j, :r.n_new], len(r.prompt), r.n_new,
-                    r.arrival_s, admit, finish))
+                    r.arrival_s, admit, finish, first_token_s=finish))
         return sorted(results, key=lambda r: r.rid)
 
 
@@ -435,9 +736,10 @@ def synthetic_workload(n_requests: int, *, rate_rps: float,
 
 def summarize(results: Sequence[RequestResult],
               wall_s: float) -> Dict[str, float]:
-    """Serving metrics: goodput (delivered new tokens per wall second) and
-    request latency percentiles."""
+    """Serving metrics: goodput (delivered new tokens per wall second),
+    request latency percentiles, and time-to-first-token percentiles."""
     lats = np.asarray([r.latency_s for r in results])
+    ttfts = np.asarray([r.ttft_s for r in results])
     toks = sum(r.n_new for r in results)
     return {
         "n_requests": len(results),
@@ -447,4 +749,6 @@ def summarize(results: Sequence[RequestResult],
         "p50_latency_s": round(float(np.percentile(lats, 50)), 3),
         "p95_latency_s": round(float(np.percentile(lats, 95)), 3),
         "mean_latency_s": round(float(lats.mean()), 3),
+        "p50_ttft_s": round(float(np.percentile(ttfts, 50)), 3),
+        "p95_ttft_s": round(float(np.percentile(ttfts, 95)), 3),
     }

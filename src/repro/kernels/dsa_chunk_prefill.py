@@ -1,0 +1,141 @@
+"""Fused DSA chunk-prefill kernel — gather + attend for a C-token chunk.
+
+Chunk-append companion of repro.kernels.dsa_attention (whole-sequence
+prefill) and repro.kernels.dsa_decode (single-token decode): one Pallas
+kernel attends a chunk of C fresh queries against ONLY the KV-cache blocks
+selected by the block-pooled prediction path, with online softmax in VMEM
+scratch.  The selected block indices, their validity bits, the per-row
+GLOBAL chunk offsets, and the ragged per-row cache lengths all arrive via
+scalar prefetch (PrefetchScalarGridSpec), so the grid stays static while
+HBM->VMEM traffic scales with the number of selected blocks.
+
+The "intra-chunk tile" (fresh queries attending each other causally) needs
+no special casing: the mask builder force-keeps the local/diagonal blocks,
+so the chunk's own freshly-written cache blocks are always among the
+gathered blocks and the per-token causal mask below handles the triangle.
+
+Layouts (kernel-native; repro.kernels.ops.dsa_chunk_prefill adapts):
+
+  q:       (B, Hq, C, hd)     chunk queries, C a multiple of block_q
+  k/v:     (B, S, Hkv, hd)    KV cache in its natural engine layout
+                              (S padded to a multiple of block_k)
+  idx/ok:  (B, nQb, nb) i32   selected cache-block indices + validity
+                              per chunk query block (nQb = C / block_q)
+  q_off:   (B,) int32         global position of the chunk's first query
+                              (the slot's cache depth; ragged per row)
+  kv_len:  (B,) int32         valid cache rows (written so far, incl. the
+                              chunk); frozen/pad slots pass 0
+  out:     (B, Hq, C, hd)
+
+Grid: (B, Hq, nQb, nb); the innermost axis accumulates online softmax and
+finalizes on the last selected block.  GQA: query head h reads KV head
+h // (Hq // Hkv) straight from the cache.  Selected indices are pre-sorted
+ascending by masks.chunk_block_topk_indices (contiguous HBM streams, the
+paper's §5.2 reordering analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, block_q: int, block_k: int, nb: int,
+            scale: float):
+    b, qb, j = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kb = idx_ref[b, qb, j]
+    ok = ok_ref[b, qb, j]
+    kvl = kvl_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (Bq, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Bq, Bk)
+    q_pos = (qoff_ref[b] + qb * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = (ok > 0) & (k_pos <= q_pos) & (k_pos < kvl)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]                                    # (Bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit zero under the mask: a fully-masked row (pad queries of the
+    # final partial chunk) would otherwise contribute exp(NEG - NEG) = 1
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)           # (Bq, Bk)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _fini():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def dsa_chunk_gather_attention(q, k_cache, v_cache, idx, ok, q_off, kv_len,
+                               *, block_q: int = 128, block_k: int = 128,
+                               interpret: bool = False) -> jax.Array:
+    """q: (B,Hq,C,hd); k/v cache: (B,S,Hkv,hd); idx/ok: (B,C//block_q,nb);
+    q_off/kv_len: (B,).  Returns (B,Hq,C,hd)."""
+    b, hq, c, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    nb = idx.shape[-1]
+    n_qb = c // block_q
+    assert n_qb * block_q == c, (c, block_q)
+    scale = hd ** -0.5
+    n_kb = -(-s_len // block_k)
+    pad = n_kb * block_k - s_len
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    grid = (b, hq, n_qb, nb)
+
+    def qmap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref):
+        return (bi, hi, qi, 0)
+
+    def kmap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref):
+        return (bi, idx_ref[bi, qi, ji], hi // g, 0)
+
+    kern = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                             nb=nb, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), qmap),
+            pl.BlockSpec((1, block_k, 1, hd), kmap),
+            pl.BlockSpec((1, block_k, 1, hd), kmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, c, hd), q.dtype),
+        interpret=interpret,
+    )
+    return fn(idx.astype(jnp.int32), ok.astype(jnp.int32),
+              q_off.astype(jnp.int32), kv_len.astype(jnp.int32),
+              q, k_cache, v_cache)

@@ -15,6 +15,7 @@ import os
 import jax
 
 from repro.kernels.dsa_attention import dsa_block_sparse_attention
+from repro.kernels.dsa_chunk_prefill import dsa_chunk_gather_attention
 from repro.kernels.dsa_decode import dsa_decode_gather_attention
 from repro.kernels.wkv6 import wkv6_chunked
 
@@ -55,6 +56,26 @@ def dsa_decode(q, k_cache, v_cache, idx, ok, kv_len, *, block_k=128,
     qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,1,hd)
     out = dsa_decode_gather_attention(qt, k_cache, v_cache, idx, ok, kv_len,
                                       block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def dsa_chunk_prefill(q, k_cache, v_cache, idx, ok, q_off, kv_len, *,
+                      block_q=128, block_k=128, interpret=None):
+    """Fused DSA chunk-prefill step (chunk-append fast path).
+
+    q: (B,C,Hq,hd) [model layout]; k/v cache: (B,S,Hkv,hd); idx/ok:
+    (B,C//block_q,nb) selected cache-block indices per chunk query block;
+    q_off: (B,) global chunk start positions; kv_len: (B,).  Returns
+    (B,C,Hq,hd).  The pure-XLA twin is
+    core.attention.dsa_chunk_block_attention.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,C,hd)
+    out = dsa_chunk_gather_attention(qt, k_cache, v_cache, idx, ok, q_off,
+                                     kv_len, block_q=block_q,
+                                     block_k=block_k, interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 

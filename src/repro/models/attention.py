@@ -171,11 +171,16 @@ def _dsa_train_mask_and_aux(params, cfg: ArchConfig, flags: RunFlags,
 
 def apply_attention(params, cfg: ArchConfig, flags: RunFlags, x, *,
                     x_kv=None, cache=None, causal=True, use_rope=True,
-                    pos_offset=0, active=None):
+                    pos_offset=0, active=None, chunk_len=None,
+                    sel_len=None):
     """Returns (out, new_cache, aux).  x: (B, S, d).
 
     active: optional (B,) bool slot mask (decode only) — see module
     docstring; inactive slots freeze their cache and attend nothing.
+    chunk_len: optional (B,) — chunk-append mode (see _apply_chunk): x is a
+    C-token chunk appended at each slot's ``pos``; rows past chunk_len are
+    padding.  sel_len: optional static int — the chunk mode's
+    attention/selection geometry (default: the full cache length).
     """
     dsa = cfg.dsa
     hd = cfg.resolved_head_dim
@@ -183,6 +188,9 @@ def apply_attention(params, cfg: ArchConfig, flags: RunFlags, x, *,
     cross = x_kv is not None or (cache is not None and "ck" in cache)
 
     if flags.mode == "decode" and not cross:
+        if chunk_len is not None:
+            return _apply_chunk(params, cfg, flags, x, cache, use_rope,
+                                active, chunk_len, sel_len)
         return _apply_decode(params, cfg, flags, x, cache, use_rope, active)
 
     if cross and flags.mode == "decode":   # cross decode: static enc k/v cache
@@ -381,6 +389,11 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
     new["kt"] = new["kt"].at[rows, wslot].set(
         k_t[:, 0].astype(new["kt"].dtype), mode="drop")
     keep = M.keep_count(s, dsa.sparsity)
+    if flags.dsa_mode == "off":
+        # per-request dsa_mode override on a long-context engine: dense
+        # decode over the full cache; kt stays maintained (ktb, like the
+        # faithful path, is rebuilt at each admission's prefill)
+        return A.decode_attention(q, kc, vc, kv_len=kv_len)
     if flags.dsa_mode == "faithful":
         # paper-faithful token granularity: top-k over all S cached scores
         s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
@@ -410,8 +423,153 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
 
 
 # ---------------------------------------------------------------------------
-# MLA (DeepSeek-V3) — latent-compressed attention, absorbed decode
+# chunk-append forward path (chunked prefill)
 # ---------------------------------------------------------------------------
+
+
+def _apply_chunk(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                 use_rope, active, chunk_len, sel_len=None):
+    """C-token chunk append: the decode step generalized from 1 token.
+
+    x: (B, C, d) — each slot's next C prompt tokens, right-padded with pad
+    embeddings; chunk_len: (B,) true token count per slot (rows past it are
+    padding, their logits garbage).  Writes C KV rows at the per-slot
+    ``pos`` (pad rows write ZEROS — exactly the state
+    ``transformer.truncate_cache`` leaves), advances ``pos`` by chunk_len,
+    extends the DSA score caches incrementally, and attends each chunk
+    query to the cache prefix + the intra-chunk causal triangle.
+
+    ``sel_len`` (static; default the cache length) is the
+    selection/attention GEOMETRY: masks, softmax reduction shapes, and the
+    DSA granularity choice + block top-k all see exactly sel_len keys, so
+    running chunks with sel_len = the prompt bucket reproduces a
+    whole-prompt bucketed prefill token-bitwise (the chunked-admission
+    exactness contract, pinned in tests) — the physical cache may be
+    longer (the DSA cache rounds up to a block_k multiple).  Frozen slots
+    (``active`` False) drop writes and don't advance, like single-token
+    decode.  Requires a non-wrapping cache (no SWA) and, when the DSA
+    caches are present, C and pos multiples of block_q/block_k (the
+    scheduler's pow2 block-floored chunk buckets guarantee this).
+    """
+    assert not cfg.swa_window, "chunk append needs a non-wrapping cache"
+    b, c = x.shape[:2]
+    sel = cache["k"].shape[1] if sel_len is None else sel_len
+    pos = _slot_pos(cache, b)                              # (B,)
+    q, k, v = _proj_qkv(params, cfg, x)
+    offs = jnp.arange(c)
+    p = pos[:, None] + offs[None, :]                       # (B, C) global
+    if use_rope:
+        q = rope(q, p, cfg.rope_theta)
+        k = rope(k, p, cfg.rope_theta)
+    s = cache["k"].shape[1]
+    live = offs[None, :] < chunk_len[:, None]              # (B, C)
+    if active is not None:
+        live = live & active[:, None]
+    # frozen slots push ALL their writes out of bounds; pad rows of live
+    # slots write explicit zeros at their true position instead (rows past
+    # the cache end drop OOB either way)
+    wslot = p if active is None else jnp.where(active[:, None], p, s)
+    rows = jnp.arange(b)[:, None]
+    kc = cache["k"].at[rows, wslot].set(
+        jnp.where(live[..., None, None], k, 0).astype(cache["k"].dtype),
+        mode="drop")
+    vc = cache["v"].at[rows, wslot].set(
+        jnp.where(live[..., None, None], v, 0).astype(cache["v"].dtype),
+        mode="drop")
+    adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
+    new = dict(cache, k=kc, v=vc, pos=pos + adv)
+    kv_len = (pos + adv).astype(jnp.int32)
+    if "kt" in cache:
+        q_t, kt_sel = _chunk_fill_pred(params, cfg, x, new, wslot, live,
+                                       pos, active)
+        if dsa_active(cfg, flags):
+            out = _dsa_chunk_attend(cfg, flags, q, kc[:, :sel], vc[:, :sel],
+                                    q_t, kt_sel[:, :sel], p, pos, kv_len)
+        else:
+            out = A.chunk_attention(q, kc[:, :sel], vc[:, :sel], p)
+    else:
+        out = A.chunk_attention(q, kc[:, :sel], vc[:, :sel], p)
+    out = out.reshape(b, c, -1) @ params["wo"]
+    return out, new, {}
+
+
+def _chunk_fill_pred(params, cfg: ArchConfig, x, new, wslot, live, pos,
+                     active):
+    """Extend the predicted-key cache ``kt`` and its block-pooled twin
+    ``ktb`` with a chunk — no truncate_cache rebuild.
+
+    Pad rows write zero kt rows and contribute zeros to the block sums, so
+    the persisted caches match a whole-prompt prefill + truncate exactly;
+    ktb gets one scatter-ADD of the chunk's per-block partial sums (the
+    chunk is block_k-aligned, so each touched block is summed with the
+    same reduction shape the truncate rebuild uses).  Returns the chunk's
+    predicted queries Q~ and ``kt_sel``, the kt cache with the chunk's
+    rows UNMASKED — whole-prompt prefill scores real pad-row K~ during
+    selection (causality hides them), so the chunk's selection view must
+    too.
+    """
+    dsa = cfg.dsa
+    b, c = x.shape[:2]
+    rows = jnp.arange(b)[:, None]
+    q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
+    ktv = jnp.where(live[..., None], k_t, 0)
+    kt_sel = new["kt"].at[rows, wslot].set(
+        k_t.astype(new["kt"].dtype), mode="drop")
+    new["kt"] = new["kt"].at[rows, wslot].set(
+        ktv.astype(new["kt"].dtype), mode="drop")
+    bkd = dsa.block_k
+    assert c % bkd == 0, (c, bkd)
+    part = ktv.reshape(b, c // bkd, bkd, -1).sum(axis=2)
+    n_kb = new["ktb"].shape[1]
+    jb = (pos // bkd)[:, None] + jnp.arange(c // bkd)[None, :]
+    if active is not None:
+        jb = jnp.where(active[:, None], jb, n_kb)
+    new["ktb"] = new["ktb"].at[rows, jb].add(
+        part.astype(new["ktb"].dtype), mode="drop")
+    return q_t, kt_sel
+
+
+def _dsa_chunk_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
+                      kt_sel, p, pos, kv_len):
+    """DSA pattern + sparse attention for a chunk — the chunk-resumable
+    twin of ``_dsa_train_mask_and_aux`` + the prefill execution paths.
+
+    Mirrors the whole-prompt granularity choice on the CACHE length (the
+    prompt bucket): token-granularity when that geometry isn't
+    block-divisible or in faithful mode, else block-pooled selection
+    feeding the XLA gather twin or the fused Pallas chunk kernel.  Scores
+    run against ``kt_sel`` (B, S, k) so selection sees exactly the key
+    views whole-prompt prefill saw; ``p`` (B, C) are the chunk queries'
+    global positions, ``pos`` (B,) the chunk start.
+    """
+    dsa = cfg.dsa
+    b, c = q.shape[:2]
+    s = kc.shape[1]
+    if flags.dsa_mode == "faithful" or s % dsa.block_q or s % dsa.block_k:
+        # token granularity — the whole-prompt path for this geometry
+        s_t = jnp.einsum("bqk,bsk->bqs", q_t, kt_sel)
+        valid = jnp.arange(s)[None, None, :] <= p[:, :, None]
+        keep = M.keep_count(s, dsa.sparsity)
+        mask = M.row_topk_mask(s_t, keep, valid)
+        return A.chunk_attention(q, kc, vc, p, token_mask=mask)
+    bq, bkd = dsa.block_q, dsa.block_k
+    assert c % bq == 0, (c, bq)
+    n_kb = s // bkd
+    q_blk = q_t.reshape(b, c // bq, bq, -1).mean(axis=2)
+    sc = jnp.einsum("bqk,bsk->bqs", q_blk, kt_sel)        # (B, nQb, S)
+    bs = sc.reshape(b, c // bq, n_kb, bkd).max(axis=-1)
+    nb_keep = min(n_kb, max(dsa.min_blocks + dsa.local_blocks,
+                            M.keep_count(n_kb, dsa.sparsity)))
+    idx, ok = M.chunk_block_topk_indices(
+        bs, nb_keep, q_block_offset=pos // bq,
+        local_blocks=dsa.local_blocks, sort=dsa.sort_indices)
+    if flags.dsa_mode == "kernel":
+        from repro.kernels.ops import dsa_chunk_prefill as chunk_kernel
+        return chunk_kernel(q, kc, vc, idx, ok, pos, kv_len,
+                            block_q=bq, block_k=bkd)
+    return A.dsa_chunk_block_attention(q, kc, vc, idx, ok, block_q=bq,
+                                       block_k=bkd, q_offset=pos,
+                                       kv_len=kv_len)
 
 
 def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):
@@ -459,11 +617,14 @@ def _mla_qkv(params, cfg: ArchConfig, x, pos):
 
 
 def apply_mla(params, cfg: ArchConfig, flags: RunFlags, x, *, cache=None,
-              pos_offset=0, active=None):
+              pos_offset=0, active=None, chunk_len=None, sel_len=None):
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
     if flags.mode == "decode":
+        if chunk_len is not None:
+            return _apply_mla_chunk(params, cfg, flags, x, cache, active,
+                                    chunk_len, sel_len)
         return _apply_mla_decode(params, cfg, flags, x, cache, active)
     pos = jnp.arange(s) + pos_offset
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, pos)
@@ -517,6 +678,49 @@ def init_cache_mla(cfg: ArchConfig, batch: int, max_len: int,
 def cache_specs_mla(cache) -> Dict:
     return {"c_kv": ("batch", "cache_seq", "lora"),
             "k_rope": ("batch", "cache_seq", None), "pos": ("batch",)}
+
+
+def _apply_mla_chunk(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                     active, chunk_len, sel_len=None):
+    """Chunk-append MLA: write C latent rows at the per-slot ``pos`` (pad
+    rows zeroed, matching truncate_cache), then attend the chunk queries
+    NON-absorbed — the cached latents are re-expanded through ``kv_b``
+    exactly like whole-prompt prefill, so chunked MLA prefill reproduces
+    it bitwise on real rows.  DSA-over-MLA has no predicted-key cache to
+    resume from, so chunked admission is gated to dsa_mode="off" for MLA
+    (inference.engine.can_chunk_prefill)."""
+    m = cfg.mla
+    b, c, _ = x.shape
+    h = cfg.n_heads
+    pos = _slot_pos(cache, b)                              # (B,)
+    offs = jnp.arange(c)
+    p = pos[:, None] + offs[None, :]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, cfg, x, p)
+    s_cache = cache["c_kv"].shape[1]
+    live = offs[None, :] < chunk_len[:, None]
+    if active is not None:
+        live = live & active[:, None]
+    wslot = p if active is None else jnp.where(active[:, None], p, s_cache)
+    rows = jnp.arange(b)[:, None]
+    ckc = cache["c_kv"].at[rows, wslot].set(
+        jnp.where(live[..., None], c_kv_new, 0).astype(cache["c_kv"].dtype),
+        mode="drop")
+    krc = cache["k_rope"].at[rows, wslot].set(
+        jnp.where(live[..., None], k_rope_new[:, :, 0],
+                  0).astype(cache["k_rope"].dtype), mode="drop")
+    adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
+    new = dict(cache, c_kv=ckc, k_rope=krc, pos=pos + adv)
+    sel = s_cache if sel_len is None else sel_len
+    kvb = (ckc[:, :sel].astype(x.dtype) @ params["kv_b"]).reshape(
+        b, sel, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        krc[:, :sel].astype(x.dtype)[:, :, None],
+        (b, sel, h, m.qk_rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    out = A.chunk_attention(q, k, v, p)
+    out = out.reshape(b, c, -1) @ params["wo"]
+    return out, new, {}
 
 
 def _apply_mla_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,

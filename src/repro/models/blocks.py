@@ -161,12 +161,16 @@ def subblock_cache_specs(cfg: ArchConfig, d: SubBlockDef, cache):
 
 
 def apply_subblock(params, cfg: ArchConfig, flags: RunFlags, d: SubBlockDef,
-                   x, cache=None, enc=None, pos_offset=0, active=None):
+                   x, cache=None, enc=None, pos_offset=0, active=None,
+                   chunk_len=None, sel_len=None):
     """Pre-norm residual block.  Returns (x, new_cache, aux).
 
     active: optional (B,) bool decode slot mask (continuous batching) —
     inactive slots freeze their attention caches; recurrent (ssm) state is
     instead fully overwritten at slot admission.
+    chunk_len: optional (B,) — chunk-append decode (chunked prefill): x is
+    a C-token chunk per slot, rows past chunk_len are padding (attention
+    kinds only; the scheduler gates chunking off for ssm/rwkv archs).
     """
     aux: Dict[str, jax.Array] = {}
     new_cache = dict(cache) if cache is not None else None
@@ -176,12 +180,14 @@ def apply_subblock(params, cfg: ArchConfig, flags: RunFlags, d: SubBlockDef,
         y, c, a = apply_attention(params["attn"], cfg, flags, h,
                                   cache=None if cache is None else cache["attn"],
                                   causal=d.causal, pos_offset=pos_offset,
-                                  use_rope=not cfg.enc_dec, active=active)
+                                  use_rope=not cfg.enc_dec, active=active,
+                                  chunk_len=chunk_len, sel_len=sel_len)
         aux.update(a)
     elif d.kind == "mla":
         y, c, a = apply_mla(params["attn"], cfg, flags, h,
                             cache=None if cache is None else cache["attn"],
-                            pos_offset=pos_offset, active=active)
+                            pos_offset=pos_offset, active=active,
+                            chunk_len=chunk_len, sel_len=sel_len)
         aux.update(a)
     elif d.kind == "mamba":
         y, c = ssm.apply_mamba(params["attn"], cfg, h,
@@ -237,13 +243,15 @@ def init_group(key, cfg: ArchConfig, decoder: bool = True,
 
 
 def apply_group(params, cfg: ArchConfig, flags: RunFlags, defs, x,
-                cache=None, enc=None, pos_offset=0, active=None):
+                cache=None, enc=None, pos_offset=0, active=None,
+                chunk_len=None, sel_len=None):
     auxes: Dict[str, jax.Array] = {}
     new_cache = {} if cache is not None else None
     for i, d in enumerate(defs):
         x, c, a = apply_subblock(params[f"b{i}"], cfg, flags, d, x,
                                  cache=None if cache is None else cache[f"b{i}"],
-                                 enc=enc, pos_offset=pos_offset, active=active)
+                                 enc=enc, pos_offset=pos_offset, active=active,
+                                 chunk_len=chunk_len, sel_len=sel_len)
         if new_cache is not None:
             new_cache[f"b{i}"] = c
         for k, v in a.items():

@@ -88,7 +88,7 @@ def init_model(key, cfg: ArchConfig):
 
 def _scan_groups(gparams, cfg: ArchConfig, flags: RunFlags, defs, x,
                  caches=None, enc=None, pos_offset=0, decoder=True,
-                 active=None):
+                 active=None, chunk_len=None, sel_len=None):
     """lax.scan over stacked groups; python loop fallback for tiny models."""
     def body(carry, xs):
         xc, aux_c = carry
@@ -96,7 +96,8 @@ def _scan_groups(gparams, cfg: ArchConfig, flags: RunFlags, defs, x,
         c = None if caches is None else xs[1]
         xc, newc, aux = B.apply_group(p, cfg, flags, defs, xc, cache=c,
                                       enc=enc, pos_offset=pos_offset,
-                                      active=active)
+                                      active=active, chunk_len=chunk_len,
+                                      sel_len=sel_len)
         aux = _norm_aux(aux)
         carry = (xc, {k: aux_c[k] + aux[k] for k in AUX_KEYS})
         return carry, (newc if caches is not None else 0)
@@ -219,7 +220,8 @@ def truncate_cache(cfg: ArchConfig, caches, length):
 
 
 def _loop_groups_unstacked(gparams, cfg: ArchConfig, flags: RunFlags, defs,
-                           x, caches, enc=None, active=None):
+                           x, caches, enc=None, active=None, chunk_len=None,
+                           sel_len=None):
     """Python-unrolled twin of _scan_groups over a per-layer cache list
     (decode fast path).  Per-layer param slices are loop-invariant, so XLA
     hoists them out of any enclosing generation scan."""
@@ -228,7 +230,8 @@ def _loop_groups_unstacked(gparams, cfg: ArchConfig, flags: RunFlags, defs,
     for i, c in enumerate(caches):
         p = jax.tree.map(lambda a, i=i: a[i], gparams)
         x, nc, a = B.apply_group(p, cfg, flags, defs, x, cache=c, enc=enc,
-                                 active=active)
+                                 active=active, chunk_len=chunk_len,
+                                 sel_len=sel_len)
         a = _norm_aux(a)
         aux = {k: aux[k] + a[k] for k in AUX_KEYS}
         new_caches.append(nc)
@@ -236,12 +239,15 @@ def _loop_groups_unstacked(gparams, cfg: ArchConfig, flags: RunFlags, defs,
 
 
 def forward(params, cfg: ArchConfig, flags: RunFlags,
-            batch: Dict[str, jax.Array], caches=None, active=None):
+            batch: Dict[str, jax.Array], caches=None, active=None,
+            chunk_len=None, sel_len=None):
     """batch: {"tokens": (B,S) int32, ["enc_x"|"img"]: (B,T,d)}.
     Returns (logits, aux, new_caches).
 
     active: optional (B,) bool decode slot mask — continuous batching
-    freezes inactive slots' caches (see models.attention docstring)."""
+    freezes inactive slots' caches (see models.attention docstring).
+    chunk_len: optional (B,) — chunk-append decode mode (chunked prefill;
+    see chunk_step)."""
     tokens = batch["tokens"]
     dt = jnp.dtype(cfg.dtype)
     x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
@@ -262,7 +268,8 @@ def forward(params, cfg: ArchConfig, flags: RunFlags,
         for i, p in enumerate(params["prologue"]):
             c = None if caches is None else caches["prologue"][i]
             x, nc, a = B.apply_subblock(p, cfg, flags, d, x, cache=c, enc=enc,
-                                        active=active)
+                                        active=active, chunk_len=chunk_len,
+                                        sel_len=sel_len)
             for k, v in a.items():
                 aux_pro[k] = aux_pro.get(k, 0.0) + v
             if new_pro_caches is not None:
@@ -272,10 +279,13 @@ def forward(params, cfg: ArchConfig, flags: RunFlags,
     if isinstance(gc, (list, tuple)):       # decode fast path (unstacked)
         x, aux, new_gc = _loop_groups_unstacked(params["groups"], cfg, flags,
                                                 defs, x, gc, enc=enc,
-                                                active=active)
+                                                active=active,
+                                                chunk_len=chunk_len,
+                                                sel_len=sel_len)
     else:
         x, aux, new_gc = _scan_groups(params["groups"], cfg, flags, defs, x,
-                                      caches=gc, enc=enc, active=active)
+                                      caches=gc, enc=enc, active=active,
+                                      chunk_len=chunk_len, sel_len=sel_len)
     for extra in (aux_pro, aux_enc or {}):
         for k in AUX_KEYS:
             if k in extra:
@@ -305,6 +315,36 @@ def decode_step(params, cfg: ArchConfig, flags: RunFlags, tokens, caches,
     logits, _, new_caches = forward(params, cfg, flags,
                                     {"tokens": tokens}, caches=caches,
                                     active=active)
+    return logits, new_caches
+
+
+def chunk_step(params, cfg: ArchConfig, flags: RunFlags, tokens, caches,
+               chunk_len, active: Optional[jax.Array] = None,
+               sel_len: Optional[int] = None):
+    """``decode_step`` generalized from 1 token to a C-token chunk (chunked
+    prefill).  tokens: (B, C) — each slot's next C prompt tokens appended
+    at its cache ``pos``, right-padded with pad ids; chunk_len: (B,) true
+    token count per row.  Returns (logits (B,C,V), new_caches).
+
+    Every layer writes its C cache rows at the per-slot ``pos`` (pad rows
+    as zeros — the truncate_cache state), advances ``pos`` by chunk_len,
+    extends the DSA block-score cache ``ktb`` by scatter-add, and attends
+    chunk queries to the cache prefix plus the intra-chunk causal
+    triangle.  The CACHE LENGTH is the attention/selection geometry:
+    running a prompt through chunk_steps over a prompt-bucket-sized cache
+    leaves bitwise the cache (and final-row logits) of a whole-prompt
+    bucketed prefill — the chunked-admission exactness contract.  Logits
+    rows at or past chunk_len are garbage; inactive slots freeze entirely.
+    On the DSA block path C and the running ``pos`` must be multiples of
+    block_q/block_k (pow2 chunk buckets guarantee this).  Not supported
+    for recurrent (ssm/rwkv), SWA-ring, or enc-dec caches — the same set
+    for which prompt bucketing auto-disables.
+    """
+    assert flags.mode == "decode"
+    logits, _, new_caches = forward(params, cfg, flags,
+                                    {"tokens": tokens}, caches=caches,
+                                    active=active, chunk_len=chunk_len,
+                                    sel_len=sel_len)
     return logits, new_caches
 
 

@@ -1,8 +1,10 @@
 """Decode fast path: Pallas decode-kernel equivalence vs the XLA twin
 (GQA + ragged kv_len), block-gather exactness vs dense decode, fused
 scan-loop vs legacy python-loop token equivalence, decode dispatch
-accounting, block score-cache consistency, and SWA ring-buffer + window
-semantics at cache wrap-around."""
+accounting, block score-cache consistency, chunk-append prefill (the
+chunk-prefill Pallas kernel vs its XLA twin, and chunk_step's bitwise
+equivalence to whole-prompt bucketed prefill across dense/DSA/kernel
+paths), and SWA ring-buffer + window semantics at cache wrap-around."""
 
 import jax
 import jax.numpy as jnp
@@ -13,10 +15,11 @@ from repro.configs import get_config, reduced
 from repro.core import attention as A
 from repro.core import masks as M
 from repro.inference.engine import Engine
-from repro.kernels.ops import dsa_decode
+from repro.kernels.ops import dsa_chunk_prefill, dsa_decode
 from repro.models.attention import RunFlags
-from repro.models.transformer import (decode_step, forward, init_cache,
-                                      init_model)
+from repro.models.transformer import (chunk_step, decode_step, forward,
+                                      init_cache, init_model,
+                                      truncate_cache)
 
 
 def _mk_decode_case(key, b, s, hq, hkv, hd, dtype=jnp.float32):
@@ -83,6 +86,114 @@ def test_block_gather_equals_dense_when_all_blocks_kept(rng):
     kern = dsa_decode(q, kc, vc, idx, ok, kv_len, block_k=bk)
     np.testing.assert_allclose(np.asarray(blk), np.asarray(full), atol=1e-5)
     np.testing.assert_allclose(np.asarray(kern), np.asarray(full), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# chunk-append prefill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])       # MHA + GQA
+@pytest.mark.parametrize("s,c,bq,bk", [(128, 32, 16, 16),
+                                       (96, 32, 16, 32),   # rect blocks
+                                       (104, 16, 16, 16)])  # ragged tail S
+def test_dsa_chunk_kernel_matches_xla_twin(rng, hq, hkv, s, c, bq, bk):
+    """Fused chunk-prefill kernel == XLA gather twin: GQA, per-row global
+    chunk offsets, ragged kv_len, sorted block index lists."""
+    b, hd = 2, 32
+    ks = jax.random.split(rng, 5)
+    q = jax.random.normal(ks[0], (b, c, hq, hd))
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd))
+    q_off = jnp.array([32, 16], jnp.int32)                 # ragged depths
+    kv_len = q_off + jnp.array([c, c - 7], jnp.int32)
+    n_kb = -(-s // bk)
+    bs = jax.random.normal(ks[3], (b, c // bq, n_kb))
+    idx, ok = M.chunk_block_topk_indices(bs, min(n_kb, 4),
+                                         q_block_offset=q_off // bq)
+    out = dsa_chunk_prefill(q, kc, vc, idx, ok, q_off, kv_len,
+                            block_q=bq, block_k=bk)
+    ref = A.dsa_chunk_block_attention(q, kc, vc, idx, ok, block_q=bq,
+                                      block_k=bk, q_offset=q_off,
+                                      kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch,dsa_mode,long_ctx",
+                         [("stablelm_3b", "off", False),
+                          ("yi_6b", "block", True),
+                          ("yi_6b", "kernel", True),
+                          ("yi_6b", "faithful", True)])
+@pytest.mark.parametrize("c", [16, 32])
+def test_chunk_step_bitwise_matches_whole_prefill(rng, arch, dsa_mode,
+                                                  long_ctx, c):
+    """Chunked prefill == whole-prompt bucketed prefill BITWISE: cache
+    leaves (k/v/kt/ktb/pos after truncate) and the last-position logits
+    that sample the first token, for chunk sizes that don't divide the
+    (ragged, per-row) prompt lengths, across dense / DSA-block / fused
+    kernel / faithful paths."""
+    bucket, plen = 96, 70
+    cfg = reduced(get_config(arch))
+    params, _ = init_model(rng, cfg)
+    pf = RunFlags(mode="prefill", dsa_mode=dsa_mode, with_mse=False,
+                  long_context=long_ctx)
+    df = RunFlags(mode="decode", dsa_mode=dsa_mode, with_mse=False,
+                  long_context=long_ctx)
+    lengths = np.asarray([plen, plen - 13], np.int32)
+    toks = np.zeros((2, bucket), np.int32)
+    gen = np.random.default_rng(0)
+    for r in range(2):
+        toks[r, :lengths[r]] = gen.integers(1, cfg.vocab - 4,
+                                            size=(lengths[r],))
+    cache = init_cache(cfg, 2, bucket, df, dtype=jnp.float32)
+    logits_w, _, cache_w = forward(params, cfg, pf,
+                                   {"tokens": jnp.asarray(toks)},
+                                   caches=cache)
+    cache_w = truncate_cache(cfg, cache_w, jnp.asarray(lengths))
+    last_w = np.take_along_axis(np.asarray(logits_w),
+                                (lengths - 1)[:, None, None], axis=1)[:, 0]
+    cache_c = init_cache(cfg, 2, bucket, df, dtype=jnp.float32)
+    last_c = np.zeros_like(last_w)
+    for j in range(-(-int(lengths.max()) // c)):
+        ct = np.zeros((2, c), np.int32)
+        sl = toks[:, j * c:(j + 1) * c]
+        ct[:, :sl.shape[1]] = sl
+        cl = np.clip(lengths - j * c, 0, c).astype(np.int32)
+        logits_c, cache_c = chunk_step(params, cfg, df, jnp.asarray(ct),
+                                       cache_c, jnp.asarray(cl))
+        lc = np.asarray(logits_c)
+        for r in range(2):
+            if cl[r] > 0 and lengths[r] <= (j + 1) * c:
+                last_c[r] = lc[r, cl[r] - 1]
+    for (path, vw), (_, vc) in zip(
+            jax.tree_util.tree_leaves_with_path(cache_w),
+            jax.tree_util.tree_leaves_with_path(cache_c)):
+        np.testing.assert_array_equal(
+            np.asarray(vw), np.asarray(vc),
+            err_msg=f"{arch}/{dsa_mode} c={c}: {jax.tree_util.keystr(path)}")
+    np.testing.assert_array_equal(last_w, last_c)
+
+
+def test_chunk_step_freezes_inactive_slots(rng):
+    """active=False rows of a chunk step write nothing and don't advance
+    pos — the slot-freeze contract the interleaved scheduler relies on."""
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    df = RunFlags(mode="decode", dsa_mode="block", with_mse=False,
+                  long_context=True)
+    cache = init_cache(cfg, 2, 64, df, dtype=jnp.float32)
+    toks = jnp.ones((2, 16), jnp.int32)
+    cl = jnp.array([16, 16], jnp.int32)
+    active = jnp.array([True, False])
+    _, new = chunk_step(params, cfg, df, toks, cache, cl, active=active)
+    c0 = new["groups"]["b0"]["attn"]          # stacked: (n_groups, B, ...)
+    np.testing.assert_array_equal(
+        np.asarray(c0["pos"]), np.broadcast_to([16, 0], c0["pos"].shape))
+    for name in ("k", "v", "kt", "ktb"):
+        np.testing.assert_array_equal(np.asarray(c0[name][:, 1]), 0.0,
+                                      err_msg=name)
+    assert np.any(np.asarray(c0["k"][:, 0]) != 0.0)
 
 
 # ---------------------------------------------------------------------------

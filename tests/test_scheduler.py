@@ -1,6 +1,9 @@
 """Continuous-batching scheduler: per-request token-exactness vs the
-static engine (greedy AND sampled key chains), slot-reuse isolation (no
-KV/ktb leakage across tenants), DSA long-context serving, and the
+static engine (greedy AND sampled key chains) through the DEFAULT chunked
+admission path, chunked-vs-blocking admission equivalence (including chunk
+sizes that don't divide the prompt length), slot-reuse isolation (no
+KV/ktb leakage across tenants), DSA long-context serving (block AND fused
+chunk kernel), per-request temperature / dsa_mode overrides, and the
 fixed-compile-set contract (the decode segment compiles exactly once)."""
 import jax
 import numpy as np
@@ -98,6 +101,188 @@ def test_slot_reuse_never_leaks(dense):
                    seed=probe.seed)
     mixed = ce.run(churn + [late])
     np.testing.assert_array_equal(alone, mixed[99])
+
+
+def test_chunked_is_default_and_stats_count_chunks(dense):
+    """Chunked admission is the default for bucketable non-MoE archs and
+    actually runs (chunk stats advance; no blocking prefill seconds)."""
+    cfg, _, ce, ref = dense
+    assert ce.chunked
+    ce.reset()
+    ce.run(_mk_requests(cfg.vocab, [(40, 6), (22, 4)], seed=9))
+    assert ce.stats["chunks"] > 0
+    assert ce.stats["prefill_s"] == 0.0   # legacy blocking path never ran
+
+
+def test_chunked_matches_blocking_and_engine_nondivisible_chunks(dense):
+    """Chunk width 16 over prompts 20/33/65 (chunks never divide the
+    prompt): chunked admission reproduces BOTH the blocking-admission
+    scheduler and solo Engine.generate token-bitwise, greedy and
+    sampled."""
+    cfg, params, _, ref = dense
+    shapes = [(20, 5), (33, 7), (65, 6), (16, 4)]
+    reqs = _mk_requests(cfg.vocab, shapes, seed=21)
+    reqs += _mk_requests(cfg.vocab, [(33, 6), (20, 4)], seed=22,
+                         greedy=False)
+    for r in reqs[4:]:
+        r.rid += 10
+    chunked = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                               seg_len=4, chunk_tokens=16)
+    blocking = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                                seg_len=4, chunked_prefill=False)
+    assert chunked.chunked and not blocking.chunked
+    got_c = chunked.run(list(reqs))
+    got_b = blocking.run(list(reqs))
+    for r in reqs:
+        exp = ref.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                           seed=r.seed).tokens[0]
+        np.testing.assert_array_equal(got_c[r.rid], exp,
+                                      err_msg=f"chunked rid {r.rid}")
+        np.testing.assert_array_equal(got_b[r.rid], exp,
+                                      err_msg=f"blocking rid {r.rid}")
+
+
+def test_chunked_dsa_block_and_kernel_exact(dsa):
+    """DSA chunked admission: the incremental kt/ktb extension and the
+    chunked sparse selection reproduce whole-prompt prefill through BOTH
+    the XLA block path and the fused Pallas chunk kernel."""
+    cfg, params, ce, ref = dsa
+    assert ce.chunked
+    shapes = [(48, 6), (21, 8), (65, 5), (30, 4)]
+    for chunk_tokens in (16, 32):
+        cek = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                               seg_len=4, long_context=True,
+                               dsa_mode="kernel", chunk_tokens=chunk_tokens)
+        refk = Engine(cfg, params, max_len=MAX_LEN, long_context=True,
+                      dsa_mode="kernel")
+        reqs = _mk_requests(cfg.vocab, shapes, seed=31)
+        got = cek.run(reqs)
+        for r in reqs:
+            exp = refk.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                                seed=r.seed).tokens[0]
+            np.testing.assert_array_equal(
+                got[r.rid], exp,
+                err_msg=f"kernel chunk={chunk_tokens} rid {r.rid}")
+
+
+def test_chunked_bucket_smaller_than_dsa_block(rng):
+    """Regression: prompt buckets SMALLER than dsa.block_k (the common
+    case at production 128x128 blocks) must still chunk-admit — the chunk
+    width floors at the block size and the overhang past the bucket drops
+    out of bounds, keeping the bucket's selection geometry."""
+    import dataclasses as dc
+    cfg = reduced(get_config("yi_6b"))
+    cfg = dc.replace(cfg, dsa=dc.replace(cfg.dsa, block_q=32, block_k=32))
+    params, _ = init_model(rng, cfg)
+    kw = dict(long_context=True, dsa_mode="block")
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          chunk_tokens=16, **kw)
+    assert ce.chunked and ce.chunk_tokens == 32
+    ref = Engine(cfg, params, max_len=MAX_LEN, **kw)
+    reqs = _mk_requests(cfg.vocab, [(10, 4), (20, 5), (40, 6)], seed=71)
+    _check_exact(ce, ref, reqs)
+
+
+def test_per_request_temperature(dense):
+    """Request.temperature scales that request's sampled chain exactly as
+    Engine.generate(temperature=...) — and temperature 1.0 stays
+    bit-identical to the unscaled chain."""
+    cfg, _, ce, ref = dense
+    ce.reset()
+    rng = np.random.default_rng(41)
+    reqs = [Request(rid, rng.integers(1, cfg.vocab - 4, size=(l,)).astype(
+        np.int32), n, greedy=False, seed=rid * 3 + 1, temperature=t)
+        for rid, (l, n, t) in enumerate([(20, 6, 0.7), (33, 5, 1.0),
+                                         (14, 7, 1.6)])]
+    got = ce.run(reqs)
+    for r in reqs:
+        exp = ref.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                           seed=r.seed, temperature=r.temperature).tokens[0]
+        np.testing.assert_array_equal(got[r.rid], exp,
+                                      err_msg=f"rid {r.rid} T={r.temperature}")
+
+
+def test_per_request_dsa_mode_override(dsa):
+    """Request.dsa_mode overrides the engine's decode path per request
+    (mode-affine segments — the engine drains, switches mode, and each
+    request matches Engine.generate at ITS mode)."""
+    cfg, _, ce, ref = dsa
+    ce.reset()
+    rng = np.random.default_rng(51)
+    modes = ["block", "kernel", "faithful", None, "off"]
+    reqs = [Request(rid, rng.integers(1, cfg.vocab - 4,
+                                      size=(17 + 7 * rid,)).astype(np.int32),
+                    4 + rid, seed=rid, dsa_mode=m)
+            for rid, m in enumerate(modes)]
+    got = ce.run(list(reqs))
+    for r in reqs:
+        exp = ref.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                           seed=r.seed, dsa_mode=r.dsa_mode).tokens[0]
+        np.testing.assert_array_equal(got[r.rid], exp,
+                                      err_msg=f"rid {r.rid} mode={r.dsa_mode}")
+
+
+def test_mla_dsa_override_falls_back_to_blocking(rng):
+    """A per-request dsa_mode override that leaves the chunk-exactness
+    envelope (DSA-over-MLA has no predicted-key cache to resume) must fall
+    back to blocking admission for that group — and stay token-exact vs
+    Engine.generate at the same override."""
+    import dataclasses as dc
+    cfg = reduced(get_config("deepseek_v3"))
+    cfg = dc.replace(cfg, moe=None, n_layers=2)      # pure MLA, DSA enabled
+    assert cfg.dsa.enabled
+    params, _ = init_model(rng, cfg)
+    kw = dict(long_context=True, dsa_mode="off")
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          **kw)
+    assert ce.chunked                  # chunkable at the engine-level mode
+    ref = Engine(cfg, params, max_len=MAX_LEN, **kw)
+    rng_np = np.random.default_rng(81)
+    reqs = [Request(rid, rng_np.integers(1, cfg.vocab - 4,
+                                         size=(20 + 9 * rid,)).astype(
+                        np.int32), 4 + rid, seed=rid, dsa_mode=m)
+            for rid, m in enumerate([None, "block", "faithful"])]
+    got = ce.run(list(reqs))
+    for r in reqs:
+        exp = ref.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                           seed=r.seed, dsa_mode=r.dsa_mode).tokens[0]
+        np.testing.assert_array_equal(got[r.rid], exp,
+                                      err_msg=f"rid {r.rid} mode={r.dsa_mode}")
+
+
+def test_dsa_mode_override_rejected_without_cache(dense):
+    """A dense (non-long-context) engine holds no predicted-key cache: DSA
+    mode overrides must be rejected at submit, not crash a segment."""
+    cfg, _, ce, ref = dense
+    with pytest.raises(ValueError):
+        ce.submit(Request(123, np.ones((8,), np.int32), 2,
+                          dsa_mode="block"))
+    with pytest.raises(ValueError):
+        ce.submit(Request(124, np.ones((8,), np.int32), 2, temperature=0.0))
+
+
+def test_ttft_reported_before_finish(dense):
+    """RequestResult carries a first-token timestamp: TTFT <= latency and
+    the chunked path stamps it when the last chunk completes."""
+    cfg, params, _, ref = dense
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          chunk_tokens=16)
+    reqs = _mk_requests(cfg.vocab, [(40, 12), (20, 8)], seed=61)
+    for r in reqs:
+        ce.submit(r)
+    results = []
+    import itertools
+    counter = itertools.count()
+    clock = lambda: float(next(counter))       # monotone fake clock
+    while ce.has_work():
+        ce.admit_ready(clock, results)
+        ce.step_prefill(clock, results)
+        if any(s is not None for s in ce._slot):
+            ce.run_segment(clock, results)
+    assert len(results) == 2
+    for r in results:
+        assert r.first_token_s <= r.finish_s
+        assert r.ttft_s <= r.latency_s
 
 
 def test_segment_compiles_once(dense):
