@@ -4,6 +4,7 @@ the most recent PRIOR comparable run and fail on a large regression.
     python benchmarks/check_regression.py --bench decode \
         --variants dense_scan,dsa_scan --threshold 0.30
     python benchmarks/check_regression.py --bench serve --threshold 0.35
+    python benchmarks/check_regression.py --bench spec --threshold 0.50
 
 ``benchmarks/run.py --smoke`` / ``table_serve.py --smoke`` append a run to
 the committed BENCH_*.json, so in CI the latest run is the one the job
@@ -46,6 +47,14 @@ _SERVE_RATIO_KEYS = {
     "p95_ratio_chunked_vs_blocking_long": False,
 }
 
+# spec-gate metrics (table_spec.py ratio row): acceptance collapsing or the
+# speculative/plain goodput ratio regressing are both structural failures
+_SPEC_RATIO_KEYS = {
+    "goodput_ratio_spec_vs_plain": True,
+    "decode_ratio_spec_vs_plain": True,
+    "accept_rate": True,
+}
+
 
 def _latest_and_prior(path: str):
     if not os.path.exists(path):
@@ -69,34 +78,22 @@ def _latest_and_prior(path: str):
     return new, prior[-1]
 
 
-def check_serve(threshold: float, path: str = "") -> int:
-    """Gate the serve bench's same-run ratio row (machine-normalized)."""
-    path = path or os.path.join(_REPO_ROOT, "BENCH_serve.json")
-    new, base = _latest_and_prior(path)
-    if new is None:
-        return 0
+def _ratio_row(run):
+    for r in run.get("rows", []):
+        if r.get("mode") == "ratio":
+            return r
+    return {}
 
-    def ratio_row(run):
-        for r in run.get("rows", []):
-            if r.get("mode") == "ratio":
-                return r
-        return {}
 
-    nr, br = ratio_row(new), ratio_row(base)
-    keys = _SERVE_RATIO_KEYS
-    if new.get("smoke"):
-        # smoke-scale static ratios are dominated by static_exact's compile
-        # stall and swing ~50% between identical runs — gate only the
-        # chunked-vs-blocking structural ratio there
-        keys = {"goodput_ratio_chunked_vs_blocking": True}
+def _check_ratio_keys(nr, br, keys, threshold: float, bench: str) -> int:
     failed = checked = 0
     for key, higher_better in keys.items():
         if key not in nr:
             if key in br:
                 # a ratio the baseline had vanishing IS a regression
-                print(f"FAIL: serve ratio {key} missing from latest run")
+                print(f"FAIL: {bench} ratio {key} missing from latest run")
                 failed += 1
-            continue          # absent in both (e.g. long keys at smoke)
+            continue          # absent in both
         if key not in br:
             continue          # new metric: nothing to gate against yet
         checked += 1
@@ -106,14 +103,48 @@ def check_serve(threshold: float, path: str = "") -> int:
         status = "FAIL" if worsened > threshold else "ok"
         if worsened > threshold:
             failed += 1
-        print(f"{status}: serve {key}: {old_v:.3f} -> {new_v:.3f} "
+        print(f"{status}: {bench} {key}: {old_v:.3f} -> {new_v:.3f} "
               f"({-worsened * 100:+.1f}%)")
     if failed:
-        print(f"check_regression: {failed} serve ratio(s) regressed more "
+        print(f"check_regression: {failed} {bench} ratio(s) regressed more "
               f"than {threshold:.0%}")
         return 1
-    print(f"check_regression: {checked} serve ratios within {threshold:.0%}")
+    print(f"check_regression: {checked} {bench} ratios within "
+          f"{threshold:.0%}")
     return 0
+
+
+def check_spec(threshold: float, path: str = "") -> int:
+    """Gate the speculative-decoding bench's ratio row: acceptance rate
+    and the spec/plain goodput ratio (same-run, machine-normalized).  At
+    smoke scale the goodput ratio is scheduling noise on millisecond
+    requests, so only the acceptance rate (a pure counting statistic) is
+    gated there."""
+    path = path or os.path.join(_REPO_ROOT, "BENCH_spec.json")
+    new, base = _latest_and_prior(path)
+    if new is None:
+        return 0
+    keys = ({"accept_rate": True} if new.get("smoke")
+            else _SPEC_RATIO_KEYS)
+    return _check_ratio_keys(_ratio_row(new), _ratio_row(base), keys,
+                             threshold, "spec")
+
+
+def check_serve(threshold: float, path: str = "") -> int:
+    """Gate the serve bench's same-run ratio row (machine-normalized)."""
+    path = path or os.path.join(_REPO_ROOT, "BENCH_serve.json")
+    new, base = _latest_and_prior(path)
+    if new is None:
+        return 0
+
+    nr, br = _ratio_row(new), _ratio_row(base)
+    keys = _SERVE_RATIO_KEYS
+    if new.get("smoke"):
+        # smoke-scale static ratios are dominated by static_exact's compile
+        # stall and swing ~50% between identical runs — gate only the
+        # chunked-vs-blocking structural ratio there
+        keys = {"goodput_ratio_chunked_vs_blocking": True}
+    return _check_ratio_keys(nr, br, keys, threshold, "serve")
 
 
 def check(bench: str, variants, threshold: float, path: str = "") -> int:
@@ -168,6 +199,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.bench == "serve":
         sys.exit(check_serve(args.threshold, args.path))
+    if args.bench == "spec":
+        sys.exit(check_spec(args.threshold, args.path))
     sys.exit(check(args.bench, set(args.variants.split(",")),
                    args.threshold, args.path))
 

@@ -71,26 +71,43 @@ def _best(summaries):
     return max(summaries, key=lambda s: s["goodput_tok_s"])
 
 
-def run(smoke: bool = False) -> list:
+def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
+        slots: int = 0) -> list:
+    """``max_len`` / ``max_len_long`` / ``slots`` override the mixed and
+    long-prompt-heavy configs (0 = the defaults below), so the serve gate
+    can exercise admission at any context size — e.g. ``--max-len-long
+    4096`` — without editing this file.  Long-config prompt lengths scale
+    with the overridden context (prompts stay near max_len, generations
+    short: admission remains the dominant bill)."""
     cfg = reduced(get_config("stablelm_3b"))
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
     if smoke:
-        slots, seg_len, max_len = 2, 4, 96
-        max_len_long = 96
+        slots = slots or 2
+        seg_len, max_len = 4, max_len or 96
+        max_len_long = max_len_long or max_len
         kw = dict(rate_rps=50.0, prompt_lens=(16, 48), n_new_range=(4, 12),
                   vocab=cfg.vocab)
         kw_long = dict(rate_rps=50.0, prompt_lens=(48, 80),
                        n_new_range=(3, 8), vocab=cfg.vocab)
         n_req, n_req_long, trials, exact_trials = 6, 4, 1, 1
     else:
-        slots, seg_len, max_len = 4, 16, 768
+        slots = slots or 4
+        seg_len, max_len = 16, max_len or 768
         # long-prompt-heavy: prompts near a 2k context, short generations —
         # admission is the dominant bill (the DSA paper's long-seq case)
-        max_len_long = 2048
-        kw = dict(rate_rps=100.0, prompt_lens=(64, 512),
-                  n_new_range=(16, 192), vocab=cfg.vocab)
-        kw_long = dict(rate_rps=100.0, prompt_lens=(1100, 1900),
-                       n_new_range=(16, 96), vocab=cfg.vocab)
+        max_len_long = max_len_long or 2048
+        # overrides scale/clamp BOTH ranges so prompt + n_new <= max_len
+        # for any context size (the defaults reproduce the committed
+        # 768/2048 workloads exactly)
+        n_hi = max(4, min(192, max_len // 4))
+        p_hi = max(17, min(512, max_len - n_hi))
+        kw = dict(rate_rps=100.0, prompt_lens=(min(64, p_hi), p_hi),
+                  n_new_range=(min(16, n_hi), n_hi), vocab=cfg.vocab)
+        nl_hi = max(4, min(96, max_len_long * 7 // 100))
+        long_lens = ((1100, 1900) if max_len_long == 2048 else
+                     (max_len_long * 55 // 100, max_len_long * 93 // 100))
+        kw_long = dict(rate_rps=100.0, prompt_lens=long_lens,
+                       n_new_range=(min(16, nl_hi), nl_hi), vocab=cfg.vocab)
         n_req, n_req_long, trials, exact_trials = 24, 10, 3, 2
     wl_warm = synthetic_workload(n_req, seed=1, **kw)
     wl = synthetic_workload(n_req, seed=0, **kw)
@@ -206,6 +223,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes / few requests (CI bench-gate)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="mixed-config resident context (default 768/96)")
+    ap.add_argument("--max-len-long", type=int, default=0,
+                    help="long-prompt-heavy resident context (default "
+                         "2048; prompts scale to stay near it)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="resident decode slots (default 4/2)")
     args = ap.parse_args()
-    for line in run(smoke=args.smoke):
+    for line in run(smoke=args.smoke, max_len=args.max_len,
+                    max_len_long=args.max_len_long, slots=args.slots):
         print(line)

@@ -320,6 +320,90 @@ def dsa_decode_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     return _gqa_out(p.astype(v_cache.dtype), vs)
 
 
+def dsa_verify_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
+                               block_k: int, kv_len: jax.Array) -> jax.Array:
+    """Speculative-verify twin of ``dsa_decode_block_attention``: C chunk
+    rows, each with its OWN selected block list and ragged cache length.
+
+    q: (B, C, Hq, hd) verify-chunk queries (the pending token + draft
+    tokens, already written into the cache); idx/idx_valid: (B, C, nb)
+    per-ROW selected cache-block indices; kv_len: (B, C) per-row valid
+    cache rows (row i sees ``pos + i + 1``).  Row i performs exactly the
+    gather + masked softmax ``dsa_decode_block_attention`` would at that
+    decode step — gathered draft rows past kv_len mask to NEG just like
+    the unwritten zeros of sequential decode — which is what makes
+    verify-chunk logits bitwise equal to sequential decode logits on the
+    accepted prefix (the speculative-decoding exactness contract).
+    """
+    b, c, hq, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    g = hq // hkv
+    nb = idx.shape[-1]
+    n_kb = -(-s_len // block_k)
+    pad = n_kb * block_k - s_len
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k_cache.reshape(b, n_kb, block_k, hkv, hd)
+    vb = v_cache.reshape(b, n_kb, block_k, hkv, hdv)
+    idx2 = idx.reshape(b, c * nb)
+    ks = jnp.take_along_axis(kb, idx2[:, :, None, None, None], axis=1)
+    vs = jnp.take_along_axis(vb, idx2[:, :, None, None, None], axis=1)
+    ks = ks.reshape(b, c, nb * block_k, hkv, hd)
+    vs = vs.reshape(b, c, nb * block_k, hkv, hdv)
+    kpos = (idx[..., None] * block_k
+            + jnp.arange(block_k)[None, None, None, :]).reshape(
+                b, c, nb * block_k)
+    m = idx_valid[..., None].repeat(block_k, axis=-1).reshape(
+        b, c, nb * block_k)
+    m = m & (kpos < kv_len[:, :, None])
+    # per-row _gqa_scores/_gqa_out with a C axis: identical contractions
+    qg = q.reshape(b, c, 1, hkv, g, hd) * (hd ** -0.5)
+    s = jnp.einsum("bcqhgd,bckhd->bchgqk", qg, ks)
+    s = jnp.where(m[:, :, None, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bchgqk,bckhd->bcqhgd", p.astype(v_cache.dtype), vs)
+    return out.reshape(b, c, hq, hdv)
+
+
+def dsa_verify_attention(q, k_cache, v_cache, scores_tilde, *, keep: int,
+                         kv_len: jax.Array, local: int = 64) -> jax.Array:
+    """Speculative-verify twin of ``dsa_decode_attention`` (faithful token
+    granularity): per-ROW top-(keep+local) gather over the predicted-score
+    cache with per-row ragged kv_len.
+
+    q: (B, C, Hq, hd); scores_tilde: (B, C, S) each verify row's predicted
+    scores against the (fully chunk-written) kt cache; kv_len: (B, C).
+    Rows past a row's kv_len are invalid and never selected, so the
+    draft-written kt/K/V rows ahead of each row are invisible to it —
+    row i reproduces the sequential faithful decode step bitwise.
+    """
+    b, c, hq, hd = q.shape
+    s_len, hkv = k_cache.shape[1], k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    g = hq // hkv
+    kj = jnp.arange(s_len)[None, None, :]
+    valid = kj < kv_len[:, :, None]
+    recent = (kj >= kv_len[:, :, None] - local) & valid
+    st = jnp.where(valid & ~recent, scores_tilde,
+                   jnp.where(recent, jnp.inf, NEG))
+    n_keep = min(keep + local, s_len)
+    _, idx = jax.lax.top_k(st, n_keep)                     # (B, C, n_keep)
+    ok = jnp.take_along_axis(valid, idx, axis=2)
+    idx2 = idx.reshape(b, c * n_keep)
+    ks = jnp.take_along_axis(k_cache, idx2[:, :, None, None], axis=1)
+    vs = jnp.take_along_axis(v_cache, idx2[:, :, None, None], axis=1)
+    ks = ks.reshape(b, c, n_keep, hkv, hd)
+    vs = vs.reshape(b, c, n_keep, hkv, hdv)
+    qg = q.reshape(b, c, 1, hkv, g, hd) * (hd ** -0.5)
+    s = jnp.einsum("bcqhgd,bckhd->bchgqk", qg, ks)
+    s = jnp.where(ok[:, :, None, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bchgqk,bckhd->bcqhgd", p.astype(v_cache.dtype), vs)
+    return out.reshape(b, c, hq, hdv)
+
+
 def dsa_decode_attention(q, k_cache, v_cache, scores_tilde, *, keep: int,
                          kv_len: Optional[jax.Array] = None,
                          local: int = 64) -> jax.Array:

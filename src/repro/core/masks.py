@@ -190,6 +190,29 @@ def decode_block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
     return idx.astype(jnp.int32), ok
 
 
+def verify_block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
+                              kv_len: jax.Array, block_k: int,
+                              local: int = 64, sort: bool = True
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Speculative-verify block selection: ``decode_block_topk_indices``
+    applied independently to each of a verify chunk's C rows.
+
+    block_scores: (B, C, nKb) each verify row's approximate block scores
+    (scored against the PRE-chunk ``ktb`` — every block the chunk touches
+    lies inside row i's trailing ``local`` window for C <= local, so it is
+    force-kept/invalid in both the sequential and the verify selection and
+    its stale score never matters); kv_len: (B, C) per-row valid cache
+    rows.  Returns (idx, ok): (B, C, nb_keep) — row i selects exactly what
+    the matching sequential decode step would.
+    """
+    b, c, n_kb = block_scores.shape
+    idx, ok = decode_block_topk_indices(
+        block_scores.reshape(b * c, n_kb), nb_keep,
+        kv_len=kv_len.reshape(b * c), block_k=block_k, local=local,
+        sort=sort)
+    return idx.reshape(b, c, -1), ok.reshape(b, c, -1)
+
+
 def block_mask_from_indices(idx: jax.Array, valid: jax.Array,
                             n_kb: int) -> jax.Array:
     """Dense (B, nQb, nKb) boolean block mask (reference/oracle path)."""

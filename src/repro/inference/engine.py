@@ -77,15 +77,20 @@ def can_bucket_prompts(cfg: ArchConfig) -> bool:
             and cfg.swa_window == 0 and not cfg.enc_dec)
 
 
-def can_chunk_prefill(cfg: ArchConfig, dsa_mode: str = "off") -> bool:
+def can_chunk_prefill(cfg: ArchConfig, dsa_mode: str = "off",
+                      moe_dense: bool = False) -> bool:
     """Chunked (interleavable) admission prefill is supported wherever it
     is token-exact against the whole-prompt bucketed prefill: everything
     prompt bucketing covers, MINUS MoE archs (prefill routes tokens
     through the capacity-dispatch path while chunk steps run the
     decode-dense expert path — same math, different summation order),
     cross-attn decoders (no image side-channel at admission), and
-    DSA-over-MLA (no predicted-key cache to resume per chunk)."""
-    return (can_bucket_prompts(cfg) and cfg.moe is None
+    DSA-over-MLA (no predicted-key cache to resume per chunk).
+
+    ``moe_dense`` (Engine(moe_prefill="dense")) re-admits MoE archs:
+    whole-prompt prefill then routes the decode-dense expert path too, so
+    prefill and chunk steps are bitwise token-exact again."""
+    return (can_bucket_prompts(cfg) and (cfg.moe is None or moe_dense)
             and cfg.cross_attn_period == 0
             and not (cfg.mla is not None and dsa_mode != "off"))
 
@@ -98,6 +103,8 @@ class GenerationResult:
     tokens_per_s: float          # B * decode_steps / decode_s (0 if no steps)
     decode_dispatches: int = 0   # jitted decode dispatches issued
     decode_steps: int = 0        # decode steps EXECUTED (bucketed on scan)
+    spec_rounds: int = 0         # verify rounds (speculative path only)
+    spec_accept_hist: Optional[List[int]] = None  # rounds by emitted count
 
 
 def _sample(logits, key, greedy: bool, temperature=1.0):
@@ -118,8 +125,9 @@ class Engine:
                  long_context: bool = False, dsa_mode: str = "off",
                  cache_dtype=jnp.float32, loop: str = "scan",
                  prompt_buckets: bool = True, step_buckets: bool = True,
-                 pad_id: int = 0):
+                 pad_id: int = 0, moe_prefill: str = "capacity"):
         assert loop in ("scan", "python"), loop
+        assert moe_prefill in ("capacity", "dense"), moe_prefill
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -127,13 +135,19 @@ class Engine:
         self.pad_id = pad_id
         self.bucket_prompts = prompt_buckets and can_bucket_prompts(cfg)
         self.bucket_steps = step_buckets
+        # moe_prefill="dense": route prefill through the decode-dense
+        # expert path so prefill/chunk/decode are all token-exact (enables
+        # chunked admission + speculation for MoE archs)
+        self.moe_dense = moe_prefill == "dense" and cfg.moe is not None
         self.prefill_flags = RunFlags(mode="prefill", dsa_mode=dsa_mode,
                                       with_mse=False,
-                                      long_context=long_context)
+                                      long_context=long_context,
+                                      moe_dense=self.moe_dense)
         self.decode_flags = RunFlags(mode="decode", dsa_mode=dsa_mode,
                                      with_mse=False,
                                      long_context=long_context)
         self.cache_dtype = cache_dtype
+        self._spec_decoders: Dict[int, "object"] = {}
 
         def _prefill(params, batch, caches, lengths, flags: RunFlags):
             logits, _, caches = forward(params, cfg, flags, batch,
@@ -224,12 +238,88 @@ class Engine:
 
     # -- generation ---------------------------------------------------------
 
+    def _spec_decoder(self, k: int):
+        from repro.inference.speculative import SpeculativeDecoder
+        if k not in self._spec_decoders:
+            self._spec_decoders[k] = SpeculativeDecoder(self.cfg, k)
+        return self._spec_decoders[k]
+
+    def _generate_spec(self, prompts, n_new: int, spec: int, draft, extras,
+                       greedy: bool, seed: int, lengths, temperature: float,
+                       dsa_mode: Optional[str]) -> GenerationResult:
+        """Speculative generation: draft K tokens per row from ``draft``
+        (default: self-drafting NGramProposer), verify + commit them in
+        one fused dispatch per round (repro.inference.speculative), loop
+        until every row has its n_new tokens.  Token-exact vs the plain
+        paths: greedy at any batch size; sampled at B=1 (per-row chains —
+        see the speculative module docstring)."""
+        from repro.inference.speculative import NGramProposer, can_speculate
+        mode = dsa_mode if dsa_mode is not None else self.decode_flags.dsa_mode
+        if not can_speculate(self.cfg, mode, spec):
+            raise ValueError(
+                f"spec={spec} unsupported for arch {self.cfg.name!r} at "
+                f"dsa_mode {mode!r} (see speculative.can_speculate)")
+        prompts = np.asarray(prompts, np.int32)
+        b = prompts.shape[0]
+        logits, caches, t_prefill = self.prefill(prompts, extras,
+                                                 lengths=lengths,
+                                                 dsa_mode=dsa_mode)
+        dflags = dataclasses.replace(self.run_flags("decode", dsa_mode),
+                                     spec_verify=True)
+        temp = jnp.asarray(temperature, jnp.float32)
+        key = jax.random.PRNGKey(seed)
+        t0 = time.monotonic()
+        tok, key = _sample(logits[:, -1], key, greedy, temp)
+        if lengths is None:
+            lengths = np.full((b,), prompts.shape[1], np.int32)
+        tok_np = np.asarray(tok)
+        hist = [list(prompts[i, :int(lengths[i])]) + [int(tok_np[i, 0])]
+                for i in range(b)]
+        out_rows = [[int(tok_np[i, 0])] for i in range(b)]
+        remaining = np.full((b,), n_new - 1, np.int32)
+        active = remaining > 0
+        keys = np.tile(np.asarray(key), (b, 1))
+        greedy_v = np.full((b,), greedy, bool)
+        temps = np.full((b,), temperature, np.float32)
+        caches = unstack_group_caches(caches)
+        sd = self._spec_decoder(spec)
+        proposer = draft if draft is not None else NGramProposer()
+        accept_hist = [0] * (spec + 1)
+        rounds = 0
+        while active.any():
+            drafts = proposer.propose(
+                [np.asarray(h, np.int32) for h in hist], spec)
+            tok, caches, keys, nxt, emit, remaining_d, active_d = sd.verify(
+                self.params, tok, drafts, caches, keys, active, greedy_v,
+                temps, remaining, flags=dflags)
+            emit_np, nxt_np = np.asarray(emit), np.asarray(nxt)
+            for i in range(b):
+                e = int(emit_np[i])
+                if e:
+                    toks_i = nxt_np[i, :e].tolist()
+                    out_rows[i].extend(toks_i)
+                    hist[i].extend(toks_i)
+                    accept_hist[e - 1] += 1
+            remaining = np.asarray(remaining_d)
+            active = np.asarray(active_d)
+            rounds += 1
+        toks = np.asarray([r[:n_new] for r in out_rows], np.int32)
+        t_decode = time.monotonic() - t0
+        emitted = b * (n_new - 1)        # decode-phase tokens (tok0 excluded)
+        tps = emitted / max(t_decode, 1e-9) if emitted else 0.0
+        return GenerationResult(toks, t_prefill, t_decode, tps,
+                                decode_dispatches=rounds,
+                                decode_steps=rounds * (spec + 1),
+                                spec_rounds=rounds,
+                                spec_accept_hist=accept_hist)
+
     def generate(self, prompts: np.ndarray, n_new: int,
                  extras: Optional[Dict[str, np.ndarray]] = None,
                  greedy: bool = True, seed: int = 0,
                  lengths: Optional[np.ndarray] = None,
                  temperature: float = 1.0,
-                 dsa_mode: Optional[str] = None) -> GenerationResult:
+                 dsa_mode: Optional[str] = None,
+                 spec: int = 0, draft=None) -> GenerationResult:
         """``lengths`` (B,): per-row true prompt lengths for a ragged batch
         whose rows are RIGHT-padded to a common width — pad rows are zeroed
         from the cache and each row prefills/decodes at its own depth (the
@@ -237,8 +327,20 @@ class Engine:
         unpadded.  Default: all rows full width.  ``temperature`` scales
         sampled (non-greedy) logits; ``dsa_mode`` overrides the engine's
         DSA execution path for this call (same cache layout required —
-        ``long_context`` stays the engine's)."""
+        ``long_context`` stays the engine's).  ``spec=K`` switches to
+        speculative draft-and-verify decoding (K draft tokens per fused
+        verify dispatch, proposer ``draft``): token-exact vs spec=0 for
+        greedy at any batch size and for sampling at B=1 — a SAMPLED B>1
+        batch draws per-row B=1 chains instead of the plain path's
+        shared-key batched draw, so rows match their solo generations,
+        not the batched spec=0 call (the serving engines replay per-slot
+        B=1 chains, so requests are unaffected; see
+        repro.inference.speculative)."""
         assert n_new >= 1, "generate() needs n_new >= 1"
+        if spec:
+            return self._generate_spec(prompts, n_new, spec, draft, extras,
+                                       greedy, seed, lengths, temperature,
+                                       dsa_mode)
         b = np.asarray(prompts).shape[0]
         logits, caches, t_prefill = self.prefill(prompts, extras,
                                                  lengths=lengths,

@@ -80,6 +80,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.inference.engine import Engine, _sample, can_chunk_prefill, \
     pow2_bucket
+from repro.inference.speculative import NGramProposer, SpeculativeDecoder, \
+    can_speculate
 from repro.models.transformer import chunk_step, decode_step, init_cache, \
     unstack_group_caches
 
@@ -163,7 +165,10 @@ class ContinuousEngine:
                  long_context: bool = False, dsa_mode: str = "off",
                  cache_dtype=jnp.float32, pad_id: int = 0,
                  chunked_prefill: Optional[bool] = None,
-                 chunk_tokens: int = 64):
+                 chunk_tokens: int = 64, spec: int = 0, draft=None,
+                 spec_rounds: Optional[int] = None,
+                 max_mode_wait_s: Optional[float] = None,
+                 moe_prefill: str = "capacity"):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -173,14 +178,32 @@ class ContinuousEngine:
         self.engine = Engine(cfg, params, max_len=max_len,
                              long_context=long_context, dsa_mode=dsa_mode,
                              cache_dtype=cache_dtype, loop="scan",
-                             pad_id=pad_id)
+                             pad_id=pad_id, moe_prefill=moe_prefill)
         # chunked admission is the default wherever it is token-exact; the
         # legacy whole-prompt blocking prefill stays for ssm/swa/enc-dec
-        # (where bucketing already auto-disables) and moe/vision archs
+        # (where bucketing already auto-disables) and vision archs; MoE
+        # archs chunk-admit when moe_prefill="dense" routes their prefill
+        # through the decode-dense expert path
         chunk_ok = self.engine.bucket_prompts and can_chunk_prefill(
-            cfg, dsa_mode)
+            cfg, dsa_mode, moe_dense=self.engine.moe_dense)
         self.chunked = chunk_ok if chunked_prefill is None else (
             chunked_prefill and chunk_ok)
+        # speculative decode segments (draft-and-verify): auto-off outside
+        # the speculation envelope, mirroring chunked admission
+        self.spec = spec if (spec and can_speculate(cfg, dsa_mode, spec)
+                             ) else 0
+        self.draft = draft if draft is not None else (
+            NGramProposer() if self.spec else None)
+        # rounds per speculative segment: sized so a fully-accepted spec
+        # segment emits about one plain segment's worth of tokens
+        self.spec_rounds = (spec_rounds if spec_rounds is not None
+                            else max(1, seg_len // (self.spec + 1))
+                            ) if self.spec else 0
+        self._spec = SpeculativeDecoder(cfg, self.spec) if self.spec else None
+        # mode-affine starvation aging: a queued request whose dsa_mode
+        # can't join the current segments forces a drain/mode-switch once
+        # it has waited this long (None = wait for a natural idle drain)
+        self.max_mode_wait_s = max_mode_wait_s
         # chunk width: pow2, and block-aligned so chunk widths/starts stay
         # block_q/block_k multiples on the DSA paths (a chunk wider than a
         # small prompt bucket is fine: the overhang rows drop out of
@@ -285,6 +308,7 @@ class ContinuousEngine:
                 raise ValueError(
                     f"request {req.rid}: dsa_mode {req.dsa_mode!r} needs a "
                     f"cache layout this engine doesn't hold ({allowed})")
+        self._enq_s[req.rid] = time.monotonic()
         self.queue.append(req)
 
     def free_slots(self) -> List[int]:
@@ -298,13 +322,28 @@ class ContinuousEngine:
     def _next_admissible(self) -> Optional[int]:
         """Queue index of the first request admissible under the current
         segment mode (any request when the engine is idle) — segments are
-        mode-affine, so other-mode requests wait for an idle drain."""
+        mode-affine, so other-mode requests wait for an idle drain.
+
+        Aging (``max_mode_wait_s``): an other-mode request that has been
+        queued longer than the wait budget FORCES a drain — admission of
+        same-mode traffic stops (returns None) so the engine empties and
+        switches modes; at the idle switch FIFO puts the starved request
+        (older than everything admitted since) first.  Without aging,
+        sustained same-mode traffic could starve an other-mode request
+        indefinitely (the ROADMAP's mode-affine starvation item); with it
+        the wait is bounded by the budget plus one drain."""
         if not self.queue:
             return None
         if self._pf is None and not any(s is not None for s in self._slot):
             self._cur_mode = None         # idle: free to switch dsa_mode
         if self._cur_mode is None:
             return 0
+        if self.max_mode_wait_s is not None:
+            now = time.monotonic()
+            if any(self._eff_mode(r) != self._cur_mode
+                   and now - self._enq_s.get(r.rid, now)
+                   >= self.max_mode_wait_s for r in self.queue):
+                return None               # aged other-mode request: drain
         for i, r in enumerate(self.queue):
             if self._eff_mode(r) == self._cur_mode:
                 return i
@@ -332,6 +371,8 @@ class ContinuousEngine:
                 rest.append(r)
         while rest:
             self.queue.appendleft(rest.pop())
+        for r in group:               # admitted: drop their aging stamps
+            self._enq_s.pop(r.rid, None)
         return group
 
     def _sample_tok0(self, last_row, req: Request):
@@ -529,7 +570,8 @@ class ContinuousEngine:
             self._cur_mode = mode
             # a per-request dsa_mode override can leave the chunk-exactness
             # envelope (DSA-over-MLA): such groups fall back to blocking
-            if self.chunked and can_chunk_prefill(self.cfg, mode):
+            if self.chunked and can_chunk_prefill(
+                    self.cfg, mode, moe_dense=self.engine.moe_dense):
                 self._start_chunked_group(free, group, mode)
                 break
             self._admit_group(free, group, mode, clock, results)
@@ -541,7 +583,10 @@ class ContinuousEngine:
         kept)."""
         self.stats = {"segments": 0, "useful_tokens": 0, "admitted": 0,
                       "prefill_s": 0.0, "chunks": 0, "chunk_s": 0.0,
-                      "stall_s": 0.0, "segment_s": 0.0}
+                      "stall_s": 0.0, "segment_s": 0.0,
+                      "spec_rounds": 0, "spec_emitted": 0, "draft_s": 0.0,
+                      "accept_hist": [0] * (self.spec + 1)}
+        self._enq_s: Dict[int, float] = {}
         self._caches = unstack_group_caches(
             init_cache(self.cfg, self.slots, self.max_len,
                        self.engine.decode_flags,
@@ -578,7 +623,7 @@ class ContinuousEngine:
                     self.admit_ready(lambda: 0.0, sink)
                     self.step_prefill(lambda: 0.0, sink)
                     if any(s is not None for s in self._slot):
-                        self.run_segment(lambda: 0.0, sink)
+                        self._step_decode(lambda: 0.0, sink)
                 rid -= n
         self.reset()
 
@@ -622,6 +667,88 @@ class ContinuousEngine:
         if self._pf is None and not any(s is not None for s in self._slot):
             self._cur_mode = None         # idle: free to switch dsa_mode
 
+    # -- speculative decode segments ----------------------------------------
+
+    def run_spec_segment(self, clock, results: List[RequestResult]) -> None:
+        """Speculative decode segment: ``spec_rounds`` draft-and-verify
+        rounds over all resident slots.  Each round proposes K draft
+        tokens per slot from its token history (host), verifies + commits
+        them in ONE fused dispatch (repro.inference.speculative), and
+        collects each slot's ragged accepted length — a slot emits 1 to
+        K+1 tokens per round, bitwise the tokens its plain segments would
+        emit.  Alternates with chunked admission exactly like plain
+        segments; per-request dsa_mode overrides outside the speculation
+        envelope fall back to plain segments (``_step_decode``)."""
+        flags = dataclasses.replace(
+            self._flags(self._cur_mode or self.engine.decode_flags.dsa_mode),
+            spec_verify=True)
+        t0 = time.monotonic()
+        for _ in range(self.spec_rounds):
+            if not any(st is not None for st in self._slot):
+                break
+            ctxs = []
+            for st in self._slot:
+                if st is None:
+                    ctxs.append(np.zeros((1,), np.int32))
+                    continue
+                ctxs.append(np.concatenate(
+                    [np.asarray(st.req.prompt, np.int32),
+                     np.asarray([st.tok0], np.int32)]
+                    + [np.asarray(a, np.int32) for a in st.collected]))
+            td = time.monotonic()
+            drafts = self.draft.propose(ctxs, self.spec)
+            self.stats["draft_s"] += time.monotonic() - td
+            remaining = np.asarray(
+                [st.remaining if st else 0 for st in self._slot], np.int32)
+            tok, caches, keys, nxt, emit, _, act2 = self._spec.verify(
+                self.engine.params, jnp.asarray(self._tok), drafts,
+                self._caches, jnp.asarray(self._keys),
+                jnp.asarray(self._active), jnp.asarray(self._greedy),
+                jnp.asarray(self._temps), jnp.asarray(remaining),
+                flags=flags)
+            self._caches = caches
+            self._tok = np.array(tok)     # np.array: writable host copies
+            self._keys = np.array(keys)
+            self._active = np.array(act2)
+            emit_np, nxt_np = np.asarray(emit), np.asarray(nxt)
+            now = clock()                 # host copies above synced the round
+            self.stats["spec_rounds"] += 1
+            for i, st in enumerate(self._slot):
+                if st is None:
+                    continue
+                e = int(emit_np[i])
+                if e == 0:
+                    continue
+                st.collected.append(nxt_np[i, :e].astype(np.int32))
+                st.remaining -= e
+                self.stats["useful_tokens"] += e
+                self.stats["spec_emitted"] += e
+                self.stats["accept_hist"][e - 1] += 1
+                if st.remaining == 0:
+                    seq = np.concatenate(
+                        [np.asarray([st.tok0], np.int32)] + st.collected)
+                    results.append(RequestResult(
+                        st.req.rid, seq.astype(np.int32),
+                        int(np.asarray(st.req.prompt).shape[-1]),
+                        st.req.n_new, st.req.arrival_s, st.admit_s, now,
+                        first_token_s=st.first_token_s))
+                    self._slot[i] = None  # slot freed; reset at admit
+        self.stats["segments"] += 1
+        self.stats["segment_s"] += time.monotonic() - t0
+        if self._pf is None and not any(s is not None for s in self._slot):
+            self._cur_mode = None         # idle: free to switch dsa_mode
+
+    def _step_decode(self, clock, results: List[RequestResult]) -> None:
+        """One decode segment at the current mode: speculative when the
+        engine has spec on AND the segment's dsa_mode is inside the
+        speculation envelope (``can_speculate`` — per-request overrides
+        like DSA-over-MLA fall back), else a plain fused segment."""
+        mode = self._cur_mode or self.engine.decode_flags.dsa_mode
+        if self.spec and can_speculate(self.cfg, mode, self.spec):
+            self.run_spec_segment(clock, results)
+        else:
+            self.run_segment(clock, results)
+
     # -- serving loops ------------------------------------------------------
 
     def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
@@ -636,7 +763,7 @@ class ContinuousEngine:
             self.admit_ready(clock, results)
             self.step_prefill(clock, results)
             if any(s is not None for s in self._slot):
-                self.run_segment(clock, results)
+                self._step_decode(clock, results)
         return {r.rid: r.tokens for r in results}
 
     def serve(self, workload: Sequence[Request]) -> List[RequestResult]:
@@ -656,7 +783,7 @@ class ContinuousEngine:
             self.admit_ready(clock, results)
             self.step_prefill(clock, results)
             if any(s is not None for s in self._slot):
-                self.run_segment(clock, results)
+                self._step_decode(clock, results)
             elif self._pf is None and not self.queue and i < len(items):
                 time.sleep(max(0.0, min(items[i].arrival_s - now, 0.05)))
         return sorted(results, key=lambda r: r.rid)

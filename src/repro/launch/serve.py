@@ -29,6 +29,7 @@ from repro.configs.base import get_config, reduced
 from repro.inference.engine import Engine
 from repro.inference.scheduler import (ContinuousEngine, summarize,
                                        synthetic_workload)
+from repro.inference.speculative import can_speculate
 from repro.models.transformer import init_model
 
 
@@ -36,7 +37,12 @@ def _serve_continuous(cfg, args, params, max_len, dsa_on):
     eng = ContinuousEngine(
         cfg, params, slots=args.slots or args.batch, max_len=max_len,
         seg_len=args.seg_len, long_context=dsa_on,
-        dsa_mode=args.dsa_mode if dsa_on else "off")
+        dsa_mode=args.dsa_mode if dsa_on else "off",
+        spec=args.spec, moe_prefill=args.moe_prefill,
+        max_mode_wait_s=args.max_mode_wait)
+    if args.spec and not eng.spec:
+        print(f"note: spec={args.spec} outside the speculation envelope "
+              f"for {cfg.name}; using plain segments")
     workload = synthetic_workload(
         args.requests, rate_rps=args.rate,
         prompt_lens=(max(8, args.prompt_len // 4), args.prompt_len),
@@ -82,6 +88,18 @@ def main(argv=None):
                     help="synthetic requests to serve (--continuous)")
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson arrival rate, requests/s (--continuous)")
+    ap.add_argument("--spec", type=int, default=0,
+                    help="speculative decoding: K draft tokens verified "
+                         "per fused dispatch (0 = off; token-exact)")
+    ap.add_argument("--moe-prefill", default="capacity",
+                    choices=["capacity", "dense"],
+                    help="MoE prefill routing: 'dense' makes prefill "
+                         "token-exact with chunk/decode steps (enables "
+                         "chunked admission for MoE archs)")
+    ap.add_argument("--max-mode-wait", type=float, default=None,
+                    help="seconds a queued other-dsa_mode request may "
+                         "wait before forcing a drain/mode-switch "
+                         "(--continuous; default: wait for natural idle)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -96,7 +114,7 @@ def main(argv=None):
     eng = Engine(cfg, params, max_len=max_len,
                  long_context=dsa_on,
                  dsa_mode=args.dsa_mode if dsa_on else "off",
-                 loop=args.loop)
+                 loop=args.loop, moe_prefill=args.moe_prefill)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(1, cfg.vocab - 4,
                            size=(args.batch, args.prompt_len)).astype(np.int32)
@@ -107,12 +125,21 @@ def main(argv=None):
     if cfg.cross_attn_period:
         extras["img"] = rng.normal(
             size=(args.batch, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
-    res = eng.generate(prompts, args.new_tokens, extras=extras or None)
+    spec = args.spec
+    if spec and not can_speculate(cfg, eng.decode_flags.dsa_mode, spec):
+        print(f"note: spec={spec} outside the speculation envelope for "
+              f"{cfg.name}; using plain decode")
+        spec = 0
+    res = eng.generate(prompts, args.new_tokens, extras=extras or None,
+                       spec=spec)
     print(f"prefill: {res.prefill_s*1e3:.1f} ms   "
           f"decode: {res.decode_s:.2f} s   "
           f"throughput: {res.tokens_per_s:.1f} tok/s   "
           f"({res.decode_steps} steps in {res.decode_dispatches} "
           f"dispatch{'es' if res.decode_dispatches != 1 else ''})")
+    if res.spec_rounds:
+        print(f"speculative: {res.spec_rounds} verify rounds, "
+              f"accept hist {res.spec_accept_hist}")
     print("first new tokens:", res.tokens[:, :8].tolist())
     return res
 

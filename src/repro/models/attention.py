@@ -68,6 +68,13 @@ class RunFlags:
     long_context: bool = False     # DSA decode over predicted-key cache
     mse_stride_cap: int = 512      # subsampled-MSE rows in block mode
     decode_window: int = 0         # ring-buffer cache size override
+    # speculative decoding: route the chunk-append path through the
+    # per-row DECODE-exact verify attention (repro.inference.speculative)
+    spec_verify: bool = False
+    # serving MoE option: route prefill through the decode-dense expert
+    # path so whole-prompt prefill and chunk steps are token-exact
+    # (Engine(moe_prefill="dense"))
+    moe_dense: bool = False
 
 
 def dsa_active(cfg: ArchConfig, flags: RunFlags) -> bool:
@@ -189,6 +196,9 @@ def apply_attention(params, cfg: ArchConfig, flags: RunFlags, x, *,
 
     if flags.mode == "decode" and not cross:
         if chunk_len is not None:
+            if flags.spec_verify:
+                return _apply_verify(params, cfg, flags, x, cache, use_rope,
+                                     active, chunk_len)
             return _apply_chunk(params, cfg, flags, x, cache, use_rope,
                                 active, chunk_len, sel_len)
         return _apply_decode(params, cfg, flags, x, cache, use_rope, active)
@@ -572,6 +582,112 @@ def _dsa_chunk_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
                                        kv_len=kv_len)
 
 
+# ---------------------------------------------------------------------------
+# speculative-verify forward path (draft-and-verify decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_verify(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                  use_rope, active, chunk_len):
+    """Draft-verify chunk append: C tokens (the pending token + C-1 draft
+    tokens) written at the per-slot ``pos`` like ``_apply_chunk``, but each
+    row attends with the per-row DECODE numerics — row i reproduces the
+    single-token ``_apply_decode`` step at cache depth ``pos + i`` bitwise.
+
+    This is what lets one dispatch verify K drafts: row i's logits equal
+    the logits sequential decode would produce after committing rows < i,
+    so greedy/sampled acceptance on the host chain is exact.  Differences
+    from ``_apply_chunk``: the full PHYSICAL cache is the reduction
+    geometry (decode attends the whole buffer, masked by kv_len — there is
+    no sel_len), DSA selection is per-row block top-k over the pooled
+    score cache (``masks.verify_block_topk_indices``) rather than
+    per-query-block chunk selection, and ``ktb`` is NOT extended here —
+    every block the chunk touches lies inside each row's DECODE_LOCAL
+    force-keep window (requires C <= DECODE_LOCAL, enforced by
+    ``speculative.can_speculate``), so selection never reads the stale
+    entries and ``transformer.commit_chunk`` rebuilds them deterministically
+    after acceptance.  Rejected rows' K/V/kt writes are rolled back by
+    ``commit_chunk`` (write-then-invalidate).
+    """
+    assert not cfg.swa_window, "speculative verify needs a non-wrapping cache"
+    b, c = x.shape[:2]
+    pos = _slot_pos(cache, b)                              # (B,)
+    q, k, v = _proj_qkv(params, cfg, x)
+    offs = jnp.arange(c)
+    p = pos[:, None] + offs[None, :]                       # (B, C) global
+    if use_rope:
+        q = rope(q, p, cfg.rope_theta)
+        k = rope(k, p, cfg.rope_theta)
+    s = cache["k"].shape[1]
+    wslot = p if active is None else jnp.where(active[:, None], p, s)
+    rows = jnp.arange(b)[:, None]
+    kc = cache["k"].at[rows, wslot].set(k.astype(cache["k"].dtype),
+                                        mode="drop")
+    vc = cache["v"].at[rows, wslot].set(v.astype(cache["v"].dtype),
+                                        mode="drop")
+    adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
+    new = dict(cache, k=kc, v=vc, pos=pos + adv)
+    kv_row = (p + 1).astype(jnp.int32)                     # (B, C) per row
+    if active is not None:
+        kv_row = jnp.where(active[:, None], kv_row, 0)
+    if "kt" in cache:
+        q_t, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
+        new["kt"] = new["kt"].at[rows, wslot].set(
+            k_t.astype(new["kt"].dtype), mode="drop")
+        if dsa_active(cfg, flags):
+            out = _dsa_verify_attend(cfg, flags, q, kc, vc, q_t, new["kt"],
+                                     new["ktb"], p, kv_row)
+        else:
+            # dsa_mode "off" on a long-context cache: dense decode over the
+            # full buffer (kt maintained, like _dsa_decode's off path)
+            out = A.chunk_attention(q, kc, vc, p)
+    else:
+        out = A.chunk_attention(q, kc, vc, p)
+    out = out.reshape(b, c, -1) @ params["wo"]
+    return out, new, {}
+
+
+def _dsa_verify_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
+                       kt_full, ktb, p, kv_row):
+    """Per-row DSA decode selection + attention for a verify chunk — the
+    row-exact twin of ``_dsa_decode``'s execution paths.
+
+    q_t: (B, C, k) per-row predicted queries; kt_full/ktb: the kt cache
+    with ALL chunk rows written / the PRE-chunk pooled cache (stale only
+    in force-kept blocks — see _apply_verify); p: (B, C) global positions;
+    kv_row: (B, C) per-row kv_len.  Scores, top-k, gather and softmax all
+    run per row with exactly the decode step's shapes and reduction order.
+    """
+    dsa = cfg.dsa
+    b, c = q.shape[:2]
+    s = kc.shape[1]
+    keep = M.keep_count(s, dsa.sparsity)
+    if flags.dsa_mode == "faithful":
+        s_tilde = jnp.einsum("bck,bsk->bcs", q_t.astype(jnp.float32),
+                             kt_full.astype(jnp.float32))
+        return A.dsa_verify_attention(q, kc, vc, s_tilde, keep=keep,
+                                      kv_len=kv_row, local=DECODE_LOCAL)
+    bkd = dsa.block_k
+    n_kb = ktb.shape[1]
+    s_blk = jnp.einsum("bck,bjk->bcj", q_t.astype(jnp.float32),
+                       ktb.astype(jnp.float32)) / bkd
+    nb_keep = min(n_kb, -(-keep // bkd) + -(-DECODE_LOCAL // bkd) + 1)
+    idx, ok = M.verify_block_topk_indices(s_blk, nb_keep, kv_len=kv_row,
+                                          block_k=bkd, local=DECODE_LOCAL)
+    if flags.dsa_mode == "kernel":
+        from repro.kernels.ops import dsa_decode as dsa_decode_kernel
+        # one fused-kernel call per row INSIDE the single verify dispatch:
+        # each call is shape-identical to the sequential decode step's, so
+        # kernel-mode verification is bitwise by construction (C is small
+        # and static — the unroll is part of the (slots, K) compile)
+        outs = [dsa_decode_kernel(q[:, i:i + 1], kc, vc, idx[:, i],
+                                  ok[:, i], kv_row[:, i], block_k=bkd)
+                for i in range(c)]
+        return jnp.concatenate(outs, axis=1)
+    return A.dsa_verify_block_attention(q, kc, vc, idx, ok, block_k=bkd,
+                                        kv_len=kv_row)
+
+
 def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):
     m = cfg.mla
     d, h = cfg.d_model, cfg.n_heads
@@ -623,6 +739,9 @@ def apply_mla(params, cfg: ArchConfig, flags: RunFlags, x, *, cache=None,
     h = cfg.n_heads
     if flags.mode == "decode":
         if chunk_len is not None:
+            if flags.spec_verify:
+                return _apply_mla_verify(params, cfg, flags, x, cache,
+                                         active, chunk_len)
             return _apply_mla_chunk(params, cfg, flags, x, cache, active,
                                     chunk_len, sel_len)
         return _apply_mla_decode(params, cfg, flags, x, cache, active)
@@ -719,6 +838,54 @@ def _apply_mla_chunk(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         (b, sel, h, m.qk_rope_head_dim))], -1)
     q = jnp.concatenate([q_nope, q_rope], -1)
     out = A.chunk_attention(q, k, v, p)
+    out = out.reshape(b, c, -1) @ params["wo"]
+    return out, new, {}
+
+
+def _apply_mla_verify(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                      active, chunk_len):
+    """Draft-verify chunk append for MLA — the ABSORBED-decode twin of
+    ``_apply_mla_chunk``.  Writes C latent rows at the per-slot ``pos``
+    like the chunk path, but scores each row in the latent space exactly
+    as ``_apply_mla_decode`` does (q_nope absorbed through W_uk, values
+    combined in the latent space and expanded through W_uv), with the
+    per-row ragged kv_len — row i is bitwise the absorbed decode step at
+    depth ``pos + i``, which ``_apply_mla_chunk``'s non-absorbed expansion
+    is NOT (different contraction order).  DSA-over-MLA is outside the
+    speculation envelope (no predicted-key cache), mirroring
+    ``can_chunk_prefill``."""
+    m = cfg.mla
+    b, c, _ = x.shape
+    h = cfg.n_heads
+    pos = _slot_pos(cache, b)                              # (B,)
+    offs = jnp.arange(c)
+    p = pos[:, None] + offs[None, :]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, cfg, x, p)
+    s_cache = cache["c_kv"].shape[1]
+    wslot = p if active is None else jnp.where(active[:, None], p, s_cache)
+    rows = jnp.arange(b)[:, None]
+    ckc = cache["c_kv"].at[rows, wslot].set(
+        c_kv_new.astype(cache["c_kv"].dtype), mode="drop")
+    krc = cache["k_rope"].at[rows, wslot].set(
+        k_rope_new[:, :, 0].astype(cache["k_rope"].dtype), mode="drop")
+    adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
+    new = dict(cache, c_kv=ckc, k_rope=krc, pos=pos + adv)
+    kvb = params["kv_b"].reshape(m.kv_lora_rank, h,
+                                 m.qk_nope_head_dim + m.v_head_dim)
+    w_uk, w_uv = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    q_eff = jnp.einsum("bchn,rhn->bchr", q_nope, w_uk)     # (B,C,h,r)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bchr,bsr->bchs", q_eff, ckc.astype(q_eff.dtype))
+    s_rope = jnp.einsum("bchn,bsn->bchs", q_rope, krc.astype(q_rope.dtype))
+    s_all = (s_lat + s_rope) * scale
+    kv_row = (p + 1).astype(jnp.int32)
+    if active is not None:
+        kv_row = jnp.where(active[:, None], kv_row, 0)
+    kj = jnp.arange(ckc.shape[1])[None, None, None, :]
+    s_all = jnp.where(kj < kv_row[:, :, None, None], s_all, A.NEG)
+    pattn = jax.nn.softmax(s_all.astype(jnp.float32), axis=-1)
+    o_lat = jnp.einsum("bchs,bsr->bchr", pattn.astype(ckc.dtype), ckc)
+    out = jnp.einsum("bchr,rhv->bchv", o_lat, w_uv.astype(o_lat.dtype))
     out = out.reshape(b, c, -1) @ params["wo"]
     return out, new, {}
 

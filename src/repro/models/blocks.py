@@ -216,7 +216,11 @@ def apply_subblock(params, cfg: ArchConfig, flags: RunFlags, d: SubBlockDef,
         if new_cache is not None:
             new_cache["attn"]["ffn_prev"] = h[:, -1]
     elif d.moe:
-        y, a = apply_moe(params["mlp"], cfg, h, decode=decode)
+        # flags.moe_dense (Engine(moe_prefill="dense")): prefill routes the
+        # decode-dense expert path too, so whole-prompt prefill and chunk
+        # steps are token-exact and MoE archs can chunk-admit
+        y, a = apply_moe(params["mlp"], cfg, h,
+                         decode=decode or flags.moe_dense)
         for k, v in a.items():
             aux[k] = aux.get(k, 0.0) + v
     else:

@@ -348,6 +348,100 @@ def chunk_step(params, cfg: ArchConfig, flags: RunFlags, tokens, caches,
     return logits, new_caches
 
 
+def verify_step(params, cfg: ArchConfig, flags: RunFlags, tokens, caches,
+                active: Optional[jax.Array] = None):
+    """Speculative draft-verify step: ``chunk_step`` routed through the
+    per-row DECODE-exact verify attention (``flags.spec_verify`` must be
+    set).  tokens: (B, C) — each slot's pending token followed by C-1
+    draft tokens, appended at its cache ``pos``.  Returns (logits (B,C,V),
+    new_caches): row i's logits are bitwise the logits a sequential
+    ``decode_step`` chain would produce after committing rows < i, so the
+    caller can run exact greedy/sampled acceptance and roll back rejected
+    rows with ``commit_chunk``.  All C rows are written optimistically
+    (K/V/kt; ``ktb`` is deferred to commit) and ``pos`` advances by C for
+    active slots — a verify step MUST be followed by ``commit_chunk``.
+    Caches must be unstacked (the decode fast path layout)."""
+    assert flags.mode == "decode" and flags.spec_verify
+    b, c = tokens.shape
+    chunk_len = jnp.full((b,), c, jnp.int32)
+    logits, _, new_caches = forward(params, cfg, flags, {"tokens": tokens},
+                                    caches=caches, active=active,
+                                    chunk_len=chunk_len)
+    return logits, new_caches
+
+
+# Cache leaves holding one row per cached token in the UNSTACKED decode
+# layout (batch axis 0, token-row axis 1) — the set commit_chunk rolls back.
+_COMMIT_ROW_KEYS = ("k", "v", "kt", "c_kv", "k_rope")
+
+
+def commit_chunk(cfg: ArchConfig, caches, keep, c: int,
+                 active: Optional[jax.Array] = None):
+    """Commit the accepted prefix of a ``verify_step`` and roll back the
+    rejected tail (write-then-invalidate).
+
+    keep: (B,) accepted row count per slot (0 for frozen slots) — the
+    verify wrote C rows at ``start = pos - C`` and advanced ``pos`` to
+    ``start + C``; this zeroes every per-token cache row in
+    ``[start + keep, start + C)`` (a C-bounded scatter, not an O(S) mask),
+    sets ``pos = start + keep``, and rebuilds the DSA block-score cache
+    ``ktb`` for the (at most ceil(C/block_k)+1) blocks the chunk touched
+    by re-summing their kt rows.  The rebuild — not a scatter-subtract —
+    keeps ktb bitwise equal to the incremental per-step adds of sequential
+    decode: float subtraction does not invert addition, but a block re-sum
+    accumulates the same rows in the same order as the per-row adds (the
+    identity ``truncate_cache`` already relies on).  Resulting cache state
+    is bitwise the state sequential decode leaves after emitting ``keep``
+    tokens.  Unstacked caches only."""
+    keep = jnp.asarray(keep, jnp.int32)
+    b = keep.shape[0]
+    rows = jnp.arange(b)[:, None]
+    offs = jnp.arange(c)[None, :]
+    act = jnp.ones((b,), bool) if active is None else active
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "pos" not in node:
+                return {k: walk(v) for k, v in node.items()}
+            pos_now = node["pos"]                      # (B,) == start + adv
+            start = pos_now - jnp.where(act, c, 0)
+            out = dict(node)
+            out["pos"] = (start + keep).astype(pos_now.dtype)
+            for name in _COMMIT_ROW_KEYS:
+                if name not in node:
+                    continue
+                leaf = node[name]
+                s = leaf.shape[1]
+                # rejected rows' slots; committed offsets pushed OOB (drop)
+                wslot = jnp.where(
+                    (offs < (c - keep)[:, None]) & act[:, None],
+                    start[:, None] + keep[:, None] + offs, s)
+                zeros = jnp.zeros((b, c) + leaf.shape[2:], leaf.dtype)
+                out[name] = leaf.at[rows, wslot].set(zeros, mode="drop")
+            if "ktb" in node:
+                kt = out["kt"]
+                bkd = cfg.dsa.block_k
+                n_kb = node["ktb"].shape[1]
+                nb_t = -(-c // bkd) + 1               # chunk-touched blocks
+                jbs = (start // bkd)[:, None] + jnp.arange(nb_t)[None, :]
+                ridx = (jbs[:, :, None] * bkd
+                        + jnp.arange(bkd)[None, None, :]).reshape(
+                            b, nb_t * bkd)
+                g = jnp.take_along_axis(
+                    kt, jnp.minimum(ridx, kt.shape[1] - 1)[:, :, None],
+                    axis=1)
+                sums = g.reshape(b, nb_t, bkd, -1).sum(axis=2)
+                sjb = jnp.where((jbs < n_kb) & act[:, None], jbs, n_kb)
+                out["ktb"] = node["ktb"].at[rows, sjb].set(
+                    sums.astype(node["ktb"].dtype), mode="drop")
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(caches)
+
+
 # ---------------------------------------------------------------------------
 # caches
 # ---------------------------------------------------------------------------

@@ -285,6 +285,75 @@ def test_ttft_reported_before_finish(dense):
         assert r.ttft_s <= r.latency_s
 
 
+def test_moe_dense_prefill_enables_chunked_admission(rng):
+    """moe_prefill="dense": whole-prompt prefill routes the decode-dense
+    expert path, so MoE archs chunk-admit (can_chunk_prefill flips) and
+    stay bitwise token-exact vs Engine.generate at the same option."""
+    cfg = reduced(get_config("deepseek_v3"))        # MLA + MoE arch
+    assert cfg.moe is not None
+    params, _ = init_model(rng, cfg)
+    default = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                               seg_len=4)
+    assert not default.chunked                      # capacity-path prefill
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          moe_prefill="dense", chunk_tokens=16)
+    assert ce.chunked
+    ref = Engine(cfg, params, max_len=MAX_LEN, moe_prefill="dense")
+    reqs = _mk_requests(cfg.vocab, [(20, 5), (33, 7), (17, 4)], seed=91)
+    reqs += _mk_requests(cfg.vocab, [(20, 4)], seed=92, greedy=False)
+    reqs[-1].rid += 10
+    got = ce.run(list(reqs))
+    assert ce.stats["chunks"] > 0 and ce.stats["prefill_s"] == 0.0
+    for r in reqs:
+        exp = ref.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                           seed=r.seed).tokens[0]
+        np.testing.assert_array_equal(got[r.rid], exp, err_msg=f"rid {r.rid}")
+
+
+def _drain_with_admit_order(ce, reqs):
+    import itertools
+    counter = itertools.count()
+    clock = lambda: float(next(counter))
+    for r in reqs:
+        ce.submit(r)
+    results = []
+    while ce.has_work():
+        ce.admit_ready(clock, results)
+        ce.step_prefill(clock, results)
+        if any(s is not None for s in ce._slot):
+            ce.run_segment(clock, results)
+    return {r.rid: r for r in results}
+
+
+def test_mode_wait_aging_unstarves_other_mode_requests(dsa):
+    """Mode-affine starvation fix: a queued other-mode request older than
+    ``max_mode_wait_s`` forces a drain/mode-switch instead of waiting for
+    sustained default-mode traffic to stop.  With the budget at 0 the
+    other-mode request is admitted before later default-mode traffic;
+    without aging it is admitted last."""
+    cfg, params, _, ref = dsa
+    shapes = [(20, 12, None), (20, 4, "off"), (20, 4, None), (20, 4, None)]
+    rng_np = np.random.default_rng(71)
+    prompts = [rng_np.integers(1, cfg.vocab - 4, size=(l,)).astype(np.int32)
+               for l, _, _ in shapes]
+    mk = lambda: [Request(rid, prompts[rid], n, seed=rid, dsa_mode=m)
+                  for rid, (_, n, m) in enumerate(shapes)]
+    aged = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                            seg_len=4, long_context=True, dsa_mode="block",
+                            max_mode_wait_s=0.0)
+    res_aged = _drain_with_admit_order(aged, mk())
+    assert res_aged[1].admit_s < res_aged[3].admit_s
+    plain = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                             seg_len=4, long_context=True, dsa_mode="block")
+    res_plain = _drain_with_admit_order(plain, mk())
+    assert res_plain[1].admit_s > res_plain[3].admit_s   # the starvation
+    # aging only reorders admission — tokens stay exact per request
+    for rid, r in res_aged.items():
+        exp = ref.generate(prompts[rid][None], r.n_new,
+                           seed=rid, dsa_mode=shapes[rid][2]).tokens[0]
+        np.testing.assert_array_equal(r.tokens, exp, err_msg=f"rid {rid}")
+
+
 def test_segment_compiles_once(dense):
     """Recompilation contract: after serving varied lengths/arrivals the
     decode segment has exactly ONE compiled instance (bucketed prefill and

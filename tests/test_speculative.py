@@ -1,0 +1,274 @@
+"""Speculative decoding: draft-and-verify token-exactness.
+
+The contract under test (repro.inference.speculative): speculative decode
+is BITWISE identical to plain decode — ``Engine.generate(spec=K)`` vs
+``Engine.generate()`` and the continuous engine's speculative segments vs
+solo ``Engine.generate`` — for greedy AND seeded temperature>0, across
+dense / DSA-block / DSA-kernel / DSA-faithful / MLA / MoE paths, for any
+acceptance pattern (all-accepted via an oracle proposer, all-rejected via
+an adversarial one, and K not dividing the remaining length).  Drafts can
+only change SPEED, never tokens."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.inference.engine import Engine
+from repro.inference.scheduler import ContinuousEngine, Request
+from repro.inference.speculative import (DraftModelProposer, DraftProposer,
+                                         NGramProposer, can_speculate)
+from repro.models.transformer import init_model
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # CI installs hypothesis; local minimal envs skip
+    HAVE_HYPOTHESIS = False
+
+MAX_LEN = 96
+
+
+class OracleProposer(DraftProposer):
+    """Proposes the true continuation of a known reference sequence —
+    every draft accepted (the all-accepted edge case)."""
+
+    def __init__(self, full_seq: np.ndarray, shift: int = 0,
+                 vocab: int = 512):
+        self.full = np.asarray(full_seq, np.int32)
+        self.shift = shift
+        self.vocab = vocab
+
+    def propose(self, contexts, k):
+        out = np.empty((len(contexts), k), np.int32)
+        for r, ctx in enumerate(contexts):
+            n = len(ctx)
+            cont = self.full[n:n + k]
+            row = np.full((k,), self.full[-1], np.int32)
+            row[:cont.size] = cont
+            out[r] = (row + self.shift) % self.vocab
+        return out
+
+
+@pytest.fixture(scope="module")
+def dense(rng):
+    cfg = reduced(get_config("stablelm_3b"))
+    params, _ = init_model(rng, cfg)
+    return cfg, params, Engine(cfg, params, max_len=MAX_LEN)
+
+
+@pytest.fixture(scope="module")
+def dsa(rng):
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    return cfg, params
+
+
+def _prompt(cfg, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab - 4, size=(1, l)).astype(np.int32)
+
+
+@pytest.mark.parametrize("greedy", [True, False])
+@pytest.mark.parametrize("k", [1, 3, 4])
+def test_spec_exact_dense(dense, greedy, k):
+    """spec=K reproduces the plain engine bitwise — greedy and seeded
+    sampling, K dividing and not dividing n_new - 1."""
+    cfg, _, eng = dense
+    p = _prompt(cfg, 21, seed=k)
+    for n_new in (1, 2, 9):
+        ref = eng.generate(p, n_new, greedy=greedy, seed=5,
+                           temperature=1.3).tokens
+        got = eng.generate(p, n_new, greedy=greedy, seed=5,
+                           temperature=1.3, spec=k).tokens
+        np.testing.assert_array_equal(ref, got,
+                                      err_msg=f"k={k} n_new={n_new}")
+
+
+@pytest.mark.parametrize("mode", ["block", "kernel", "faithful", "off"])
+def test_spec_exact_dsa_modes(dsa, mode):
+    """Verify-chunk logits reproduce the sequential decode step bitwise
+    through every DSA long-context execution path — per-row block top-k
+    over the (deferred) pooled cache, the fused Pallas decode kernel
+    called per verify row, faithful token top-k, and dense-off."""
+    cfg, params = dsa
+    eng = Engine(cfg, params, max_len=MAX_LEN, long_context=True,
+                 dsa_mode=mode)
+    p = _prompt(cfg, 33, seed=7)
+    for greedy in (True, False):
+        ref = eng.generate(p, 11, greedy=greedy, seed=3).tokens
+        got = eng.generate(p, 11, greedy=greedy, seed=3, spec=3).tokens
+        np.testing.assert_array_equal(ref, got,
+                                      err_msg=f"{mode} greedy={greedy}")
+
+
+def test_spec_exact_mla_and_moe(rng):
+    """Absorbed-MLA verify and the decode-dense MoE expert path stay
+    bitwise exact under speculation (deepseek family: MLA + MoE +
+    first-k-dense prologue)."""
+    cfg = reduced(get_config("deepseek_v3"))
+    params, _ = init_model(rng, cfg)
+    eng = Engine(cfg, params, max_len=MAX_LEN)
+    p = _prompt(cfg, 17, seed=2)
+    for greedy in (True, False):
+        ref = eng.generate(p, 7, greedy=greedy, seed=9).tokens
+        got = eng.generate(p, 7, greedy=greedy, seed=9, spec=3).tokens
+        np.testing.assert_array_equal(ref, got, err_msg=f"greedy={greedy}")
+
+
+def test_spec_all_accepted_and_all_rejected(dense):
+    """Acceptance-pattern edge cases: an oracle proposer (true
+    continuation — every round commits K+1 tokens) and an adversarial one
+    (always wrong — every round commits exactly 1) both reproduce the
+    plain tokens; only round counts change."""
+    cfg, _, eng = dense
+    p = _prompt(cfg, 20, seed=11)
+    n_new, k = 10, 3
+    ref = eng.generate(p, n_new, greedy=True).tokens
+    full = np.concatenate([p[0], ref[0]])
+    oracle = eng.generate(p, n_new, greedy=True, spec=k,
+                          draft=OracleProposer(full, vocab=cfg.vocab))
+    np.testing.assert_array_equal(ref, oracle.tokens)
+    # all drafts accepted: ceil((n_new - 1) / (k + 1)) rounds
+    assert oracle.spec_rounds == -(-(n_new - 1) // (k + 1))
+    adv = eng.generate(p, n_new, greedy=True, spec=k,
+                       draft=OracleProposer(full, shift=1, vocab=cfg.vocab))
+    np.testing.assert_array_equal(ref, adv.tokens)
+    # every draft rejected: one corrected token per round
+    assert adv.spec_rounds == n_new - 1
+    assert adv.spec_accept_hist[0] == n_new - 1
+
+
+def test_spec_ragged_batch_greedy(dense):
+    """Greedy speculation over a ragged right-padded batch: every row
+    decodes at its own depth and finishes at its own round."""
+    cfg, _, eng = dense
+    rng = np.random.default_rng(13)
+    lens = np.asarray([24, 11, 17], np.int32)
+    mat = np.zeros((3, 24), np.int32)
+    for i, l in enumerate(lens):
+        mat[i, :l] = rng.integers(1, cfg.vocab - 4, size=(l,))
+    ref = eng.generate(mat, 9, greedy=True, lengths=lens).tokens
+    got = eng.generate(mat, 9, greedy=True, lengths=lens, spec=4).tokens
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_spec_gating(dense, rng):
+    """Outside the speculation envelope: Engine.generate(spec=) raises,
+    the continuous engine falls back to plain segments (mirroring
+    chunked-admission auto-off)."""
+    cfg_swa = reduced(get_config("mixtral_8x22b"))     # SWA ring cache
+    assert not can_speculate(cfg_swa)
+    params = init_model(rng, cfg_swa)[0]
+    eng = Engine(cfg_swa, params, max_len=MAX_LEN)
+    with pytest.raises(ValueError):
+        eng.generate(_prompt(cfg_swa, 8), 4, spec=2)
+    ce = ContinuousEngine(cfg_swa, params, slots=2, max_len=MAX_LEN,
+                          seg_len=4, spec=2)
+    assert ce.spec == 0                                # auto-off
+    # DSA block paths: the verify chunk must fit the DECODE_LOCAL window
+    cfg_dsa = reduced(get_config("yi_6b"))
+    assert can_speculate(cfg_dsa, "block", 4)
+    assert not can_speculate(cfg_dsa, "block", 64)
+    assert can_speculate(cfg_dsa, "off", 64)
+
+
+def test_scheduler_spec_token_exact_dense(dense):
+    """Continuous speculative segments: every request gets EXACTLY its
+    solo Engine.generate tokens (greedy + per-slot sampled chains),
+    including n_new=1 and mixed completion rounds."""
+    cfg, params, ref = dense
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          spec=3)
+    assert ce.spec == 3
+    rng = np.random.default_rng(17)
+    reqs = [Request(rid, rng.integers(1, cfg.vocab - 4, size=(l,)).astype(
+        np.int32), n, greedy=g, seed=rid * 7 + 1)
+        for rid, (l, n, g) in enumerate(
+            [(20, 5, True), (33, 9, False), (7, 1, True), (40, 12, False),
+             (12, 6, True), (25, 3, True)])]
+    got = ce.run(list(reqs))
+    for r in reqs:
+        exp = ref.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                           seed=r.seed).tokens[0]
+        np.testing.assert_array_equal(got[r.rid], exp, err_msg=f"rid {r.rid}")
+    assert ce.stats["spec_rounds"] > 0
+    assert sum(ce.stats["accept_hist"]) > 0
+
+
+def test_scheduler_spec_token_exact_dsa_kernel(dsa):
+    """Speculative segments through the fused Pallas decode kernel (one
+    kernel call per verify row inside the dispatch) stay exact, with
+    chunked admission interleaving."""
+    cfg, params = dsa
+    kw = dict(long_context=True, dsa_mode="kernel")
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          spec=4, **kw)
+    assert ce.spec == 4
+    ref = Engine(cfg, params, max_len=MAX_LEN, **kw)
+    rng = np.random.default_rng(19)
+    reqs = [Request(rid, rng.integers(1, cfg.vocab - 4, size=(l,)).astype(
+        np.int32), n, greedy=(rid % 2 == 0), seed=rid + 11)
+        for rid, (l, n) in enumerate([(48, 8), (21, 12), (65, 5), (30, 10)])]
+    got = ce.run(list(reqs))
+    for r in reqs:
+        exp = ref.generate(r.prompt[None], r.n_new, greedy=r.greedy,
+                           seed=r.seed).tokens[0]
+        np.testing.assert_array_equal(got[r.rid], exp, err_msg=f"rid {r.rid}")
+
+
+def test_draft_model_proposer_runs(dense):
+    """The small-draft-model proposer is wire-compatible (shared vocab)
+    and — like any proposer — cannot change tokens, only acceptance."""
+    cfg, params, eng = dense
+    draft = DraftModelProposer(cfg, params, window=32)
+    p = _prompt(cfg, 20, seed=23)
+    ref = eng.generate(p, 6, greedy=True).tokens
+    got = eng.generate(p, 6, greedy=True, spec=2, draft=draft).tokens
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_ngram_proposer_lookup():
+    """Self-drafting n-gram lookup proposes the continuation of the most
+    recent earlier occurrence of the trailing n-gram."""
+    ng = NGramProposer(max_n=3)
+    ctx = np.asarray([5, 6, 7, 8, 1, 2, 5, 6, 7], np.int32)
+    np.testing.assert_array_equal(ng.propose([ctx], 3)[0], [8, 1, 2])
+    # no match anywhere: repeat the last token
+    flat = np.asarray([1, 2, 3, 4], np.int32)
+    np.testing.assert_array_equal(ng.propose([flat], 2)[0], [4, 4])
+
+
+if HAVE_HYPOTHESIS:
+    _engines = {}
+
+    def _cached(kind):
+        if kind not in _engines:
+            if kind == "dense":
+                cfg = reduced(get_config("stablelm_3b"))
+                kw = {}
+            else:
+                cfg = reduced(get_config("yi_6b"))
+                kw = dict(long_context=True, dsa_mode=kind)
+            params, _ = init_model(jax.random.PRNGKey(0), cfg)
+            _engines[kind] = (cfg, Engine(cfg, params, max_len=MAX_LEN,
+                                          **kw))
+        return _engines[kind]
+
+    @settings(max_examples=8, deadline=None, derandomize=True,
+              database=None)
+    @given(st.integers(4, 40), st.integers(1, 10), st.integers(1, 5),
+           st.booleans(), st.sampled_from(["dense", "block", "kernel"]),
+           st.integers(0, 2 ** 16))
+    def test_spec_property_bitwise_exact(plen, n_new, k, greedy, kind,
+                                         seed):
+        """Property: ANY prompt length, generation length, draft count K,
+        sampling mode, and execution path produces bitwise the plain
+        engine's tokens — including K >= n_new and single-token
+        generations."""
+        cfg, eng = _cached(kind)
+        p = _prompt(cfg, plen, seed=seed)
+        ref = eng.generate(p, n_new, greedy=greedy, seed=seed,
+                           temperature=0.9).tokens
+        got = eng.generate(p, n_new, greedy=greedy, seed=seed,
+                           temperature=0.9, spec=k).tokens
+        np.testing.assert_array_equal(ref, got)
