@@ -27,6 +27,15 @@ continuous row reports ``admission_stall_frac``: the fraction of serving
 wall spent on admission work while at least one resident decoder sat idle
 (before/after evidence for the chunked path).
 
+``--mesh`` adds a ``continuous_sharded`` mode: the same chunked-admission
+engine sharded over a data-parallel serving mesh (slots axis over "data",
+weights replicated — bitwise token-exact vs single-device), over as many
+devices as divide the slot count.  Its same-run
+``goodput_ratio_sharded_vs_single`` lands in the ratio row; on CPU CI the
+mesh is forced host devices (XLA_FLAGS) so the ratio is a structural
+did-the-SPMD-program-survive signal, gated on full runs only (forced host
+"devices" share the same cores, so smoke-scale sharded goodput is noise).
+
 Methodology — warm on one traffic sample, measure on another: every server
 first serves a seed-A workload (the continuous engines also run their
 explicit ``warmup``, their whole point being a FIXED precompilable shape
@@ -72,7 +81,7 @@ def _best(summaries):
 
 
 def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
-        slots: int = 0) -> list:
+        slots: int = 0, mesh: bool = False) -> list:
     """``max_len`` / ``max_len_long`` / ``slots`` override the mixed and
     long-prompt-heavy configs (0 = the defaults below), so the serve gate
     can exercise admission at any context size — e.g. ``--max-len-long
@@ -119,6 +128,24 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     assert cont.chunked
     block = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
                              seg_len=seg_len, chunked_prefill=False)
+    cont_m = None
+    if mesh:
+        ndev = jax.device_count()
+        # a mesh whose data axis divides the slot count really shards; a
+        # non-divisible axis would silently resolve to replicated, and a
+        # dp=1 "mesh" would measure sharded-vs-itself — skip both
+        dp = max(d for d in range(1, min(slots, ndev) + 1)
+                 if slots % d == 0)
+        if dp > 1:
+            from repro.launch.mesh import make_serving_mesh
+            cont_m = ContinuousEngine(cfg, params, slots=slots,
+                                      max_len=max_len, seg_len=seg_len,
+                                      mesh=make_serving_mesh(dp))
+        else:
+            print(f"table_serve: --mesh needs a >1-device data axis that "
+                  f"divides slots={slots} ({ndev} device(s) visible; set "
+                  f"XLA_FLAGS=--xla_force_host_platform_device_count=8) — "
+                  f"skipping sharded rows")
     if max_len_long == max_len:
         cont_l, block_l = cont, block
     else:
@@ -133,7 +160,9 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     for eng, lens, wls in ((cont, mixed_lens, wl_warm),
                            (block, mixed_lens, wl_warm),
                            (cont_l, long_lens, wl_long_warm),
-                           (block_l, long_lens, wl_long_warm)):
+                           (block_l, long_lens, wl_long_warm),
+                           *(((cont_m, mixed_lens, wl_warm),)
+                             if cont_m is not None else ())):
         eng.warmup(lens)
         eng.serve(list(wls))
     bucketed = StaticBatchServer(Engine(cfg, params, max_len=max_len),
@@ -142,11 +171,13 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     bucketed.serve(list(wl))      # its finite shape set is precompilable too
 
     cont_runs, block_runs, bucketed_runs, exact_runs = [], [], [], []
-    cont_long_runs, block_long_runs = [], []
+    cont_long_runs, block_long_runs, cont_mesh_runs = [], [], []
     for _ in range(trials):       # interleave: CPU drift hits modes equally
         bucketed_runs.append(_measure(bucketed, wl))
         block_runs.append(_measure(block, wl))
         cont_runs.append(_measure(cont, wl))
+        if cont_m is not None:
+            cont_mesh_runs.append(_measure(cont_m, wl))
         block_long_runs.append(_measure(block_l, wl_long))
         cont_long_runs.append(_measure(cont_l, wl_long))
     for _ in range(exact_trials):
@@ -171,6 +202,10 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         "goodput_ratio_chunked_vs_blocking":
             s_cont["goodput_tok_s"] / max(s_block["goodput_tok_s"], 1e-9),
     }
+    s_cont_m = _best(cont_mesh_runs) if cont_mesh_runs else None
+    if s_cont_m is not None:
+        ratios["goodput_ratio_sharded_vs_single"] = (
+            s_cont_m["goodput_tok_s"] / max(s_cont["goodput_tok_s"], 1e-9))
     if not smoke:
         # long-prompt latencies at smoke scale are single milliseconds —
         # their ratios are scheduling noise, so only full runs emit them
@@ -188,7 +223,9 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     for mode, s in (("static_exact", s_exact), ("static_bucketed", s_buck),
                     ("continuous_blocking", s_block), ("continuous", s_cont),
                     ("continuous_blocking_longprompt", s_block_l),
-                    ("continuous_longprompt", s_cont_l)):
+                    ("continuous_longprompt", s_cont_l),
+                    *((("continuous_sharded", s_cont_m),)
+                      if s_cont_m is not None else ())):
         stall = s.get("admission_stall_frac")
         lines.append(row(f"table_serve/{mode}",
                          1e6 / max(s["goodput_tok_s"], 1e-9),
@@ -215,6 +252,11 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             f"_{ratios['goodput_ratio_chunked_vs_blocking_long']:.2f}x_long"
             f"_p95x{ratios['p95_ratio_chunked_vs_blocking_long']:.2f}_long")
     lines.append(row("table_serve/chunked_vs_blocking", 0.0, derived))
+    if s_cont_m is not None:
+        lines.append(row(
+            "table_serve/sharded_vs_single", 0.0,
+            f"{ratios['goodput_ratio_sharded_vs_single']:.2f}x_goodput_"
+            f"dp{len(cont_m.mesh.devices.flat)}"))
     lines.append(row("table_serve/json", 0.0, path))
     return lines
 
@@ -230,7 +272,11 @@ if __name__ == "__main__":
                          "2048; prompts scale to stay near it)")
     ap.add_argument("--slots", type=int, default=0,
                     help="resident decode slots (default 4/2)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="also measure the mesh-sharded continuous engine "
+                         "(data-parallel slots; needs >1 device)")
     args = ap.parse_args()
     for line in run(smoke=args.smoke, max_len=args.max_len,
-                    max_len_long=args.max_len_long, slots=args.slots):
+                    max_len_long=args.max_len_long, slots=args.slots,
+                    mesh=args.mesh):
         print(line)

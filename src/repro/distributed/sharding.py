@@ -17,6 +17,7 @@ Parallelism provided (DESIGN.md §3):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional, Tuple, Union
 
@@ -93,6 +94,26 @@ def make_rules(*, multi_pod: bool = False, fsdp: bool = True,
     )
 
 
+def make_serving_rules(*, long_context: bool = False) -> ShardingRules:
+    """Rule table for the resident serving engines (inference.engine /
+    inference.scheduler): pure data parallelism over the batch/slots axis.
+
+    Weights stay replicated and every slot's row is computed whole on one
+    shard, so per-row math (cache writes, DSA selection, softmax, the
+    per-slot PRNG chain) has exactly the unsharded reduction order —
+    sharded serving is BITWISE token-exact vs unsharded, the multi-device
+    serving contract pinned by tests/test_multidevice.py.  ``long_context``
+    additionally lets the KV-cache sequence axis shard over "model"
+    (flash-decode style — GSPMD splits the softmax reduction, so it is
+    throughput-only, NOT bitwise); a dp-only serving mesh has no "model"
+    axis and resolves it to replicated."""
+    return ShardingRules(
+        batch="data", seq=None, seq_sp=None,
+        cache_seq="model" if long_context else None,
+        embed=None, embed_act=None, mlp=None, heads=None, kv_heads=None,
+        qkv=None, vocab=None, expert=None)
+
+
 # Rules used by model code; installed by the launcher before tracing.
 _RULES = ShardingRules()
 
@@ -104,6 +125,35 @@ def set_rules(rules: ShardingRules) -> None:
 
 def get_rules() -> ShardingRules:
     return _RULES
+
+
+@contextlib.contextmanager
+def rules_context(rules: ShardingRules):
+    """Temporarily install a rule table (restores the previous one on
+    exit) — lets a serving engine trace its dispatches under its own rules
+    without clobbering a trainer's global table in the same process."""
+    global _RULES
+    prev = _RULES
+    _RULES = rules
+    try:
+        yield
+    finally:
+        _RULES = prev
+
+
+@contextlib.contextmanager
+def compute_context(mesh, rules: Optional[ShardingRules] = None):
+    """Install (mesh, rules) around a dispatch so ``shard`` constraints
+    resolve during tracing; a plain no-op when ``mesh`` is None (the
+    single-device engines keep their exact current programs)."""
+    if mesh is None:
+        yield
+        return
+    with contextlib.ExitStack() as stack:
+        if rules is not None:
+            stack.enter_context(rules_context(rules))
+        stack.enter_context(mesh_context(mesh))
+        yield
 
 
 def current_mesh():
@@ -187,6 +237,11 @@ def resolve_spec(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
             out.append(picked[0])
         else:
             out.append(tuple(picked))
+    # normalize: P('x', None) and P('x') are the same sharding, but jit's
+    # compile cache keys them apart — collapse trailing Nones so every
+    # producer of a leaf (device_put, constraints, GSPMD outputs) agrees
+    while out and out[-1] is None:
+        out.pop()
     return P(*out)
 
 
@@ -220,3 +275,42 @@ def tree_specs(param_tree, logical_tree, rules: Optional[ShardingRules] = None,
     return jax.tree.map(one, param_tree, logical_tree,
                         is_leaf=lambda x: isinstance(x, tuple) and all(
                             isinstance(e, (str, type(None))) for e in x))
+
+
+# -- host -> mesh placement (serving engines) --------------------------------
+
+
+def shard_put(x, *logical, mesh, rules: Optional[ShardingRules] = None):
+    """``device_put`` one array with its resolved NamedSharding."""
+    import jax.numpy as jnp
+    x = jnp.asarray(x)
+    spec = resolve_spec(tuple(x.shape), tuple(logical), rules=rules,
+                        mesh=mesh)
+    return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def shard_put_batch(x, mesh, rules: Optional[ShardingRules] = None):
+    """Place an array whose AXIS 0 is the batch/slots axis (decode carries:
+    tokens, key chains, masks, temperatures, budgets, draft matrices)."""
+    import jax.numpy as jnp
+    x = jnp.asarray(x)
+    return shard_put(x, *(("batch",) + (None,) * (x.ndim - 1)), mesh=mesh,
+                     rules=rules)
+
+
+def shard_put_tree(tree, logical_tree, mesh,
+                   rules: Optional[ShardingRules] = None):
+    """``device_put`` a pytree of arrays with its parallel logical-spec
+    tree resolved against (mesh, rules) — used to land freshly initialized
+    decode caches on the serving mesh before the first dispatch."""
+    specs = tree_specs(tree, logical_tree, rules=rules, mesh=mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
+        tree, specs)
+
+
+def replicate_put(tree, mesh):
+    """Fully replicate a pytree over the mesh (serving weights: every
+    shard computes its slot rows whole — the bitwise-exactness choice)."""
+    sh = jax.sharding.NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)

@@ -52,9 +52,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.distributed.sharding import (compute_context, make_serving_rules,
+                                        replicate_put, shard_put_batch,
+                                        shard_put_tree)
 from repro.models.attention import RunFlags
-from repro.models.transformer import (decode_step, forward, init_cache,
-                                      truncate_cache, unstack_group_caches)
+from repro.models.transformer import (cache_specs, decode_step, forward,
+                                      init_cache, truncate_cache,
+                                      unstack_group_caches)
 
 # floor for power-of-two buckets: prompt lengths and scan step counts are
 # rounded up to at least this (tiny shapes all share one compile)
@@ -107,6 +111,16 @@ class GenerationResult:
     spec_accept_hist: Optional[List[int]] = None  # rounds by emitted count
 
 
+def _ro_view(a: np.ndarray, n) -> np.ndarray:
+    """Read-only prefix view of a history buffer.  Draft proposers are
+    user code in the correctness-free zone — a writable view would let a
+    proposer that scribbles on (or retains) its contexts silently corrupt
+    the live per-slot history the next rounds draft from."""
+    v = a[:int(n)]
+    v.flags.writeable = False
+    return v
+
+
 def _sample(logits, key, greedy: bool, temperature=1.0):
     """Sample the next token from (B, V) logits; returns ((B,1) i32, key).
     Greedy never consumes the key — the per-request key chain is therefore
@@ -125,10 +139,23 @@ class Engine:
                  long_context: bool = False, dsa_mode: str = "off",
                  cache_dtype=jnp.float32, loop: str = "scan",
                  prompt_buckets: bool = True, step_buckets: bool = True,
-                 pad_id: int = 0, moe_prefill: str = "capacity"):
+                 pad_id: int = 0, moe_prefill: str = "capacity",
+                 mesh=None, shard_rules=None):
         assert loop in ("scan", "python"), loop
         assert moe_prefill in ("capacity", "dense"), moe_prefill
         self.cfg = cfg
+        # mesh-sharded serving (SPMD data parallelism over the batch/slots
+        # axis): weights are replicated — every shard computes its rows
+        # whole, which is what keeps sharded generation BITWISE equal to
+        # unsharded — while caches/carries shard over "data".  mesh=None
+        # (the default) leaves every dispatch exactly as before.
+        self.mesh = mesh
+        self.shard_rules = None
+        if mesh is not None:
+            self.shard_rules = (shard_rules if shard_rules is not None
+                                else make_serving_rules(
+                                    long_context=long_context))
+            params = replicate_put(params, mesh)
         self.params = params
         self.max_len = max_len
         self.loop = loop
@@ -183,6 +210,24 @@ class Engine:
             _decode_loop, static_argnames=("n_steps", "greedy", "flags"),
             donate_argnums=(2,))
 
+    # -- mesh placement -----------------------------------------------------
+
+    def _ctx(self):
+        """(mesh, rules) context for a dispatch — no-op without a mesh."""
+        return compute_context(self.mesh, self.shard_rules)
+
+    def put_batch(self, x):
+        """Land a batch-axis-0 carry on the serving mesh (identity without
+        one) — always re-placed so jit sees ONE stable input sharding."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        return shard_put_batch(x, self.mesh, self.shard_rules)
+
+    def put_cache(self, caches, specs):
+        if self.mesh is None:
+            return caches
+        return shard_put_tree(caches, specs, self.mesh, self.shard_rules)
+
     # -- prefill ------------------------------------------------------------
 
     def prompt_bucket(self, prompt_len: int) -> int:
@@ -225,14 +270,19 @@ class Engine:
             lengths = np.full((b,), s, np.int32)
         caches = init_cache(self.cfg, b, cache_len or self.max_len,
                             self.decode_flags, dtype=self.cache_dtype)
-        batch = {"tokens": jnp.asarray(prompts)}
+        if self.mesh is not None:
+            caches = self.put_cache(caches, cache_specs(self.cfg, caches,
+                                                        self.decode_flags))
+        batch = {"tokens": self.put_batch(prompts)}
         if extras:
-            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+            batch.update({k: self.put_batch(v) for k, v in extras.items()})
         t0 = time.monotonic()
-        last, caches = self._prefill(self.params, batch, caches,
-                                     jnp.asarray(lengths, jnp.int32),
-                                     flags=self.run_flags("prefill",
-                                                          dsa_mode))
+        with self._ctx():
+            last, caches = self._prefill(self.params, batch, caches,
+                                         self.put_batch(
+                                             np.asarray(lengths, np.int32)),
+                                         flags=self.run_flags("prefill",
+                                                              dsa_mode))
         last.block_until_ready()
         return last, caches, time.monotonic() - t0
 
@@ -273,8 +323,18 @@ class Engine:
         if lengths is None:
             lengths = np.full((b,), prompts.shape[1], np.int32)
         tok_np = np.asarray(tok)
-        hist = [list(prompts[i, :int(lengths[i])]) + [int(tok_np[i, 0])]
-                for i in range(b)]
+        # incremental per-row history buffers (prompt + every emitted
+        # token), appended in place — proposers get O(new tokens) views,
+        # not an O(T) rebuild per verify round (the scheduler's
+        # _SlotState.history, mirrored here)
+        hists, hlens = [], np.empty((b,), np.int64)
+        for i in range(b):
+            plen = int(lengths[i])
+            hb = np.empty((plen + n_new,), np.int32)
+            hb[:plen] = prompts[i, :plen]
+            hb[plen] = tok_np[i, 0]
+            hists.append(hb)
+            hlens[i] = plen + 1
         out_rows = [[int(tok_np[i, 0])] for i in range(b)]
         remaining = np.full((b,), n_new - 1, np.int32)
         active = remaining > 0
@@ -288,17 +348,23 @@ class Engine:
         rounds = 0
         while active.any():
             drafts = proposer.propose(
-                [np.asarray(h, np.int32) for h in hist], spec)
-            tok, caches, keys, nxt, emit, remaining_d, active_d = sd.verify(
-                self.params, tok, drafts, caches, keys, active, greedy_v,
-                temps, remaining, flags=dflags)
+                [_ro_view(hists[i], hlens[i]) for i in range(b)], spec)
+            with self._ctx():
+                tok, caches, keys, nxt, emit, remaining_d, active_d = \
+                    sd.verify(self.params, tok, self.put_batch(drafts),
+                              caches, self.put_batch(keys),
+                              self.put_batch(active),
+                              self.put_batch(greedy_v),
+                              self.put_batch(temps),
+                              self.put_batch(remaining), flags=dflags)
             emit_np, nxt_np = np.asarray(emit), np.asarray(nxt)
             for i in range(b):
                 e = int(emit_np[i])
                 if e:
-                    toks_i = nxt_np[i, :e].tolist()
-                    out_rows[i].extend(toks_i)
-                    hist[i].extend(toks_i)
+                    seg = nxt_np[i, :e].astype(np.int32)
+                    out_rows[i].extend(seg.tolist())
+                    hists[i][hlens[i]:hlens[i] + e] = seg
+                    hlens[i] += e
                     accept_hist[e - 1] += 1
             remaining = np.asarray(remaining_d)
             active = np.asarray(active_d)
@@ -363,10 +429,12 @@ class Engine:
                 # per-layer cache leaves: in-place slot updates inside the
                 # scan instead of restacking the whole KV cache per step
                 caches = unstack_group_caches(caches)
-                rest, caches = self._decode_loop(self.params, tok, caches,
-                                                 key, temp,
-                                                 n_steps=steps_exec,
-                                                 greedy=greedy, flags=dflags)
+                with self._ctx():
+                    rest, caches = self._decode_loop(self.params, tok,
+                                                     caches, key, temp,
+                                                     n_steps=steps_exec,
+                                                     greedy=greedy,
+                                                     flags=dflags)
                 dispatches = 1
                 toks = jnp.concatenate([tok, rest], axis=1)[:, :n_new]
             else:
@@ -374,8 +442,9 @@ class Engine:
         else:
             out: List[jax.Array] = [tok]
             for _ in range(n_new - 1):
-                logits, caches = self._decode(self.params, tok, caches,
-                                              flags=dflags)
+                with self._ctx():
+                    logits, caches = self._decode(self.params, tok, caches,
+                                                  flags=dflags)
                 dispatches += 1
                 tok, key = _sample(logits[:, -1], key, greedy, temp)
                 out.append(np.asarray(tok))

@@ -49,6 +49,14 @@ previous one retires.  This module keeps a single RESIDENT engine of
                   switches modes when it drains idle (one extra segment /
                   prefill compile per distinct mode used).
 
+Mesh sharding (``mesh=``): the resident cache and every per-slot carry
+shard over the mesh's "data" axis with replicated weights
+(distributed.sharding.make_serving_rules), so segments, chunked
+admission, and speculative verify run as ONE SPMD program per host group
+— and, because each slot's row is computed whole on one shard, sharded
+serving is BITWISE token-exact vs mesh=None (tests/test_multidevice.py,
+CI's forced-host-device multi-device job).
+
 Token-exactness: a request served here produces exactly the tokens of
 ``Engine(cfg, params, max_len=<same>).generate(prompt[None], n_new,
 temperature=..., dsa_mode=...)`` at the same seed — chunked admission
@@ -78,17 +86,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.inference.engine import Engine, _sample, can_chunk_prefill, \
-    pow2_bucket
+from repro.distributed.sharding import is_spec_leaf, shard, shard_put_tree
+from repro.inference.engine import Engine, _ro_view, _sample, \
+    can_chunk_prefill, pow2_bucket
 from repro.inference.speculative import NGramProposer, SpeculativeDecoder, \
     can_speculate
 from repro.models.transformer import chunk_step, decode_step, init_cache, \
-    unstack_group_caches
+    unstack_group_caches, unstacked_cache_specs
 
 # cache leaves with a per-token row axis right after the batch axis; their
 # slot row is zero-extended from the prefill bucket to the resident length
 # at insertion (everything beyond the prefill is wiped)
 _SEQ_KEYS = {"k", "v", "kt", "ktb", "c_kv", "k_rope"}
+
 
 
 @dataclasses.dataclass
@@ -131,6 +141,17 @@ class _SlotState:
     remaining: int
     admit_s: float
     first_token_s: float = 0.0
+    # incremental token history (prompt + tok0 + every collected token),
+    # appended as segments collect — draft proposers read a VIEW of it per
+    # verify round (O(new tokens) host work) instead of re-concatenating
+    # the full context (O(T) per round, O(T^2) over a generation)
+    history: Optional[np.ndarray] = None
+    hist_len: int = 0
+
+    def extend_history(self, toks: np.ndarray) -> None:
+        n = toks.shape[0]
+        self.history[self.hist_len:self.hist_len + n] = toks
+        self.hist_len += n
 
 
 @dataclasses.dataclass
@@ -168,17 +189,27 @@ class ContinuousEngine:
                  chunk_tokens: int = 64, spec: int = 0, draft=None,
                  spec_rounds: Optional[int] = None,
                  max_mode_wait_s: Optional[float] = None,
-                 moe_prefill: str = "capacity"):
+                 moe_prefill: str = "capacity", mesh=None,
+                 shard_rules=None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.seg_len = seg_len
+        # mesh-sharded resident serving: the (slots, max_len) cache and
+        # every per-slot carry shard over the mesh's "data" axis (weights
+        # replicated), so segments/chunks/verifies run as ONE SPMD program
+        # per host group — and stay BITWISE token-exact vs mesh=None
+        # because each slot's row never leaves its shard (pinned by
+        # tests/test_multidevice.py).  Slots not divisible by the data
+        # axis simply resolve to replicated (graceful, not an error).
+        self.mesh = mesh
         # prefill machinery + flags are shared with the static engine so the
         # scheduler is token-exact against Engine.generate per request
         self.engine = Engine(cfg, params, max_len=max_len,
                              long_context=long_context, dsa_mode=dsa_mode,
                              cache_dtype=cache_dtype, loop="scan",
-                             pad_id=pad_id, moe_prefill=moe_prefill)
+                             pad_id=pad_id, moe_prefill=moe_prefill,
+                             mesh=mesh, shard_rules=shard_rules)
         # chunked admission is the default wherever it is token-exact; the
         # legacy whole-prompt blocking prefill stays for ssm/swa/enc-dec
         # (where bucketing already auto-disables) and vision archs; MoE
@@ -214,6 +245,20 @@ class ContinuousEngine:
                                     cfg.dsa.block_k)
         self.chunk_tokens = pow2_bucket(chunk_tokens, self._chunk_floor)
 
+        # logical axes of the unstacked cache leaves by NAME, recorded
+        # from the real spec tree at reset() (single source of truth:
+        # attention.cache_specs_* via transformer.unstacked_cache_specs).
+        # The slot-insert pins its outputs to these so insert and segment
+        # dispatches agree on ONE cache sharding — otherwise the decode
+        # segment compiles once per producer; unknown leaves fall back to
+        # batch-axis-0 only
+        self._cache_logical: Dict[str, tuple] = {}
+
+        def _pin_cache_leaf(name, x):
+            log = self._cache_logical.get(
+                name, ("batch",) + (None,) * (x.ndim - 1))
+            return shard(x, *log[:x.ndim])
+
         def _insert_fn(resident, pre, slot, row):
             """Overwrite resident slot ``slot`` with row ``row`` of a
             bucket-sized prefill cache, zero-extending per-token rows —
@@ -225,7 +270,7 @@ class ContinuousEngine:
                     full = jnp.zeros(res.shape[1:], res.dtype)
                     leaf = jax.lax.dynamic_update_slice(
                         full, leaf, (0,) * leaf.ndim)
-                return res.at[slot].set(leaf)
+                return _pin_cache_leaf(name, res.at[slot].set(leaf))
             return jax.tree_util.tree_map_with_path(one, resident, pre)
 
         def _segment_fn(params, tok, caches, keys, active, greedy, temps,
@@ -280,6 +325,23 @@ class ContinuousEngine:
 
         self.queue: deque = deque()
         self.reset()     # resident caches + host mirrors of device carries
+
+    # -- mesh placement -----------------------------------------------------
+
+    def _ctx(self):
+        """Engine (mesh, rules) dispatch context — no-op without a mesh."""
+        return self.engine._ctx()
+
+    def _put_b(self, x):
+        """Slot-axis carry -> mesh (identity without one)."""
+        return self.engine.put_batch(x)
+
+    def _put_cache(self, caches):
+        """Unstacked cache tree -> mesh (identity without one)."""
+        if self.mesh is None:
+            return caches
+        return shard_put_tree(caches, unstacked_cache_specs(self.cfg, caches),
+                              self.mesh, self.engine.shard_rules)
 
     # -- queue / admission --------------------------------------------------
 
@@ -390,8 +452,15 @@ class ContinuousEngine:
         self._active[slot] = True
         self._greedy[slot] = req.greedy
         self._temps[slot] = req.temperature
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        # preallocated at the full generation size: prompt + tok0 +
+        # (n_new - 1) decoded tokens; segments append in place
+        hist = np.empty((prompt.size + req.n_new,), np.int32)
+        hist[:prompt.size] = prompt
+        hist[prompt.size] = tok0
         self._slot[slot] = _SlotState(req, tok0, [], req.n_new - 1, admit_s,
-                                      first_token_s=first_s)
+                                      first_token_s=first_s, history=hist,
+                                      hist_len=prompt.size + 1)
 
     def _admit_group(self, slots: List[int], group: List[Request], mode,
                      clock, results: List[RequestResult]) -> None:
@@ -430,9 +499,10 @@ class ContinuousEngine:
                     req.n_new, req.arrival_s, now, now, first_token_s=now))
                 continue
             slot = next(free)
-            self._caches = self._insert(self._caches, pcaches,
-                                        jnp.asarray(slot, jnp.int32),
-                                        jnp.asarray(j, jnp.int32))
+            with self._ctx():
+                self._caches = self._insert(self._caches, pcaches,
+                                            jnp.asarray(slot, jnp.int32),
+                                            jnp.asarray(j, jnp.int32))
             self._activate(slot, req, tok0, key, now, now)
 
     # -- chunked admission (default) ----------------------------------------
@@ -454,9 +524,9 @@ class ContinuousEngine:
             p = np.asarray(r.prompt, np.int32)
             mat[j, :len(p)] = p
             lengths[j] = len(p)
-        caches = unstack_group_caches(
+        caches = self._put_cache(unstack_group_caches(
             init_cache(self.cfg, bpf, bucket, self.engine.decode_flags,
-                       dtype=self.engine.cache_dtype))
+                       dtype=self.engine.cache_dtype)))
         slots = []
         it = iter(free)
         for r in group:
@@ -502,7 +572,7 @@ class ContinuousEngine:
         if pf is None:
             return
         bpf = pf.lengths.shape[0]
-        active = jnp.ones((bpf,), bool)
+        active = self._put_b(np.ones((bpf,), bool))
         flags = self._flags(pf.mode)
         stalled = any(st is not None for st in self._slot)
         t0 = time.monotonic()
@@ -513,10 +583,11 @@ class ContinuousEngine:
             toks = pf.mat[:, j * pf.chunk:(j + 1) * pf.chunk]
             chunk_len = np.clip(pf.lengths - j * pf.chunk, 0,
                                 pf.chunk).astype(np.int32)
-            last, pf.caches = self._chunk(
-                self.engine.params, pf.caches, jnp.asarray(toks),
-                jnp.asarray(chunk_len), active, flags=flags,
-                sel_len=pf.bucket)
+            with self._ctx():
+                last, pf.caches = self._chunk(
+                    self.engine.params, pf.caches, self._put_b(toks),
+                    self._put_b(chunk_len), active, flags=flags,
+                    sel_len=pf.bucket)
             pf.j += 1
             finishing = [i for i, r in enumerate(pf.reqs)
                          if -(-len(r.prompt) // pf.chunk) == j + 1]
@@ -536,9 +607,10 @@ class ContinuousEngine:
                         first_token_s=now))
                     continue
                 slot = pf.slots[i]        # early activation: decode NOW
-                self._caches = self._insert(self._caches, pf.caches,
-                                            jnp.asarray(slot, jnp.int32),
-                                            jnp.asarray(i, jnp.int32))
+                with self._ctx():
+                    self._caches = self._insert(self._caches, pf.caches,
+                                                jnp.asarray(slot, jnp.int32),
+                                                jnp.asarray(i, jnp.int32))
                 self._reserved.discard(slot)
                 self._activate(slot, req, tok0, key, now, now)
         if not synced:
@@ -587,10 +659,20 @@ class ContinuousEngine:
                       "spec_rounds": 0, "spec_emitted": 0, "draft_s": 0.0,
                       "accept_hist": [0] * (self.spec + 1)}
         self._enq_s: Dict[int, float] = {}
-        self._caches = unstack_group_caches(
+        caches = unstack_group_caches(
             init_cache(self.cfg, self.slots, self.max_len,
                        self.engine.decode_flags,
                        dtype=self.engine.cache_dtype))
+
+        def record(path, log):
+            name = _leaf_name(path)
+            if name is not None:
+                self._cache_logical[name] = tuple(log)
+
+        jax.tree_util.tree_map_with_path(
+            record, unstacked_cache_specs(self.cfg, caches),
+            is_leaf=is_spec_leaf)
+        self._caches = self._put_cache(caches)
         self._tok = np.zeros((self.slots, 1), np.int32)
         self._keys = np.zeros((self.slots, 2), np.uint32)
         self._active = np.zeros((self.slots,), bool)
@@ -635,11 +717,12 @@ class ContinuousEngine:
             [s.remaining if s else 0 for s in self._slot], np.int32)
         mode = self._cur_mode or self.engine.decode_flags.dsa_mode
         t0 = time.monotonic()
-        tok, caches, keys, active, rem, toks = self._segment(
-            self.engine.params, jnp.asarray(self._tok), self._caches,
-            jnp.asarray(self._keys), jnp.asarray(self._active),
-            jnp.asarray(self._greedy), jnp.asarray(self._temps),
-            jnp.asarray(remaining), flags=self._flags(mode))
+        with self._ctx():
+            tok, caches, keys, active, rem, toks = self._segment(
+                self.engine.params, self._put_b(self._tok), self._caches,
+                self._put_b(self._keys), self._put_b(self._active),
+                self._put_b(self._greedy), self._put_b(self._temps),
+                self._put_b(remaining), flags=self._flags(mode))
         self._caches = caches
         self._tok = np.array(tok)           # np.array: writable host copies
         self._keys = np.array(keys)
@@ -653,6 +736,7 @@ class ContinuousEngine:
                 continue
             emitted = min(st.remaining, self.seg_len)
             st.collected.append(toks[i, :emitted])
+            st.extend_history(toks[i, :emitted])
             st.remaining -= emitted
             self.stats["useful_tokens"] += emitted
             if st.remaining == 0:
@@ -683,29 +767,28 @@ class ContinuousEngine:
             self._flags(self._cur_mode or self.engine.decode_flags.dsa_mode),
             spec_verify=True)
         t0 = time.monotonic()
+        draft_s0 = self.stats["draft_s"]
+        rounds_run = 0
         for _ in range(self.spec_rounds):
             if not any(st is not None for st in self._slot):
                 break
-            ctxs = []
-            for st in self._slot:
-                if st is None:
-                    ctxs.append(np.zeros((1,), np.int32))
-                    continue
-                ctxs.append(np.concatenate(
-                    [np.asarray(st.req.prompt, np.int32),
-                     np.asarray([st.tok0], np.int32)]
-                    + [np.asarray(a, np.int32) for a in st.collected]))
+            # proposers read each slot's incremental history VIEW (read-
+            # only) — O(new tokens) per round, not an O(T) re-concatenation
+            # of prompt + every collected chunk (O(T^2) over a generation)
+            ctxs = [_ro_view(st.history, st.hist_len) if st is not None
+                    else np.zeros((1,), np.int32) for st in self._slot]
             td = time.monotonic()
             drafts = self.draft.propose(ctxs, self.spec)
             self.stats["draft_s"] += time.monotonic() - td
             remaining = np.asarray(
                 [st.remaining if st else 0 for st in self._slot], np.int32)
-            tok, caches, keys, nxt, emit, _, act2 = self._spec.verify(
-                self.engine.params, jnp.asarray(self._tok), drafts,
-                self._caches, jnp.asarray(self._keys),
-                jnp.asarray(self._active), jnp.asarray(self._greedy),
-                jnp.asarray(self._temps), jnp.asarray(remaining),
-                flags=flags)
+            with self._ctx():
+                tok, caches, keys, nxt, emit, _, act2 = self._spec.verify(
+                    self.engine.params, self._put_b(self._tok),
+                    self._put_b(drafts), self._caches,
+                    self._put_b(self._keys), self._put_b(self._active),
+                    self._put_b(self._greedy), self._put_b(self._temps),
+                    self._put_b(remaining), flags=flags)
             self._caches = caches
             self._tok = np.array(tok)     # np.array: writable host copies
             self._keys = np.array(keys)
@@ -713,6 +796,7 @@ class ContinuousEngine:
             emit_np, nxt_np = np.asarray(emit), np.asarray(nxt)
             now = clock()                 # host copies above synced the round
             self.stats["spec_rounds"] += 1
+            rounds_run += 1
             for i, st in enumerate(self._slot):
                 if st is None:
                     continue
@@ -720,6 +804,7 @@ class ContinuousEngine:
                 if e == 0:
                     continue
                 st.collected.append(nxt_np[i, :e].astype(np.int32))
+                st.extend_history(nxt_np[i, :e].astype(np.int32))
                 st.remaining -= e
                 self.stats["useful_tokens"] += e
                 self.stats["spec_emitted"] += e
@@ -733,8 +818,14 @@ class ContinuousEngine:
                         st.req.n_new, st.req.arrival_s, st.admit_s, now,
                         first_token_s=st.first_token_s))
                     self._slot[i] = None  # slot freed; reset at admit
-        self.stats["segments"] += 1
-        self.stats["segment_s"] += time.monotonic() - t0
+        # stats feed the chunk-burst budget tuner (_chunk_burst): count a
+        # segment only when rounds actually ran, and report DEVICE segment
+        # time — host drafting excluded — so the tuner sizes admission
+        # bursts against real verify cost, not draft-inflated wall time
+        if rounds_run:
+            self.stats["segments"] += 1
+            self.stats["segment_s"] += ((time.monotonic() - t0)
+                                        - (self.stats["draft_s"] - draft_s0))
         if self._pf is None and not any(s is not None for s in self._slot):
             self._cur_mode = None         # idle: free to switch dsa_mode
 
@@ -864,7 +955,16 @@ def synthetic_workload(n_requests: int, *, rate_rps: float,
 def summarize(results: Sequence[RequestResult],
               wall_s: float) -> Dict[str, float]:
     """Serving metrics: goodput (delivered new tokens per wall second),
-    request latency percentiles, and time-to-first-token percentiles."""
+    request latency percentiles, and time-to-first-token percentiles.
+    Empty ``results`` (an aborted serve, a smoke bench that admitted
+    nothing) returns zeroed metrics instead of tracebacking on the
+    percentile of an empty array."""
+    if not results:
+        return {"n_requests": 0, "delivered_tokens": 0,
+                "wall_s": round(wall_s, 3), "goodput_tok_s": 0.0,
+                "p50_latency_s": 0.0, "p95_latency_s": 0.0,
+                "mean_latency_s": 0.0, "p50_ttft_s": 0.0,
+                "p95_ttft_s": 0.0}
     lats = np.asarray([r.latency_s for r in results])
     ttfts = np.asarray([r.ttft_s for r in results])
     toks = sum(r.n_new for r in results)

@@ -132,11 +132,15 @@ class DraftModelProposer(DraftProposer):
     """A small draft ``Transformer`` sharing the tokenizer/vocab: greedy
     continuation over a trailing ``window`` of each context (stateless —
     no draft KV cache to keep coherent with slot churn, at the price of a
-    window re-read per proposed token).  One jitted forward per proposed
-    token at a fixed (B, window+k) shape, so drafting never recompiles.
-    Quality-only: draft positions restart at 0 inside the window, which
-    shifts RoPE phases vs the target model but can only lower acceptance,
-    never correctness."""
+    window re-read per proposed token).  One jitted extend-by-one per
+    proposed token at a fixed (B, window+k) shape, so drafting never
+    recompiles.  The window buffer STAYS ON DEVICE between the k greedy
+    steps — one host->device upload per round and one download at the end
+    (each step's argmax is scattered in on device via ``.at[rows,
+    lens].set``), instead of re-uploading the whole (B, window+k) buffer k
+    times per round.  Quality-only: draft positions restart at 0 inside
+    the window, which shifts RoPE phases vs the target model but can only
+    lower acceptance, never correctness."""
 
     def __init__(self, cfg: ArchConfig, params, window: int = 64):
         self.cfg = cfg
@@ -144,13 +148,15 @@ class DraftModelProposer(DraftProposer):
         self.window = int(window)
         flags = RunFlags(mode="train", dsa_mode="off", with_mse=False)
 
-        def _next(params, toks, lengths):
+        def _extend(params, toks, lengths):
             logits, _, _ = forward(params, cfg, flags, {"tokens": toks})
             idx = (lengths - 1)[:, None, None]
             last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
-            return jnp.argmax(last, -1).astype(jnp.int32)
+            nxt = jnp.argmax(last, -1).astype(jnp.int32)
+            rows = jnp.arange(toks.shape[0])
+            return toks.at[rows, lengths].set(nxt), lengths + 1
 
-        self._next = jax.jit(_next)
+        self._extend = jax.jit(_extend, donate_argnums=(1,))
 
     def propose(self, contexts, k: int) -> np.ndarray:
         b, w = len(contexts), self.window
@@ -163,13 +169,11 @@ class DraftModelProposer(DraftProposer):
                 buf[r, :m] = ctx[-m:]
             lens[r] = max(m, 1)
         start = lens.copy()
-        rows = np.arange(b)
+        dbuf, dlens = jnp.asarray(buf), jnp.asarray(lens)  # ONE upload
         for _ in range(k):
-            nxt = np.asarray(self._next(self.params, jnp.asarray(buf),
-                                        jnp.asarray(lens)))
-            buf[rows, lens] = nxt
-            lens += 1
-        return np.stack([buf[r, start[r]:start[r] + k] for r in range(b)])
+            dbuf, dlens = self._extend(self.params, dbuf, dlens)
+        out = np.asarray(dbuf)                             # ONE download
+        return np.stack([out[r, start[r]:start[r] + k] for r in range(b)])
 
 
 # ---------------------------------------------------------------------------

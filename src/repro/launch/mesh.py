@@ -25,3 +25,17 @@ def make_host_mesh(model: int = 1):
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_serving_mesh(dp: int = 0):
+    """Data-parallel serving mesh: a single "data" axis over ``dp``
+    devices (0 = all).  The resident serving engines shard their slot axis
+    over it (sharding.make_serving_rules); on CI this is exercised with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the SPMD
+    serving program runs without accelerators."""
+    n = dp or len(jax.devices())
+    try:
+        return jax.make_mesh((n,), ("data",))
+    except Exception:       # older jax without jax.make_mesh
+        import numpy as np
+        return jax.sharding.Mesh(np.asarray(jax.devices()[:n]), ("data",))

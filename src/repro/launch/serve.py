@@ -17,6 +17,12 @@ fused ``--seg-len``-step segments with per-segment retirement/admission:
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b \
         --reduced --continuous --requests 16 --rate 4 --slots 4
+
+``--mesh`` shards the resident engine over a data-parallel serving mesh of
+``--dp`` devices (0 = all): the (slots, max_len) cache and every per-slot
+carry shard over the "data" axis with replicated weights, and serving
+stays BITWISE token-exact vs single-device.  Try it without accelerators
+via XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
@@ -30,16 +36,17 @@ from repro.inference.engine import Engine
 from repro.inference.scheduler import (ContinuousEngine, summarize,
                                        synthetic_workload)
 from repro.inference.speculative import can_speculate
+from repro.launch.mesh import make_serving_mesh
 from repro.models.transformer import init_model
 
 
-def _serve_continuous(cfg, args, params, max_len, dsa_on):
+def _serve_continuous(cfg, args, params, max_len, dsa_on, mesh):
     eng = ContinuousEngine(
         cfg, params, slots=args.slots or args.batch, max_len=max_len,
         seg_len=args.seg_len, long_context=dsa_on,
         dsa_mode=args.dsa_mode if dsa_on else "off",
         spec=args.spec, moe_prefill=args.moe_prefill,
-        max_mode_wait_s=args.max_mode_wait)
+        max_mode_wait_s=args.max_mode_wait, mesh=mesh)
     if args.spec and not eng.spec:
         print(f"note: spec={args.spec} outside the speculation envelope "
               f"for {cfg.name}; using plain segments")
@@ -100,6 +107,12 @@ def main(argv=None):
                     help="seconds a queued other-dsa_mode request may "
                          "wait before forcing a drain/mode-switch "
                          "(--continuous; default: wait for natural idle)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the engine over a data-parallel serving "
+                         "mesh (slots axis over 'data'; bitwise-exact)")
+    ap.add_argument("--dp", type=int, default=0,
+                    help="devices in the serving mesh (with --mesh; "
+                         "0 = all visible devices)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -109,12 +122,16 @@ def main(argv=None):
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.max_len or (args.prompt_len + args.new_tokens + 16)
     dsa_on = args.dsa and cfg.dsa.enabled
+    mesh = make_serving_mesh(args.dp) if (args.mesh or args.dp) else None
+    if mesh is not None:
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{len(mesh.devices.flat)} devices")
     if args.continuous:
-        return _serve_continuous(cfg, args, params, max_len, dsa_on)
+        return _serve_continuous(cfg, args, params, max_len, dsa_on, mesh)
     eng = Engine(cfg, params, max_len=max_len,
                  long_context=dsa_on,
                  dsa_mode=args.dsa_mode if dsa_on else "off",
-                 loop=args.loop, moe_prefill=args.moe_prefill)
+                 loop=args.loop, moe_prefill=args.moe_prefill, mesh=mesh)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(1, cfg.vocab - 4,
                            size=(args.batch, args.prompt_len)).astype(np.int32)

@@ -348,6 +348,9 @@ def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         p = pos[:, None]                                   # per-row positions
         q = rope(q, p, cfg.rope_theta)
         k = rope(k, p, cfg.rope_theta)
+    # slot-axis data parallelism (serving mesh): q and the cache carry stay
+    # sharded over "batch" so the fused segment scan never gathers them
+    q = shard(q, "batch", None, "heads", "qkv")
     s = cache["k"].shape[1]
     slot = jnp.where(jnp.asarray(s) > pos, pos, pos % s)   # ring for SWA
     wslot = slot if active is None else jnp.where(active, slot, s)
@@ -356,6 +359,8 @@ def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
                                         mode="drop")
     vc = cache["v"].at[rows, wslot].set(v[:, 0].astype(cache["v"].dtype),
                                         mode="drop")
+    kc = shard(kc, "batch", "cache_seq", "kv_heads", "qkv")
+    vc = shard(vc, "batch", "cache_seq", "kv_heads", "qkv")
     new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
     new = dict(cache, k=kc, v=vc, pos=new_pos)
     kv_len = jnp.minimum(pos + 1, s).astype(jnp.int32)
@@ -377,6 +382,7 @@ def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         win = cfg.swa_window or 0
         out = A.decode_attention(q, kc, vc, kv_len=kv_len,
                                  window=win if win and s > win else 0)
+    out = shard(out, "batch", None, "heads", "qkv")
     out = out.reshape(b, 1, -1) @ params["wo"]
     return out, new, {}
 
@@ -396,8 +402,9 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
     b, s = kc.shape[0], kc.shape[1]
     rows = jnp.arange(b)
     q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
-    new["kt"] = new["kt"].at[rows, wslot].set(
-        k_t[:, 0].astype(new["kt"].dtype), mode="drop")
+    new["kt"] = shard(new["kt"].at[rows, wslot].set(
+        k_t[:, 0].astype(new["kt"].dtype), mode="drop"),
+        "batch", "cache_seq", "pred_k")
     keep = M.keep_count(s, dsa.sparsity)
     if flags.dsa_mode == "off":
         # per-request dsa_mode override on a long-context engine: dense
@@ -417,8 +424,9 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
     # (frozen rows carry an OOB block index and drop their add).
     bkd = dsa.block_k
     jb = wslot // bkd
-    new["ktb"] = new["ktb"].at[rows, jb].add(
-        k_t[:, 0].astype(new["ktb"].dtype), mode="drop")
+    new["ktb"] = shard(new["ktb"].at[rows, jb].add(
+        k_t[:, 0].astype(new["ktb"].dtype), mode="drop"),
+        "batch", "blocks", "pred_k")
     n_kb = new["ktb"].shape[1]
     s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
                        new["ktb"].astype(jnp.float32)) / bkd
@@ -480,12 +488,15 @@ def _apply_chunk(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     # the cache end drop OOB either way)
     wslot = p if active is None else jnp.where(active[:, None], p, s)
     rows = jnp.arange(b)[:, None]
+    q = shard(q, "batch", None, "heads", "qkv")
     kc = cache["k"].at[rows, wslot].set(
         jnp.where(live[..., None, None], k, 0).astype(cache["k"].dtype),
         mode="drop")
     vc = cache["v"].at[rows, wslot].set(
         jnp.where(live[..., None, None], v, 0).astype(cache["v"].dtype),
         mode="drop")
+    kc = shard(kc, "batch", "cache_seq", "kv_heads", "qkv")
+    vc = shard(vc, "batch", "cache_seq", "kv_heads", "qkv")
     adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
     new = dict(cache, k=kc, v=vc, pos=pos + adv)
     kv_len = (pos + adv).astype(jnp.int32)
@@ -499,6 +510,7 @@ def _apply_chunk(params, cfg: ArchConfig, flags: RunFlags, x, cache,
             out = A.chunk_attention(q, kc[:, :sel], vc[:, :sel], p)
     else:
         out = A.chunk_attention(q, kc[:, :sel], vc[:, :sel], p)
+    out = shard(out, "batch", None, "heads", "qkv")
     out = out.reshape(b, c, -1) @ params["wo"]
     return out, new, {}
 
@@ -525,8 +537,9 @@ def _chunk_fill_pred(params, cfg: ArchConfig, x, new, wslot, live, pos,
     ktv = jnp.where(live[..., None], k_t, 0)
     kt_sel = new["kt"].at[rows, wslot].set(
         k_t.astype(new["kt"].dtype), mode="drop")
-    new["kt"] = new["kt"].at[rows, wslot].set(
-        ktv.astype(new["kt"].dtype), mode="drop")
+    new["kt"] = shard(new["kt"].at[rows, wslot].set(
+        ktv.astype(new["kt"].dtype), mode="drop"),
+        "batch", "cache_seq", "pred_k")
     bkd = dsa.block_k
     assert c % bkd == 0, (c, bkd)
     part = ktv.reshape(b, c // bkd, bkd, -1).sum(axis=2)
@@ -534,8 +547,9 @@ def _chunk_fill_pred(params, cfg: ArchConfig, x, new, wslot, live, pos,
     jb = (pos // bkd)[:, None] + jnp.arange(c // bkd)[None, :]
     if active is not None:
         jb = jnp.where(active[:, None], jb, n_kb)
-    new["ktb"] = new["ktb"].at[rows, jb].add(
-        part.astype(new["ktb"].dtype), mode="drop")
+    new["ktb"] = shard(new["ktb"].at[rows, jb].add(
+        part.astype(new["ktb"].dtype), mode="drop"),
+        "batch", "blocks", "pred_k")
     return q_t, kt_sel
 
 
@@ -621,10 +635,13 @@ def _apply_verify(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     s = cache["k"].shape[1]
     wslot = p if active is None else jnp.where(active[:, None], p, s)
     rows = jnp.arange(b)[:, None]
+    q = shard(q, "batch", None, "heads", "qkv")
     kc = cache["k"].at[rows, wslot].set(k.astype(cache["k"].dtype),
                                         mode="drop")
     vc = cache["v"].at[rows, wslot].set(v.astype(cache["v"].dtype),
                                         mode="drop")
+    kc = shard(kc, "batch", "cache_seq", "kv_heads", "qkv")
+    vc = shard(vc, "batch", "cache_seq", "kv_heads", "qkv")
     adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
     new = dict(cache, k=kc, v=vc, pos=pos + adv)
     kv_row = (p + 1).astype(jnp.int32)                     # (B, C) per row
@@ -632,8 +649,9 @@ def _apply_verify(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         kv_row = jnp.where(active[:, None], kv_row, 0)
     if "kt" in cache:
         q_t, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
-        new["kt"] = new["kt"].at[rows, wslot].set(
-            k_t.astype(new["kt"].dtype), mode="drop")
+        new["kt"] = shard(new["kt"].at[rows, wslot].set(
+            k_t.astype(new["kt"].dtype), mode="drop"),
+            "batch", "cache_seq", "pred_k")
         if dsa_active(cfg, flags):
             out = _dsa_verify_attend(cfg, flags, q, kc, vc, q_t, new["kt"],
                                      new["ktb"], p, kv_row)
@@ -643,6 +661,7 @@ def _apply_verify(params, cfg: ArchConfig, flags: RunFlags, x, cache,
             out = A.chunk_attention(q, kc, vc, p)
     else:
         out = A.chunk_attention(q, kc, vc, p)
+    out = shard(out, "batch", None, "heads", "qkv")
     out = out.reshape(b, c, -1) @ params["wo"]
     return out, new, {}
 
@@ -827,6 +846,8 @@ def _apply_mla_chunk(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     krc = cache["k_rope"].at[rows, wslot].set(
         jnp.where(live[..., None], k_rope_new[:, :, 0],
                   0).astype(cache["k_rope"].dtype), mode="drop")
+    ckc = shard(ckc, "batch", "cache_seq", "lora")
+    krc = shard(krc, "batch", "cache_seq", None)
     adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
     new = dict(cache, c_kv=ckc, k_rope=krc, pos=pos + adv)
     sel = s_cache if sel_len is None else sel_len
@@ -868,6 +889,8 @@ def _apply_mla_verify(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         c_kv_new.astype(cache["c_kv"].dtype), mode="drop")
     krc = cache["k_rope"].at[rows, wslot].set(
         k_rope_new[:, :, 0].astype(cache["k_rope"].dtype), mode="drop")
+    ckc = shard(ckc, "batch", "cache_seq", "lora")
+    krc = shard(krc, "batch", "cache_seq", None)
     adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
     new = dict(cache, c_kv=ckc, k_rope=krc, pos=pos + adv)
     kvb = params["kv_b"].reshape(m.kv_lora_rank, h,
@@ -908,6 +931,8 @@ def _apply_mla_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         c_kv_new[:, 0].astype(cache["c_kv"].dtype), mode="drop")
     krc = cache["k_rope"].at[rows, wslot].set(
         k_rope_new[:, 0, 0].astype(cache["k_rope"].dtype), mode="drop")
+    ckc = shard(ckc, "batch", "cache_seq", "lora")
+    krc = shard(krc, "batch", "cache_seq", None)
     new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
     new = dict(cache, c_kv=ckc, k_rope=krc, pos=new_pos)
     # absorb kv_b: W_uk (r, h, nope), W_uv (r, h, v)

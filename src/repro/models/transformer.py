@@ -484,3 +484,19 @@ def cache_specs(cfg: ArchConfig, caches, flags: RunFlags):
         specs["prologue"] = [B.subblock_cache_specs(cfg, d, c)
                              for c in caches["prologue"]]
     return specs
+
+
+def unstacked_cache_specs(cfg: ArchConfig, caches):
+    """Logical-axis spec tree parallel to an UNSTACKED decode cache (the
+    per-layer list layout of ``unstack_group_caches``) — what the serving
+    engines resolve against the serving mesh to land the resident cache
+    sharded over the slots axis (distributed.sharding.shard_put_tree)."""
+    defs = B.group_defs(cfg)
+    specs: Dict[str, Any] = {"groups": [
+        {f"b{i}": B.subblock_cache_specs(cfg, d, g[f"b{i}"])
+         for i, d in enumerate(defs)} for g in caches["groups"]]}
+    if "prologue" in caches:
+        d = B.SubBlockDef("mla" if cfg.mla is not None else "attn", moe=False)
+        specs["prologue"] = [B.subblock_cache_specs(cfg, d, c)
+                             for c in caches["prologue"]]
+    return specs

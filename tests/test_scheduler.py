@@ -11,7 +11,8 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.inference.engine import Engine
-from repro.inference.scheduler import ContinuousEngine, Request
+from repro.inference.scheduler import (ContinuousEngine, Request,
+                                       RequestResult, summarize)
 from repro.models.transformer import init_model
 
 try:
@@ -352,6 +353,22 @@ def test_mode_wait_aging_unstarves_other_mode_requests(dsa):
         exp = ref.generate(prompts[rid][None], r.n_new,
                            seed=rid, dsa_mode=shapes[rid][2]).tokens[0]
         np.testing.assert_array_equal(r.tokens, exp, err_msg=f"rid {rid}")
+
+
+def test_summarize_empty_results_returns_zeroed_metrics():
+    """Regression: an aborted serve / smoke bench with no completed
+    requests must summarize to zeroed metrics, not traceback on the
+    percentile of an empty array."""
+    s = summarize([], 1.25)
+    assert s["n_requests"] == 0 and s["delivered_tokens"] == 0
+    assert s["wall_s"] == 1.25 and s["goodput_tok_s"] == 0.0
+    for k in ("p50_latency_s", "p95_latency_s", "mean_latency_s",
+              "p50_ttft_s", "p95_ttft_s"):
+        assert s[k] == 0.0
+    # non-empty keeps the same key set (nothing downstream re-keys)
+    full = summarize([RequestResult(0, np.zeros((3,), np.int32), 4, 3,
+                                    0.0, 0.1, 0.5, first_token_s=0.2)], 1.0)
+    assert set(full) == set(s)
 
 
 def test_segment_compiles_once(dense):
