@@ -19,7 +19,10 @@ gates compare machine-normalized quantities: decode rows gate
 baseline), and serve runs gate the ``mode == "ratio"`` row — same-run
 goodput ratios of the continuous engine vs the static baselines and of
 chunked vs blocking admission (higher is better), plus the chunked /
-blocking long-prompt p95 latency ratio (lower is better).  A value fails
+blocking long-prompt p95 latency ratio and the paged prefix-reuse pair —
+slots-per-GiB vs the dense long-prompt engine (higher is better; pure
+byte counts, so it gates at smoke too) and prefix-hit / paged-baseline
+p95 TTFT (lower is better, full runs only).  A value fails
 when it worsens by more than ``--threshold`` relative to the baseline
 run.  Missing baselines pass with a notice (the first run on a new
 configuration has nothing to gate against).
@@ -51,6 +54,12 @@ _SERVE_RATIO_KEYS = {
     "goodput_ratio_chunked_vs_blocking_long": True,
     "p95_ratio_chunked_vs_blocking_long": False,
     "goodput_ratio_sharded_vs_single": True,
+    # paged prefix reuse: slots-per-GiB of the prefix-hit engine over the
+    # dense long-prompt engine (pure byte counts — deterministic, so it
+    # also gates at smoke), and prefix-hit p95 TTFT over the no-reuse
+    # paged baseline (timing: full runs only, lower is better)
+    "slots_per_gib_ratio_prefix_vs_dense": True,
+    "ttft_frac_prefix_vs_paged": False,
 }
 
 # spec-gate metrics (table_spec.py ratio row): acceptance collapsing or the
@@ -148,8 +157,10 @@ def check_serve(threshold: float, path: str = "") -> int:
     if new.get("smoke"):
         # smoke-scale static ratios are dominated by static_exact's compile
         # stall and swing ~50% between identical runs — gate only the
-        # chunked-vs-blocking structural ratio there
-        keys = {"goodput_ratio_chunked_vs_blocking": True}
+        # chunked-vs-blocking structural ratio plus the deterministic
+        # slots-per-GiB byte-count ratio there
+        keys = {"goodput_ratio_chunked_vs_blocking": True,
+                "slots_per_gib_ratio_prefix_vs_dense": True}
         if ("goodput_ratio_sharded_vs_single" in br
                 and "goodput_ratio_sharded_vs_single" not in nr):
             # presence-only at smoke: forced host devices share the same
@@ -158,6 +169,15 @@ def check_serve(threshold: float, path: str = "") -> int:
             print("FAIL: serve ratio goodput_ratio_sharded_vs_single "
                   "missing from latest smoke run")
             return 1
+        for mode in ("continuous_paged", "continuous_prefix_hit"):
+            # same presence logic for the paged serving rows: their VALUES
+            # are noise at smoke, their disappearance is structural
+            if (any(r.get("mode") == mode for r in base.get("rows", []))
+                    and not any(r.get("mode") == mode
+                                for r in new.get("rows", []))):
+                print(f"FAIL: serve mode row {mode} missing from latest "
+                      "smoke run")
+                return 1
     return _check_ratio_keys(nr, br, keys, threshold, "serve")
 
 

@@ -44,23 +44,45 @@ workload.  static_exact uses a fresh Engine per trial (jit caches are
 per-instance) so its compile stall is measured each time; warm modes take
 best-of-N interleaved trials (this box's CPU throughput drifts by ~30%).
 
+Two more modes exercise the paged resident cache on the long-prompt
+config, serving the SAME shared-system-prompt traffic (every prompt = one
+long common prefix + a short unique tail) twice:
+
+  continuous_paged       block-table indirection over the physical page
+                         pool, prefixes NOT declared — the paged-parity /
+                         TTFT baseline at a dense-equivalent pool size.
+  continuous_prefix_hit  prefixes declared (copy-on-write reuse): hits
+                         map the registry's shared pages and skip the
+                         shared chunks, and the pool is sized to the
+                         workload (shared pages ONCE + per-slot tails).
+
+Every resident engine's row carries ``cache_bytes`` (resident cache tree
+bytes) and ``slots_per_gib``; the ratio row derives
+``slots_per_gib_ratio_prefix_vs_dense`` (the memory win of sharing, vs the
+dense long-prompt engine) and, on full runs, ``ttft_frac_prefix_vs_paged``
+(prefix-hit p95 TTFT over the no-reuse paged baseline — near zero when
+reuse works: only the finishing chunk runs before the first token).
+
 Emits goodput / p50 / p95 latency / p95 TTFT per mode, appends to
 BENCH_serve.json, and derives ratio rows: continuous vs both statics
 (trajectory keys from PR 2) plus chunked-vs-blocking goodput and p95
 ratios on both workloads.  Acceptance: chunked >= blocking goodput and
-strictly lower p95 on the long-prompt-heavy workload.
+strictly lower p95 on the long-prompt-heavy workload; prefix-hit serving
+>= 2x slots-per-GiB vs dense at the long config with near-zero TTFT.
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
+import numpy as np
 
 from benchmarks.common import row, write_bench_json
 from repro.configs import get_config, reduced
 from repro.inference.engine import Engine
-from repro.inference.scheduler import (ContinuousEngine, StaticBatchServer,
-                                       summarize, synthetic_workload)
+from repro.inference.scheduler import (ContinuousEngine, Request,
+                                       StaticBatchServer, summarize,
+                                       synthetic_workload)
 from repro.models.transformer import init_model
 
 
@@ -73,7 +95,39 @@ def _measure(server, workload):
     if stats0:
         stall = server.stats["stall_s"] - stats0.get("stall_s", 0.0)
         s["admission_stall_frac"] = round(stall / max(wall, 1e-9), 4)
+        if "prefix_tokens_reused" in server.stats:
+            s["prefix_tokens_reused"] = (
+                server.stats["prefix_tokens_reused"]
+                - stats0.get("prefix_tokens_reused", 0))
+    caches = getattr(server, "_caches", None)
+    if caches is not None:
+        cb = int(sum(x.nbytes for x in jax.tree.leaves(caches)))
+        s["cache_bytes"] = cb
+        s["slots_per_gib"] = round(server.slots / (cb / 2 ** 30), 2)
     return s
+
+
+def _prefix_workload(n, *, rate_rps, prefix_len, tail_lens, n_new_range,
+                     vocab, seed, declare):
+    """Shared-system-prompt traffic: every request's prompt is the SAME
+    ``prefix_len`` system tokens (fixed seed, so separate waves and
+    engines agree byte-for-byte) plus a unique tail.  ``declare=False``
+    serves identical prompts with the prefix undeclared — the no-reuse
+    baseline for the same work."""
+    pfx = np.random.default_rng(12345).integers(
+        1, vocab - 4, size=(prefix_len,)).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for rid in range(n):
+        t += float(rng.exponential(1.0 / rate_rps))
+        tail = int(rng.integers(tail_lens[0], tail_lens[1] + 1))
+        n_new = int(rng.integers(n_new_range[0], n_new_range[1] + 1))
+        prompt = np.concatenate([pfx, rng.integers(
+            1, vocab - 4, size=(tail,)).astype(np.int32)])
+        out.append(Request(rid, prompt, n_new, greedy=True, seed=rid,
+                           arrival_s=t,
+                           prefix_len=prefix_len if declare else 0))
+    return out
 
 
 def _best(summaries):
@@ -154,17 +208,53 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         block_l = ContinuousEngine(cfg, params, slots=slots,
                                    max_len=max_len_long, seg_len=seg_len,
                                    chunked_prefill=False)
+    # paged + copy-on-write prefix reuse, long-prompt config: the shared
+    # system prompt spans most of the context while unique tails and
+    # generations stay short — the serving shape prefix sharing exists for
+    paged_l = ContinuousEngine(cfg, params, slots=slots,
+                               max_len=max_len_long, seg_len=seg_len,
+                               paged=True)
+    page = paged_l._page_rows
+    pfx_len = max(page, 3 * max_len_long // 4 // page * page)
+    tail_lens = (4, max(8, max_len_long // 8))
+    nl_range = kw_long["n_new_range"]
+    # the shared pages land in the pool ONCE; each slot only budgets its
+    # unique tail + generation — this sizing IS the slots-per-GiB claim
+    pool_hit = (pfx_len // page
+                + slots * -(-(tail_lens[1] + nl_range[1]) // page) + 2)
+    prefix_l = ContinuousEngine(cfg, params, slots=slots,
+                                max_len=max_len_long, seg_len=seg_len,
+                                paged=True, pool_pages=pool_hit)
+    kw_pfx = dict(rate_rps=kw_long["rate_rps"], prefix_len=pfx_len,
+                  tail_lens=tail_lens, n_new_range=nl_range, vocab=cfg.vocab)
+    wl_pfx_warm = _prefix_workload(n_req_long, seed=5, declare=True,
+                                   **kw_pfx)
+    wl_pfx_warm_nd = _prefix_workload(n_req_long, seed=5, declare=False,
+                                      **kw_pfx)
+    wl_pfx = _prefix_workload(n_req_long, seed=4, declare=True, **kw_pfx)
+    wl_pfx_nd = _prefix_workload(n_req_long, seed=4, declare=False,
+                                 **kw_pfx)
     mixed_lens = [len(r.prompt) for r in wl_warm] + list(kw["prompt_lens"])
     long_lens = ([len(r.prompt) for r in wl_long_warm]
                  + list(kw_long["prompt_lens"]))
+    pfx_lens = ([len(r.prompt) for r in wl_pfx_warm]
+                + [pfx_len + tail_lens[0], pfx_len + tail_lens[1]])
+    # NOTE warmup() resets the engine (and so the prefix registry) — the
+    # declared warm serve AFTER it registers the shared pages, so every
+    # measured trial on prefix_l is a registry HIT
     for eng, lens, wls in ((cont, mixed_lens, wl_warm),
                            (block, mixed_lens, wl_warm),
                            (cont_l, long_lens, wl_long_warm),
                            (block_l, long_lens, wl_long_warm),
+                           (paged_l, pfx_lens, wl_pfx_warm_nd),
+                           (prefix_l, pfx_lens, wl_pfx_warm),
                            *(((cont_m, mixed_lens, wl_warm),)
                              if cont_m is not None else ())):
         eng.warmup(lens)
         eng.serve(list(wls))
+    # the loop's warm serve was a registry MISS; this pass HITs it, so the
+    # seed/skip programs are compiled before any measured trial
+    prefix_l.serve(list(wl_pfx_warm))
     bucketed = StaticBatchServer(Engine(cfg, params, max_len=max_len),
                                  batch_size=slots)
     bucketed.serve(list(wl_warm))
@@ -172,6 +262,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
 
     cont_runs, block_runs, bucketed_runs, exact_runs = [], [], [], []
     cont_long_runs, block_long_runs, cont_mesh_runs = [], [], []
+    paged_runs, prefix_runs = [], []
     for _ in range(trials):       # interleave: CPU drift hits modes equally
         bucketed_runs.append(_measure(bucketed, wl))
         block_runs.append(_measure(block, wl))
@@ -180,6 +271,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             cont_mesh_runs.append(_measure(cont_m, wl))
         block_long_runs.append(_measure(block_l, wl_long))
         cont_long_runs.append(_measure(cont_l, wl_long))
+        paged_runs.append(_measure(paged_l, wl_pfx_nd))
+        prefix_runs.append(_measure(prefix_l, wl_pfx))
     for _ in range(exact_trials):
         # fresh engine per trial: the compile stall on each novel batch-max
         # n_new is the measured effect; seed-A pass warms prefill + its own
@@ -194,6 +287,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         _best(cont_runs), _best(block_runs), _best(bucketed_runs),
         _best(exact_runs))
     s_cont_l, s_block_l = _best(cont_long_runs), _best(block_long_runs)
+    s_paged, s_prefix = _best(paged_runs), _best(prefix_runs)
     ratios = {
         "goodput_ratio_vs_static":
             s_cont["goodput_tok_s"] / max(s_exact["goodput_tok_s"], 1e-9),
@@ -206,6 +300,13 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     if s_cont_m is not None:
         ratios["goodput_ratio_sharded_vs_single"] = (
             s_cont_m["goodput_tok_s"] / max(s_cont["goodput_tok_s"], 1e-9))
+    # deterministic byte counts (no timing): emitted at smoke too
+    ratios["slots_per_gib_ratio_prefix_vs_dense"] = (
+        s_prefix["slots_per_gib"] / max(s_cont_l["slots_per_gib"], 1e-9))
+    if not smoke:
+        # smoke-scale TTFTs are single milliseconds — value is noise there
+        ratios["ttft_frac_prefix_vs_paged"] = (
+            s_prefix["p95_ttft_s"] / max(s_paged["p95_ttft_s"], 1e-9))
     if not smoke:
         # long-prompt latencies at smoke scale are single milliseconds —
         # their ratios are scheduling noise, so only full runs emit them
@@ -224,6 +325,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                     ("continuous_blocking", s_block), ("continuous", s_cont),
                     ("continuous_blocking_longprompt", s_block_l),
                     ("continuous_longprompt", s_cont_l),
+                    ("continuous_paged", s_paged),
+                    ("continuous_prefix_hit", s_prefix),
                     *((("continuous_sharded", s_cont_m),)
                       if s_cont_m is not None else ())):
         stall = s.get("admission_stall_frac")
@@ -236,7 +339,9 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                          + (f"_stall_{stall:.0%}" if stall is not None
                             else "")))
         jrows.append(dict(s, mode=mode, slots=slots, seg_len=seg_len,
-                          max_len=(max_len_long if "longprompt" in mode
+                          max_len=(max_len_long
+                                   if ("longprompt" in mode or "paged" in
+                                       mode or "prefix" in mode)
                                    else max_len)))
     jrows.append(dict({k: round(v, 3) for k, v in ratios.items()},
                       mode="ratio", slots=slots, seg_len=seg_len))
@@ -252,6 +357,12 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             f"_{ratios['goodput_ratio_chunked_vs_blocking_long']:.2f}x_long"
             f"_p95x{ratios['p95_ratio_chunked_vs_blocking_long']:.2f}_long")
     lines.append(row("table_serve/chunked_vs_blocking", 0.0, derived))
+    lines.append(row(
+        "table_serve/prefix_reuse", 0.0,
+        f"{ratios['slots_per_gib_ratio_prefix_vs_dense']:.2f}x_slots_per_gib"
+        + (f"_ttftx{ratios['ttft_frac_prefix_vs_paged']:.2f}"
+           if not smoke else "")
+        + f"_reused_{s_prefix.get('prefix_tokens_reused', 0)}tok"))
     if s_cont_m is not None:
         lines.append(row(
             "table_serve/sharded_vs_single", 0.0,

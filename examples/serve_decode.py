@@ -33,6 +33,14 @@ host-side suffix lookup) or DraftModelProposer(cfg_small, params_small)
 (a small Transformer sharing the vocab).  Drafts only change SPEED
 (the acceptance rate), never tokens, so any proposer is safe to plug in.
 
+Part 4 demos the PAGED resident cache (``paged=True``) with
+copy-on-write prefix reuse: every request carries the same long system
+prompt, and declaring ``prefix_len`` lets later requests map the SAME
+physical cache pages as the first group and skip re-prefilling the
+shared part — the first token arrives after only the finishing chunk.
+Same traffic, same tokens (paged serving is bitwise dense serving);
+only TTFT moves.
+
     PYTHONPATH=src python examples/serve_decode.py
 """
 import jax
@@ -40,8 +48,9 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.inference.engine import Engine
-from repro.inference.scheduler import (ContinuousEngine, StaticBatchServer,
-                                       summarize, synthetic_workload)
+from repro.inference.scheduler import (ContinuousEngine, Request,
+                                       StaticBatchServer, summarize,
+                                       synthetic_workload)
 from repro.models.transformer import init_model
 
 
@@ -117,12 +126,47 @@ def speculative_decode(cfg, params):
           f"accept {acc:.0%}, hist={hist}, tokens bitwise equal")
 
 
+def prefix_reuse(cfg, params):
+    """Shared-system-prompt serving on the paged engine: the undeclared
+    pass re-prefills the 128-token prefix for every request; the declared
+    pass registers it once and every later group HITs the page registry,
+    skipping the shared chunks — same tokens, near-zero TTFT."""
+    rng = np.random.default_rng(0)
+    sys_p = rng.integers(1, cfg.vocab - 4, size=(128,)).astype(np.int32)
+    tails = [rng.integers(1, cfg.vocab - 4, size=(n,)).astype(np.int32)
+             for n in (5, 11, 3, 8)]
+
+    def wave(declare, base):
+        return [Request(base + j, np.concatenate([sys_p, t]), 8, seed=j,
+                        prefix_len=128 if declare else 0)
+                for j, t in enumerate(tails)]
+
+    eng = ContinuousEngine(cfg, params, slots=2, max_len=192, seg_len=8,
+                           paged=True)
+    eng.warmup([128 + len(t) for t in tails])
+    tokens = {}
+    for name, declare in (("paged, prefix re-prefilled", False),
+                          ("paged, prefix REUSED      ", True)):
+        eng.serve(wave(declare, 0))     # warm pass (declare: registers)
+        stats0 = dict(eng.stats)
+        res = eng.serve(wave(declare, 100))
+        ttft = max(r.first_token_s - r.arrival_s for r in res)
+        reused = (eng.stats["prefix_tokens_reused"]
+                  - stats0["prefix_tokens_reused"])
+        got = {r.rid - 100: r.tokens for r in res}
+        tokens.setdefault("ref", got)
+        assert all((got[k] == tokens["ref"][k]).all() for k in got)
+        print(f"{name}: ttft max {ttft * 1e3:.0f} ms, "
+              f"{reused} prefix tokens reused, tokens identical")
+
+
 def main():
     cfg = reduced(get_config("yi_6b"))
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
     static_variants(cfg, params)
     continuous_vs_static(cfg, params)
     speculative_decode(cfg, params)
+    prefix_reuse(cfg, params)
 
 
 if __name__ == "__main__":

@@ -320,6 +320,39 @@ def dsa_decode_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     return _gqa_out(p.astype(v_cache.dtype), vs)
 
 
+def dsa_decode_paged_block_attention(q, k_pool, v_pool, idx, pidx, idx_valid,
+                                     *, block_k: int, kv_len: jax.Array
+                                     ) -> jax.Array:
+    """Paged twin of ``dsa_decode_block_attention``: the cache is a FLAT
+    physical page pool shared by all slots instead of per-slot rows.
+
+    q: (B, 1, Hq, hd); k/v pool: (P*block_k, Hkv, hd) — page p owns rows
+    [p*block_k, (p+1)*block_k); idx: (B, nb) selected LOGICAL block
+    indices (they carry the key positions: block j = logical rows
+    [j*block_k, (j+1)*block_k)); pidx: (B, nb) the same selection
+    translated to PHYSICAL pages through the slot's page table.  Gathers
+    page pidx, masks from the logical positions — with a page table whose
+    mapped pages hold exactly the dense cache's block contents this is
+    bitwise ``dsa_decode_block_attention`` on the dense cache.
+    """
+    b, _, hq, hd = q.shape
+    hkv = k_pool.shape[1]
+    hdv = v_pool.shape[-1]
+    nb = idx.shape[-1]
+    kb = k_pool.reshape(-1, block_k, hkv, hd)        # (P, Bk, Hkv, hd)
+    vb = v_pool.reshape(-1, block_k, hkv, hdv)
+    ks = kb[pidx].reshape(b, nb * block_k, hkv, hd)
+    vs = vb[pidx].reshape(b, nb * block_k, hkv, hdv)
+    kpos = (idx[:, :, None] * block_k
+            + jnp.arange(block_k)[None, None, :]).reshape(b, nb * block_k)
+    m = idx_valid[:, :, None].repeat(block_k, axis=2).reshape(b, nb * block_k)
+    m = m & (kpos < kv_len[:, None])
+    s = _gqa_scores(q, ks)                           # (B,Hkv,G,1,nb*Bk)
+    s = jnp.where(m[:, None, None, None], s, NEG)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return _gqa_out(p.astype(v_pool.dtype), vs)
+
+
 def dsa_verify_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
                                block_k: int, kv_len: jax.Array) -> jax.Array:
     """Speculative-verify twin of ``dsa_decode_block_attention``: C chunk

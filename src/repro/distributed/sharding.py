@@ -47,6 +47,7 @@ class ShardingRules:
     layers: Axis = None           # scan-stacked leading axis
     pred_k: Axis = None           # DSA projection dim
     blocks: Axis = None           # DSA block indices
+    pages: Axis = None            # paged-cache physical page pool rows
 
     def axis(self, name: Optional[str]) -> Axis:
         if name is None:
@@ -111,7 +112,11 @@ def make_serving_rules(*, long_context: bool = False) -> ShardingRules:
         batch="data", seq=None, seq_sp=None,
         cache_seq="model" if long_context else None,
         embed=None, embed_act=None, mlp=None, heads=None, kv_heads=None,
-        qkv=None, vocab=None, expert=None)
+        qkv=None, vocab=None, expert=None,
+        # paged resident caches: the physical page pool shards over "data"
+        # like the per-slot rows it replaces (non-divisible pool sizes
+        # resolve to replicated — graceful)
+        pages="data")
 
 
 # Rules used by model code; installed by the launcher before tracing.

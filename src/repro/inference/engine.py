@@ -81,6 +81,20 @@ def can_bucket_prompts(cfg: ArchConfig) -> bool:
             and cfg.swa_window == 0 and not cfg.enc_dec)
 
 
+def can_page(cfg: ArchConfig) -> bool:
+    """Paged resident caches (block-table indirection over a shared
+    physical page pool, inference.scheduler.ContinuousEngine(paged=True))
+    are supported where every per-slot cache leaf is either a page pool or
+    a per-slot scalar: recurrent state (mamba/rwkv) and SWA ring buffers
+    have no token-row geometry to page, enc-dec / cross-attn decoders
+    carry per-slot encoder caches, and MLA's latent c_kv/k_rope leaves
+    keep the dense layout (paging them buys little — they are already the
+    compressed cache)."""
+    return (cfg.mamba is None and cfg.rwkv is None and cfg.swa_window == 0
+            and not cfg.enc_dec and cfg.mla is None
+            and cfg.cross_attn_period == 0)
+
+
 def can_chunk_prefill(cfg: ArchConfig, dsa_mode: str = "off",
                       moe_dense: bool = False) -> bool:
     """Chunked (interleavable) admission prefill is supported wherever it
@@ -403,6 +417,15 @@ class Engine:
         B=1 chains, so requests are unaffected; see
         repro.inference.speculative)."""
         assert n_new >= 1, "generate() needs n_new >= 1"
+        # reject an over-long request up front with a clear error instead
+        # of failing deep inside prefill/decode once the cache overflows
+        plen = (int(np.asarray(prompts).shape[1]) if lengths is None
+                else int(np.max(lengths)))
+        if plen + n_new > self.max_len:
+            raise ValueError(
+                f"prompt_len ({plen}) + n_new ({n_new}) exceeds the "
+                f"engine max_len ({self.max_len}) — raise max_len or "
+                f"shorten the request")
         if spec:
             return self._generate_spec(prompts, n_new, spec, draft, extras,
                                        greedy, seed, lengths, temperature,

@@ -77,9 +77,10 @@ n_new, per temperature, per arrival pattern, or per burst size.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
-from collections import deque
-from typing import Dict, List, Optional, Sequence, Set
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,9 +89,10 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import is_spec_leaf, shard, shard_put_tree
 from repro.inference.engine import Engine, _ro_view, _sample, \
-    can_chunk_prefill, pow2_bucket
+    can_chunk_prefill, can_page, pow2_bucket
 from repro.inference.speculative import NGramProposer, SpeculativeDecoder, \
     can_speculate
+from repro.models.attention import cache_page_size
 from repro.models.transformer import chunk_step, decode_step, init_cache, \
     unstack_group_caches, unstacked_cache_specs
 
@@ -111,6 +113,13 @@ class Request:
     arrival_s: float = 0.0        # offset from serve() start (open loop)
     temperature: float = 1.0      # sampled (non-greedy) logit scale
     dsa_mode: Optional[str] = None  # override the engine's DSA decode path
+    # copy-on-write prefix sharing (paged engines): the first prefix_len
+    # prompt tokens are a common prefix shared with other requests carrying
+    # the same prefix_key — they map the same physical cache pages and skip
+    # re-prefilling the shared part.  submit() hashes the prefix tokens
+    # when the key is left None, so equal declared prefixes always match.
+    prefix_len: int = 0
+    prefix_key: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -169,6 +178,7 @@ class _PrefillGroup:
     j: int = 0                    # next chunk index
     n_chunks: int = 0
     mat: Optional[np.ndarray] = None   # (bpf, n_chunks*chunk) padded tokens
+    tbls: Optional[List] = None   # paged: per-member page-table row (or None)
 
 
 def _leaf_name(path) -> Optional[str]:
@@ -176,6 +186,104 @@ def _leaf_name(path) -> Optional[str]:
         if isinstance(k, jax.tree_util.DictKey):
             return k.key
     return None
+
+
+class PagePool:
+    """Host-side accounting of a PAGED resident cache's physical pages.
+
+    The device side is a flat pool of ``n_pages`` pages of ``page_rows``
+    cache rows each, indirected per slot through ``page_tbl``
+    (models.attention init_cache_attention); this mirror decides which
+    pages back which slot.  Page 0 is the permanent ZERO page — never
+    allocated — so unmapped table entries read zero rows.
+
+    Invariant (pinned by tests/test_property.py): every page in
+    [1, n_pages) is EITHER on the free stack OR has refcount > 0, never
+    both — retire/readmit churn can neither leak nor double-free pages.
+    Refcounts exceed 1 only for copy-on-write shared prefix pages: the
+    prefix registry holds one reference and every slot mapping the prefix
+    holds another, so a retiring slot returns exactly its non-shared
+    pages and a registered prefix survives its readers.
+
+    Pages freed with data in them land in ``dirty`` and are zeroed on
+    device before their next mapping (``take_dirty``) — a freshly mapped
+    page always reads as zeros, which is what keeps the paged cache's
+    gathered logical view byte-identical to a dense zero-initialized
+    cache."""
+
+    def __init__(self, n_pages: int, page_rows: int):
+        assert n_pages >= 2, n_pages    # the zero page + at least one real
+        self.n_pages = n_pages
+        self.page_rows = page_rows
+        self.free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.ref = np.zeros((n_pages,), np.int32)
+        self.slot_pages: Dict[int, Tuple[List[int], int]] = {}
+        self.dirty: Set[int] = set()
+        # LRU copy-on-write prefix registry:
+        # (prefix_key, prefix_len, bucket, mode) -> shared pages
+        self.prefixes: "OrderedDict[tuple, List[int]]" = OrderedDict()
+
+    def available(self) -> int:
+        return len(self.free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self.free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self.free)} "
+                f"(admission accounting should have prevented this)")
+        pages = [self.free.pop() for _ in range(n)]
+        for p in pages:
+            self.ref[p] = 1
+        return pages
+
+    def retain(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            self.ref[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            self.ref[p] -= 1
+            assert self.ref[p] >= 0, f"page {p} over-released"
+            if self.ref[p] == 0:
+                self.free.append(p)
+                self.dirty.add(p)
+
+    def assign_slot(self, slot: int, pages: Sequence[int],
+                    n_shared: int) -> None:
+        self.slot_pages[slot] = (list(pages), n_shared)
+
+    def free_slot(self, slot: int) -> None:
+        pages, _ = self.slot_pages.pop(slot)
+        self.release(pages)
+
+    def take_dirty(self, pages: Sequence[int]) -> List[int]:
+        """The subset of ``pages`` needing a device zero before use (freed
+        with stale rows since their last mapping); marks them clean."""
+        d = [p for p in pages if p in self.dirty]
+        self.dirty.difference_update(d)
+        return d
+
+    # -- copy-on-write prefix registry (LRU) --------------------------------
+
+    def lookup_prefix(self, key) -> Optional[List[int]]:
+        pages = self.prefixes.get(key)
+        if pages is not None:
+            self.prefixes.move_to_end(key)     # LRU refresh
+        return pages
+
+    def register_prefix(self, key, pages: Sequence[int]) -> None:
+        """The registry takes ownership of alloc()'s reference."""
+        self.prefixes[key] = list(pages)
+
+    def evict_for(self, n: int, keep=None) -> None:
+        """LRU-evict prefix registrations until ``n`` pages are free (or
+        nothing evictable is left).  Evicted pages still mapped by live
+        slots free later, at those slots' retirement."""
+        while len(self.free) < n:
+            key = next((k for k in self.prefixes if k != keep), None)
+            if key is None:
+                return
+            self.release(self.prefixes.pop(key))
 
 
 class ContinuousEngine:
@@ -190,7 +298,8 @@ class ContinuousEngine:
                  spec_rounds: Optional[int] = None,
                  max_mode_wait_s: Optional[float] = None,
                  moe_prefill: str = "capacity", mesh=None,
-                 shard_rules=None):
+                 shard_rules=None, paged: bool = False,
+                 pool_pages: Optional[int] = None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -219,9 +328,43 @@ class ContinuousEngine:
             cfg, dsa_mode, moe_dense=self.engine.moe_dense)
         self.chunked = chunk_ok if chunked_prefill is None else (
             chunked_prefill and chunk_ok)
+        # PAGED resident cache (the perf tentpole): per-slot dense rows are
+        # replaced by a block-table indirection over one shared physical
+        # page pool (page size = the DSA block_k, so logical selection
+        # blocks ARE pages), with host-side accounting in PagePool and
+        # copy-on-write prefix sharing across requests that declare a
+        # common prefix.  Decode/insert writes translate through page_tbl
+        # and the read paths gather logical views, so paged serving stays
+        # BITWISE token-exact vs the dense layout at the same geometry.
+        self.paged = paged
+        if paged:
+            if not can_page(cfg):
+                raise ValueError(
+                    f"paged=True: {cfg.name} is outside the paging envelope "
+                    f"(needs a pure-attention decoder: no ssm/rwkv/swa/mla/"
+                    f"enc-dec/cross-attn)")
+            self._page_rows = cache_page_size(cfg, self.engine.decode_flags)
+            dsa_dec = (cfg.dsa.enabled and long_context
+                       and not cfg.swa_window)
+            if max_len % self._page_rows and not dsa_dec:
+                raise ValueError(
+                    f"paged=True needs max_len divisible by the page size "
+                    f"({self._page_rows}); got {max_len}")
+            self._n_kb = -(-max_len // self._page_rows)
+            # default pool: every slot can hold a full max_len sequence
+            # (parity with the dense layout) + the permanent zero page;
+            # smaller pools trade capacity for memory and rely on
+            # admission accounting to refuse what they can't back
+            self.pool_pages = (pool_pages if pool_pages is not None
+                               else slots * self._n_kb + 1)
+        else:
+            self.pool_pages = 0
         # speculative decode segments (draft-and-verify): auto-off outside
-        # the speculation envelope, mirroring chunked admission
-        self.spec = spec if (spec and can_speculate(cfg, dsa_mode, spec)
+        # the speculation envelope, mirroring chunked admission; the paged
+        # cache keeps verify on the dense staging path only, so spec and
+        # paged are mutually exclusive for now
+        self.spec = spec if (spec and not paged
+                             and can_speculate(cfg, dsa_mode, spec)
                              ) else 0
         self.draft = draft if draft is not None else (
             NGramProposer() if self.spec else None)
@@ -316,7 +459,91 @@ class ContinuousEngine:
             last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
             return last, caches
 
+        # paged twins of the insert + slot-reset machinery.  Staging caches
+        # are DENSE (no page_tbl leaf), so the trees differ in structure —
+        # the staging tree is flattened into a by-path dict and the map
+        # runs over the resident tree alone.
+        bkp = self._page_rows if paged else 1
+        nrows_pool = self.pool_pages * bkp
+
+        def _insert_paged_fn(resident, pre, slot, row, tbl_row):
+            """Paged slot insert: scatter row ``row`` of a bucket-sized
+            dense staging cache into the pages ``tbl_row`` maps and install
+            the page-table row.  Staged rows whose logical block is
+            unmapped (table entry 0 — beyond this slot's allocation) drop
+            out of bounds; freshly mapped pages were zeroed at allocation,
+            so the slot's gathered logical view is byte-identical to the
+            dense zero-extended insert."""
+            pre_by = {jax.tree_util.keystr(p): v for p, v in
+                      jax.tree_util.tree_flatten_with_path(pre)[0]}
+
+            def one(path, res):
+                name = _leaf_name(path)
+                if name == "page_tbl":
+                    return _pin_cache_leaf(name, res.at[slot].set(tbl_row))
+                leaf = pre_by[jax.tree_util.keystr(path)][row]
+                if name in ("k", "v", "kt"):
+                    r = jnp.arange(leaf.shape[0])
+                    pg = tbl_row[r // bkp]
+                    flat = jnp.where(pg > 0, pg * bkp + r % bkp, nrows_pool)
+                    return _pin_cache_leaf(name, res.at[flat].set(
+                        leaf.astype(res.dtype), mode="drop"))
+                if name == "ktb":
+                    pgs = tbl_row[:leaf.shape[0]]
+                    tgt = jnp.where(pgs > 0, pgs, self.pool_pages)
+                    return _pin_cache_leaf(name, res.at[tgt].set(
+                        leaf.astype(res.dtype), mode="drop"))
+                return _pin_cache_leaf(name, res.at[slot].set(
+                    leaf.astype(res.dtype)))
+            return jax.tree_util.tree_map_with_path(one, resident)
+
+        def _zero_pages_fn(resident, ids):
+            """Zero pool pages ``ids`` in every pool leaf — run on dirty
+            pages at mapping time so a freshly mapped page always reads as
+            zeros.  ``ids`` is 0-padded to a bucketed width (page 0 is the
+            permanent zero page, so zeroing it is a no-op by value)."""
+            rows = (ids[:, None] * bkp
+                    + jnp.arange(bkp)[None, :]).reshape(-1)
+
+            def one(path, res):
+                name = _leaf_name(path)
+                if name in ("k", "v", "kt"):
+                    return _pin_cache_leaf(name, res.at[rows].set(0.0))
+                if name == "ktb":
+                    return _pin_cache_leaf(name, res.at[ids].set(0.0))
+                return res
+            return jax.tree_util.tree_map_with_path(one, resident)
+
+        def _seed_fn(staging, resident, pages, r_rows):
+            """Seed a staging cache's first ``r_rows`` rows from the pool's
+            shared-prefix ``pages`` (a prefix-registry HIT): reproduces the
+            staging state after chunking rows [0, r_rows) — exactly the
+            chunks the group then skips.  r_rows is a whole number of
+            pages (static: it slices)."""
+            res_by = {jax.tree_util.keystr(p): v for p, v in
+                      jax.tree_util.tree_flatten_with_path(resident)[0]}
+
+            def one(path, st):
+                name = _leaf_name(path)
+                if name not in ("k", "v", "kt", "ktb", "pos"):
+                    return st
+                if name == "pos":
+                    return jnp.full_like(st, r_rows)
+                src = res_by[jax.tree_util.keystr(path)]
+                if name == "ktb":
+                    return st.at[:, :pages.shape[0]].set(
+                        src[pages][None].astype(st.dtype))
+                rows = (pages[:, None] * bkp
+                        + jnp.arange(bkp)[None, :]).reshape(-1)
+                return st.at[:, :r_rows].set(
+                    src[rows][None].astype(st.dtype))
+            return jax.tree_util.tree_map_with_path(one, staging)
+
         self._insert = jax.jit(_insert_fn, donate_argnums=(0,))
+        self._insert_paged = jax.jit(_insert_paged_fn, donate_argnums=(0,))
+        self._zero_pages = jax.jit(_zero_pages_fn, donate_argnums=(0,))
+        self._seed = jax.jit(_seed_fn, static_argnames=("r_rows",),
+                             donate_argnums=(0,))
         self._segment = jax.jit(_segment_fn, static_argnames=("flags",),
                                 donate_argnums=(2,))
         self._chunk = jax.jit(_chunk_fn,
@@ -354,12 +581,61 @@ class ContinuousEngine:
         hashable RunFlags, one compiled instance per mode in use)."""
         return self.engine.run_flags("decode", mode)
 
+    # -- paged-pool helpers ---------------------------------------------------
+
+    def _pages_needed(self, req: Request) -> int:
+        return -(-(len(req.prompt) + req.n_new) // self._page_rows)
+
+    def _prefix_ctx(self, req: Request, bucket: int, mode: str,
+                    chunked: bool):
+        """(prefix registry key, whole shared pages) for a request's
+        declared prefix under this group's geometry — (None, 0) when the
+        request has none, the prefix spans no whole page, or the group
+        runs the blocking path (seeding needs the staging cache)."""
+        if not (self.paged and chunked and req.prefix_key
+                and req.prefix_len):
+            return None, 0
+        n_sh = req.prefix_len // self._page_rows
+        if n_sh == 0:
+            return None, 0
+        return (req.prefix_key, req.prefix_len, bucket, mode), n_sh
+
+    def _zero_dirty(self, pages: Sequence[int]) -> None:
+        """Zero the dirty subset of freshly mapped ``pages`` on device
+        (pow2-bucketed 0-padded id widths, so zeroing adds a handful of
+        compiles total, not one per allocation size)."""
+        d = self.pool.take_dirty(pages)
+        if not d:
+            return
+        ids = np.zeros((pow2_bucket(len(d), 4),), np.int32)
+        ids[:len(d)] = d
+        with self._ctx():
+            self._caches = self._zero_pages(self._caches, jnp.asarray(ids))
+
     def submit(self, req: Request) -> None:
         plen = int(np.asarray(req.prompt).shape[-1])
         if plen + req.n_new > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt {plen} + n_new {req.n_new} "
                 f"exceeds max_len {self.max_len}")
+        if req.prefix_len:
+            if not (0 < req.prefix_len <= plen):
+                raise ValueError(
+                    f"request {req.rid}: prefix_len {req.prefix_len} "
+                    f"outside (0, prompt_len {plen}]")
+            if req.prefix_key is None:
+                # hash the declared prefix tokens so equal prefixes match
+                # without callers coordinating keys
+                req.prefix_key = hashlib.sha1(np.ascontiguousarray(
+                    np.asarray(req.prompt, np.int32)[:req.prefix_len]
+                ).tobytes()).hexdigest()
+        if self.paged:
+            need = -(-(plen + req.n_new) // self._page_rows)
+            if need > self.pool_pages - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} cache pages but the "
+                    f"pool holds {self.pool_pages - 1} allocatable pages — "
+                    f"raise pool_pages or shorten the request")
         if req.temperature <= 0.0:
             raise ValueError(f"request {req.rid}: temperature must be > 0")
         if req.dsa_mode is not None:
@@ -416,18 +692,61 @@ class ContinuousEngine:
         (prompt bucket, dsa_mode) for one shared prefill batch.
         Same-bucket only: a row's prefill program (and hence its tokens,
         bitwise) must match what a solo ``Engine.generate`` at that prompt
-        bucket would run.  Skipped requests keep their relative order."""
+        bucket would run.  Skipped requests keep their relative order.
+
+        Paged engines also group by declared (prefix_key, prefix_len) —
+        sharers co-admit so the shared pages are charged once — and cap
+        the group at what the page pool can fund NOW (shared prefix pages
+        cost nothing on a registry hit; a MISS's first slotted member
+        funds them).  An unfundable anchor LRU-evicts idle prefix
+        registrations, and failing that the whole queue waits for slot
+        retirements to return pages (returns an empty group)."""
         rest: deque = deque()
         for _ in range(anchor):
             rest.append(self.queue.popleft())
         first = self.queue.popleft()
-        group = [first]
         b0 = self.engine.prompt_bucket(len(first.prompt))
         m0 = self._eff_mode(first)
+        budget = None
+        if self.paged:
+            use_chunked = self.chunked and can_chunk_prefill(
+                self.cfg, m0, moe_dense=self.engine.moe_dense)
+            key0, n_sh = self._prefix_ctx(first, b0, m0, use_chunked)
+            hit = (key0 is not None
+                   and self.pool.lookup_prefix(key0) is not None)
+            shared_pending = 0 if hit else n_sh
+
+            def cost(r):
+                if r.n_new <= 1:
+                    return 0          # never slotted: staging only
+                return self._pages_needed(r) - n_sh + shared_pending
+
+            need0 = cost(first)
+            if need0 > self.pool.available():
+                self.pool.evict_for(need0, keep=key0)
+            if need0 > self.pool.available():
+                rest.append(first)    # unfundable anchor: requeue, wait
+                while rest:
+                    self.queue.appendleft(rest.pop())
+                return []
+            budget = self.pool.available() - need0
+            if first.n_new > 1:
+                shared_pending = 0
+        group = [first]
         while self.queue and len(group) < k:
             r = self.queue.popleft()
             if (self.engine.prompt_bucket(len(r.prompt)) == b0
-                    and self._eff_mode(r) == m0):
+                    and self._eff_mode(r) == m0
+                    and (r.prefix_key, r.prefix_len)
+                    == (first.prefix_key, first.prefix_len)):
+                if budget is not None:
+                    c = cost(r)
+                    if c > budget:
+                        rest.append(r)
+                        continue
+                    budget -= c
+                    if r.n_new > 1:
+                        shared_pending = 0
                 group.append(r)
             else:
                 rest.append(r)
@@ -499,10 +818,24 @@ class ContinuousEngine:
                     req.n_new, req.arrival_s, now, now, first_token_s=now))
                 continue
             slot = next(free)
-            with self._ctx():
-                self._caches = self._insert(self._caches, pcaches,
-                                            jnp.asarray(slot, jnp.int32),
-                                            jnp.asarray(j, jnp.int32))
+            if self.paged:
+                # blocking + paged (archs that page but can't chunk):
+                # all-private allocation, no prefix sharing
+                npt = self._pages_needed(req)
+                pages = self.pool.alloc(npt)
+                self._zero_dirty(pages)
+                self.pool.assign_slot(slot, pages, 0)
+                row = np.zeros((self._n_kb,), np.int32)
+                row[:npt] = pages
+                with self._ctx():
+                    self._caches = self._insert_paged(
+                        self._caches, pcaches, jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(j, jnp.int32), jnp.asarray(row))
+            else:
+                with self._ctx():
+                    self._caches = self._insert(
+                        self._caches, pcaches, jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(j, jnp.int32))
             self._activate(slot, req, tok0, key, now, now)
 
     # -- chunked admission (default) ----------------------------------------
@@ -534,8 +867,62 @@ class ContinuousEngine:
             if slot is not None:
                 self._reserved.add(slot)
             slots.append(slot)
+        tbls = None
+        skip = 0
+        if self.paged:
+            key, n_sh = self._prefix_ctx(group[0], bucket, mode, True)
+            shared = self.pool.lookup_prefix(key) if key else None
+            hit = shared is not None
+            if not hit and key is not None and any(
+                    s is not None for s in slots):
+                # prefix MISS with a slotted writer: allocate + register
+                # the shared pages now; the members' inserts fill them
+                # (each rewrites identical bytes — same prefix, same
+                # staging geometry), and single-flight admission (_pf)
+                # means they're filled before any HIT group can start
+                shared = self.pool.alloc(n_sh)
+                self._zero_dirty(shared)
+                self.pool.register_prefix(key, shared)
+            tbls = []
+            for r, slot in zip(group, slots):
+                if slot is None:
+                    tbls.append(None)     # staging-only member: no pages
+                    continue
+                npt = self._pages_needed(r)
+                row = np.zeros((self._n_kb,), np.int32)
+                if shared is not None:
+                    self.pool.retain(shared)
+                    priv = self.pool.alloc(npt - n_sh)
+                    self._zero_dirty(priv)
+                    pages = list(shared) + priv
+                    self.pool.assign_slot(slot, pages, n_sh)
+                else:
+                    pages = self.pool.alloc(npt)
+                    self._zero_dirty(pages)
+                    self.pool.assign_slot(slot, pages, 0)
+                row[:len(pages)] = pages
+                tbls.append(row)
+            if hit:
+                # prefix HIT: seed the staging cache from the shared pages
+                # and skip the whole-page prefix chunks outright (near-zero
+                # TTFT for the shared part).  Every member still runs its
+                # FINISHING chunk — its first token samples there — hence
+                # the min-cap; the chunks that do run replay the dense
+                # chunk programs bitwise because the seeded rows are the
+                # bytes chunking [0, skip*c) would have written.
+                skip = min(n_sh * self._page_rows // c,
+                           min(-(-len(r.prompt) // c) for r in group) - 1)
+                if skip > 0:
+                    rpages = jnp.asarray(
+                        shared[:skip * c // self._page_rows], jnp.int32)
+                    with self._ctx():
+                        caches = self._seed(caches, self._caches, rpages,
+                                            skip * c)
+                self.stats["prefix_hits"] += len(group)
+                self.stats["prefix_tokens_reused"] += skip * c * len(group)
         self._pf = _PrefillGroup(group, slots, bucket, c, mode, caches,
-                                 lengths, j=0, n_chunks=n_chunks, mat=mat)
+                                 lengths, j=skip, n_chunks=n_chunks, mat=mat,
+                                 tbls=tbls)
         self.stats["admitted"] += len(group)
 
     def _chunk_burst(self) -> int:
@@ -608,9 +995,17 @@ class ContinuousEngine:
                     continue
                 slot = pf.slots[i]        # early activation: decode NOW
                 with self._ctx():
-                    self._caches = self._insert(self._caches, pf.caches,
-                                                jnp.asarray(slot, jnp.int32),
-                                                jnp.asarray(i, jnp.int32))
+                    if self.paged:
+                        self._caches = self._insert_paged(
+                            self._caches, pf.caches,
+                            jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(i, jnp.int32),
+                            jnp.asarray(pf.tbls[i]))
+                    else:
+                        self._caches = self._insert(
+                            self._caches, pf.caches,
+                            jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(i, jnp.int32))
                 self._reserved.discard(slot)
                 self._activate(slot, req, tok0, key, now, now)
         if not synced:
@@ -638,6 +1033,8 @@ class ContinuousEngine:
             if anchor is None:
                 break                     # other-mode requests wait: drain
             group = self._group_for_admission(len(free), anchor)
+            if not group:
+                break                     # page pool can't fund the anchor
             mode = self._eff_mode(group[0])
             self._cur_mode = mode
             # a per-request dsa_mode override can leave the chunk-exactness
@@ -657,12 +1054,16 @@ class ContinuousEngine:
                       "prefill_s": 0.0, "chunks": 0, "chunk_s": 0.0,
                       "stall_s": 0.0, "segment_s": 0.0,
                       "spec_rounds": 0, "spec_emitted": 0, "draft_s": 0.0,
-                      "accept_hist": [0] * (self.spec + 1)}
+                      "accept_hist": [0] * (self.spec + 1),
+                      "prefix_hits": 0, "prefix_tokens_reused": 0}
         self._enq_s: Dict[int, float] = {}
+        self.pool = (PagePool(self.pool_pages, self._page_rows)
+                     if self.paged else None)
         caches = unstack_group_caches(
             init_cache(self.cfg, self.slots, self.max_len,
                        self.engine.decode_flags,
-                       dtype=self.engine.cache_dtype))
+                       dtype=self.engine.cache_dtype,
+                       pages=self.pool_pages if self.paged else None))
 
         def record(path, log):
             name = _leaf_name(path)
@@ -748,6 +1149,8 @@ class ContinuousEngine:
                     st.req.n_new, st.req.arrival_s, st.admit_s, now,
                     first_token_s=st.first_token_s))
                 self._slot[i] = None          # slot freed; reset at admit
+                if self.paged:
+                    self.pool.free_slot(i)    # non-shared pages return
         if self._pf is None and not any(s is not None for s in self._slot):
             self._cur_mode = None         # idle: free to switch dsa_mode
 
@@ -818,6 +1221,8 @@ class ContinuousEngine:
                         st.req.n_new, st.req.arrival_s, st.admit_s, now,
                         first_token_s=st.first_token_s))
                     self._slot[i] = None  # slot freed; reset at admit
+                    if self.paged:
+                        self.pool.free_slot(i)
         # stats feed the chunk-burst budget tuner (_chunk_burst): count a
         # segment only when rounds actually ran, and report DEVICE segment
         # time — host drafting excluded — so the tuner sizes admission

@@ -89,6 +89,74 @@ def _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _paged_kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref, q_ref,
+                  k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, nb: int, scale: float):
+    # pidx_ref steers the BlockSpec index maps (which PHYSICAL page to
+    # stream); the body is the dense kernel's — it masks from idx_ref,
+    # the LOGICAL block stream, which carries the key positions
+    _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, block_q=block_q, block_k=block_k,
+            nb=nb, scale=scale)
+
+
+def dsa_chunk_paged_gather_attention(q, k_pool, v_pool, idx, pidx, ok,
+                                     q_off, kv_len, *, block_q: int = 128,
+                                     block_k: int = 128,
+                                     interpret: bool = False) -> jax.Array:
+    """Paged twin of ``dsa_chunk_gather_attention``: the cache is one FLAT
+    physical page pool (P*block_k, Hkv, hd) shared by all slots, and the
+    selection arrives as DUAL scalar-prefetched streams — idx
+    (B, nQb, nb) the LOGICAL block indices (position masking, unchanged
+    kernel body) and pidx the same selection translated to PHYSICAL pages
+    through each slot's page table (HBM->VMEM gather steering).  Returns
+    (B,Hq,C,hd)."""
+    b, hq, c, hd = q.shape
+    hkv = k_pool.shape[1]
+    g = hq // hkv
+    nb = idx.shape[-1]
+    n_qb = c // block_q
+    assert n_qb * block_q == c, (c, block_q)
+    scale = hd ** -0.5
+    # pool rows are page-aligned by construction — no tail padding
+    assert k_pool.shape[0] % block_k == 0, (k_pool.shape, block_k)
+    kp = k_pool[None]                                      # (1, P*Bk, Hkv, hd)
+    vp = v_pool[None]
+    grid = (b, hq, n_qb, nb)
+
+    def qmap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref):
+        return (bi, hi, qi, 0)
+
+    def kmap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref):
+        return (0, pidx_ref[bi, qi, ji], hi // g, 0)
+
+    kern = functools.partial(_paged_kernel, block_q=block_q,
+                             block_k=block_k, nb=nb, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), qmap),
+            pl.BlockSpec((1, block_k, 1, hd), kmap),
+            pl.BlockSpec((1, block_k, 1, hd), kmap),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, c, hd), q.dtype),
+        interpret=interpret,
+    )
+    return fn(idx.astype(jnp.int32), ok.astype(jnp.int32),
+              q_off.astype(jnp.int32), kv_len.astype(jnp.int32),
+              pidx.astype(jnp.int32), q, kp, vp)
+
+
 def dsa_chunk_gather_attention(q, k_cache, v_cache, idx, ok, q_off, kv_len,
                                *, block_q: int = 128, block_k: int = 128,
                                interpret: bool = False) -> jax.Array:

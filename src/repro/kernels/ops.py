@@ -15,8 +15,10 @@ import os
 import jax
 
 from repro.kernels.dsa_attention import dsa_block_sparse_attention
-from repro.kernels.dsa_chunk_prefill import dsa_chunk_gather_attention
-from repro.kernels.dsa_decode import dsa_decode_gather_attention
+from repro.kernels.dsa_chunk_prefill import (dsa_chunk_gather_attention,
+                                             dsa_chunk_paged_gather_attention)
+from repro.kernels.dsa_decode import (dsa_decode_gather_attention,
+                                      dsa_decode_paged_gather_attention)
 from repro.kernels.wkv6 import wkv6_chunked
 
 
@@ -59,6 +61,24 @@ def dsa_decode(q, k_cache, v_cache, idx, ok, kv_len, *, block_k=128,
     return out.transpose(0, 2, 1, 3)
 
 
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def dsa_decode_paged(q, k_pool, v_pool, idx, pidx, ok, kv_len, *,
+                     block_k=128, interpret=None):
+    """Fused DSA decode step over a PAGED cache (flat physical page pool).
+
+    q: (B,1,Hq,hd) [model layout]; k/v pool: (P*block_k,Hkv,hd); idx/ok:
+    (B,nb) selected LOGICAL cache-block indices; pidx: (B,nb) the same
+    selection as PHYSICAL pages; kv_len: (B,).  Returns (B,1,Hq,hd).
+    The pure-XLA twin is core.attention.dsa_decode_paged_block_attention.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,1,hd)
+    out = dsa_decode_paged_gather_attention(qt, k_pool, v_pool, idx, pidx,
+                                            ok, kv_len, block_k=block_k,
+                                            interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k",
                                              "interpret"))
 def dsa_chunk_prefill(q, k_cache, v_cache, idx, ok, q_off, kv_len, *,
@@ -76,6 +96,26 @@ def dsa_chunk_prefill(q, k_cache, v_cache, idx, ok, q_off, kv_len, *,
     out = dsa_chunk_gather_attention(qt, k_cache, v_cache, idx, ok, q_off,
                                      kv_len, block_q=block_q,
                                      block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def dsa_chunk_prefill_paged(q, k_pool, v_pool, idx, pidx, ok, q_off,
+                            kv_len, *, block_q=128, block_k=128,
+                            interpret=None):
+    """Fused DSA chunk-prefill step over a PAGED cache.
+
+    q: (B,C,Hq,hd) [model layout]; k/v pool: (P*block_k,Hkv,hd); idx/ok:
+    (B,C//block_q,nb) selected LOGICAL cache-block indices; pidx the same
+    selection as PHYSICAL pages; q_off/kv_len: (B,).  Returns (B,C,Hq,hd).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,C,hd)
+    out = dsa_chunk_paged_gather_attention(qt, k_pool, v_pool, idx, pidx,
+                                           ok, q_off, kv_len,
+                                           block_q=block_q, block_k=block_k,
+                                           interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 

@@ -46,7 +46,8 @@ def _serve_continuous(cfg, args, params, max_len, dsa_on, mesh):
         seg_len=args.seg_len, long_context=dsa_on,
         dsa_mode=args.dsa_mode if dsa_on else "off",
         spec=args.spec, moe_prefill=args.moe_prefill,
-        max_mode_wait_s=args.max_mode_wait, mesh=mesh)
+        max_mode_wait_s=args.max_mode_wait, mesh=mesh,
+        paged=args.paged, pool_pages=args.pool_pages or None)
     if args.spec and not eng.spec:
         print(f"note: spec={args.spec} outside the speculation envelope "
               f"for {cfg.name}; using plain segments")
@@ -103,6 +104,14 @@ def main(argv=None):
                     help="MoE prefill routing: 'dense' makes prefill "
                          "token-exact with chunk/decode steps (enables "
                          "chunked admission for MoE archs)")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the resident KV cache: block-table "
+                         "indirection over a shared refcounted page pool "
+                         "(+ copy-on-write prefix reuse for requests "
+                         "declaring prefix_len)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical pages in the paged pool (0 = enough "
+                         "for every slot at max_len)")
     ap.add_argument("--max-mode-wait", type=float, default=None,
                     help="seconds a queued other-dsa_mode request may "
                          "wait before forcing a drain/mode-switch "
@@ -122,6 +131,9 @@ def main(argv=None):
     params, _ = init_model(jax.random.PRNGKey(args.seed), cfg)
     max_len = args.max_len or (args.prompt_len + args.new_tokens + 16)
     dsa_on = args.dsa and cfg.dsa.enabled
+    if args.paged:
+        page = cfg.dsa.block_k if dsa_on else 16
+        max_len = -(-max_len // page) * page
     mesh = make_serving_mesh(args.dp) if (args.mesh or args.dp) else None
     if mesh is not None:
         print(f"serving mesh: {dict(mesh.shape)} over "

@@ -53,6 +53,18 @@ from repro.models.common import dense_init, rms_norm, rope
 # local neighbourhood regardless of prediction quality; DESIGN.md §4).
 DECODE_LOCAL = 64
 
+# Page granularity of the PAGED resident cache when the arch has no DSA
+# decode cache (with one, the page size is cfg.dsa.block_k so pages line up
+# with the block-pooled ktb rows and the gather kernels' block streams).
+PAGE_SIZE = 16
+
+
+def cache_page_size(cfg: ArchConfig, flags: RunFlags) -> int:
+    """Row count of one physical page of a paged resident cache."""
+    dsa_decode = (cfg.dsa.enabled and flags.long_context
+                  and not cfg.swa_window)
+    return cfg.dsa.block_k if dsa_decode else PAGE_SIZE
+
 
 @dataclasses.dataclass(frozen=True)
 class RunFlags:
@@ -195,6 +207,13 @@ def apply_attention(params, cfg: ArchConfig, flags: RunFlags, x, *,
     cross = x_kv is not None or (cache is not None and "ck" in cache)
 
     if flags.mode == "decode" and not cross:
+        if cache is not None and "page_tbl" in cache:
+            # paged resident cache: single-token decode only — chunked
+            # prefill and speculative verify run on dense staging caches
+            # (the scheduler gates them; inference.engine.can_page)
+            assert chunk_len is None, "paged caches decode 1 token at a time"
+            return _apply_paged_decode(params, cfg, flags, x, cache,
+                                       use_rope, active)
         if chunk_len is not None:
             if flags.spec_verify:
                 return _apply_verify(params, cfg, flags, x, cache, use_rope,
@@ -253,7 +272,7 @@ def apply_attention(params, cfg: ArchConfig, flags: RunFlags, x, *,
 
 
 def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
-                         flags: RunFlags, dtype=jnp.bfloat16):
+                         flags: RunFlags, dtype=jnp.bfloat16, pages=None):
     hd = cfg.resolved_head_dim
     s = min(max_len, flags.decode_window or max_len,
             cfg.swa_window or max_len)
@@ -263,6 +282,32 @@ def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
         # paths would otherwise jnp.pad the ENTIRE cache every step (an
         # O(S) copy inside the generation scan)
         s = -(-s // cfg.dsa.block_k) * cfg.dsa.block_k
+    if pages is not None:
+        # PAGED resident layout: one FLAT physical pool of ``pages`` pages
+        # of ``bk`` rows each (page p owns pool rows [p*bk, (p+1)*bk)),
+        # indirected by a per-slot page table over the logical [0, s)
+        # geometry.  Page 0 is the permanent ZERO page — never allocated,
+        # never written — so unmapped table entries resolve to zero rows
+        # and a gathered logical view is byte-identical to the dense
+        # zero-initialized cache.  Requires a non-wrapping cache
+        # (inference.engine.can_page gates SWA/windowed archs out).
+        assert not cfg.swa_window and not flags.decode_window, \
+            "paged caches require a non-wrapping layout"
+        bk = cfg.dsa.block_k if dsa_decode else PAGE_SIZE
+        assert s % bk == 0, (s, bk)
+        c = {
+            "k": jnp.zeros((pages * bk, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((pages * bk, cfg.n_kv_heads, hd), dtype),
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "page_tbl": jnp.zeros((batch, s // bk), jnp.int32),
+        }
+        if dsa_decode:
+            kp = PRED.predictor_k(cfg.d_model, cfg.dsa.sigma)
+            c["kt"] = jnp.zeros((pages * bk, kp), dtype)
+            # one ktb row per PAGE (page size == block_k): the block-pooled
+            # score cache pages with the rows it summarizes
+            c["ktb"] = jnp.zeros((pages, kp), dtype)
+        return c
     c = {
         "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
@@ -281,6 +326,14 @@ def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
 
 
 def cache_specs_attention(cache) -> Dict:
+    if "page_tbl" in cache:
+        out = {"k": ("pages", "kv_heads", "qkv"),
+               "v": ("pages", "kv_heads", "qkv"),
+               "pos": ("batch",), "page_tbl": ("batch", None)}
+        if "kt" in cache:
+            out["kt"] = ("pages", "pred_k")
+            out["ktb"] = ("pages", "pred_k")
+        return out
     out = {"k": ("batch", "cache_seq", "kv_heads", "qkv"),
            "v": ("batch", "cache_seq", "kv_heads", "qkv"),
            "pos": ("batch",)}
@@ -438,6 +491,123 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
         return dsa_decode_kernel(q, kc, vc, idx, ok, kv_len, block_k=bkd)
     return A.dsa_decode_block_attention(q, kc, vc, idx, ok, block_k=bkd,
                                         kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# paged decode (block-table indirection over a shared physical page pool)
+# ---------------------------------------------------------------------------
+
+
+def _paged_view_rows(tbl, bk: int):
+    """(B, S) pool-row index of every logical cache row of every slot.
+
+    Gathering a pool with this matrix materializes the dense logical view:
+    byte-identical to the dense resident cache (unmapped blocks point at
+    the zero page), which is what makes every O(S) read path bitwise."""
+    b, n_kb = tbl.shape
+    return (tbl[:, :, None] * bk
+            + jnp.arange(bk)[None, None, :]).reshape(b, n_kb * bk)
+
+
+def _apply_paged_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
+                        use_rope, active=None):
+    """Single-token decode on a PAGED resident cache.
+
+    The cache k/v/kt leaves are flat pools (pool_rows, ...) shared by all
+    slots; ``page_tbl`` (B, n_kb) maps each slot's logical block to its
+    physical page.  Writes translate the logical write slot to a flat pool
+    row through the table; frozen slots — and any slot whose table entry is
+    unmapped (page 0, the permanent zero page) — push the write out of
+    bounds so mode="drop" discards it.  O(S) read paths gather the dense
+    logical view (byte-identical to the dense cache), so their math is
+    bitwise the dense path's; block/kernel DSA paths instead translate the
+    SELECTED logical block indices to physical pages after top-k and gather
+    only those pages.
+    """
+    b = x.shape[0]
+    pos = _slot_pos(cache, b)                              # (B,)
+    q, k, v = _proj_qkv(params, cfg, x)
+    if use_rope:
+        p = pos[:, None]
+        q = rope(q, p, cfg.rope_theta)
+        k = rope(k, p, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", "qkv")
+    tbl = cache["page_tbl"]
+    n_kb = tbl.shape[1]
+    bk = cfg.dsa.block_k if "kt" in cache else PAGE_SIZE
+    s = n_kb * bk                                          # logical length
+    nrows = cache["k"].shape[0]                            # pool rows
+    wslot = pos if active is None else jnp.where(active, pos, s)
+    rows = jnp.arange(b)
+    pg = tbl[rows, jnp.clip(wslot // bk, 0, n_kb - 1)]
+    okw = (wslot < s) & (pg > 0)
+    flat = jnp.where(okw, pg * bk + wslot % bk, nrows)
+    kc = cache["k"].at[flat].set(k[:, 0].astype(cache["k"].dtype),
+                                 mode="drop")
+    vc = cache["v"].at[flat].set(v[:, 0].astype(cache["v"].dtype),
+                                 mode="drop")
+    kc = shard(kc, "pages", "kv_heads", "qkv")
+    vc = shard(vc, "pages", "kv_heads", "qkv")
+    new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
+    new = dict(cache, k=kc, v=vc, pos=new_pos)
+    kv_len = jnp.minimum(pos + 1, s).astype(jnp.int32)
+    if active is not None:
+        kv_len = jnp.where(active, kv_len, 0)
+    view = _paged_view_rows(tbl, bk)                       # (B, S)
+    if "kt" in cache:
+        out = _dsa_paged_decode(params, cfg, flags, x, q, kc, vc, new,
+                                flat, okw, pg, kv_len, view, bk)
+    else:
+        out = A.decode_attention(q, kc[view], vc[view], kv_len=kv_len)
+    out = shard(out, "batch", None, "heads", "qkv")
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    return out, new, {}
+
+
+def _dsa_paged_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc,
+                      vc, new, flat, okw, pg, kv_len, view, bk):
+    """DSA decode step on the paged pools — the paged twin of _dsa_decode.
+
+    kt writes reuse the translated flat row; the ktb pool has ONE row per
+    physical page (page size == block_k), so the scatter-add's target block
+    IS the write's page.  Selection scores the logical ktb view
+    ``ktb[tbl]`` (bitwise the dense ktb) and the selected LOGICAL block
+    indices are translated to physical pages only for the gather.
+    """
+    dsa = cfg.dsa
+    s = view.shape[1]
+    q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
+    ktc = new["kt"].at[flat].set(k_t[:, 0].astype(new["kt"].dtype),
+                                 mode="drop")
+    new["kt"] = shard(ktc, "pages", "pred_k")
+    keep = M.keep_count(s, dsa.sparsity)
+    if flags.dsa_mode == "off":
+        return A.decode_attention(q, kc[view], vc[view], kv_len=kv_len)
+    if flags.dsa_mode == "faithful":
+        kt_view = ktc[view]
+        s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
+                             kt_view.astype(jnp.float32))
+        return A.dsa_decode_attention(q, kc[view], vc[view], s_tilde,
+                                      keep=keep, kv_len=kv_len,
+                                      local=DECODE_LOCAL)
+    npages = new["ktb"].shape[0]
+    ktb = new["ktb"].at[jnp.where(okw, pg, npages)].add(
+        k_t[:, 0].astype(new["ktb"].dtype), mode="drop")
+    new["ktb"] = shard(ktb, "pages", "pred_k")
+    tbl = new["page_tbl"]
+    n_kb = tbl.shape[1]
+    s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
+                       ktb[tbl].astype(jnp.float32)) / bk
+    nb_keep = min(n_kb, -(-keep // bk) + -(-DECODE_LOCAL // bk) + 1)
+    idx, ok = M.decode_block_topk_indices(s_blk, nb_keep, kv_len=kv_len,
+                                          block_k=bk, local=DECODE_LOCAL)
+    pidx = jnp.take_along_axis(tbl, idx, axis=1)          # physical pages
+    if flags.dsa_mode == "kernel":
+        from repro.kernels.ops import dsa_decode_paged as dsa_paged_kernel
+        return dsa_paged_kernel(q, kc, vc, idx, pidx, ok, kv_len,
+                                block_k=bk)
+    return A.dsa_decode_paged_block_attention(q, kc, vc, idx, pidx, ok,
+                                              block_k=bk, kv_len=kv_len)
 
 
 # ---------------------------------------------------------------------------

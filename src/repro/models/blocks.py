@@ -10,7 +10,7 @@ A *group* is the repeating unit scanned over with stacked params:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -126,10 +126,11 @@ def init_subblock(key, cfg: ArchConfig, d: SubBlockDef, dtype=jnp.float32):
 
 def init_subblock_cache(cfg: ArchConfig, d: SubBlockDef, batch: int,
                         max_len: int, flags: RunFlags, dtype=jnp.bfloat16,
-                        enc_len: int = 0):
+                        enc_len: int = 0, pages: Optional[int] = None):
     c: Dict[str, Any] = {}
     if d.kind == "attn":
-        c["attn"] = init_cache_attention(cfg, batch, max_len, flags, dtype)
+        c["attn"] = init_cache_attention(cfg, batch, max_len, flags, dtype,
+                                         pages=pages)
     elif d.kind == "mla":
         c["attn"] = init_cache_mla(cfg, batch, max_len, dtype)
     elif d.kind == "mamba":

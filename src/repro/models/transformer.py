@@ -188,6 +188,11 @@ def truncate_cache(cfg: ArchConfig, caches, length):
 
     def walk(node):
         if isinstance(node, dict):
+            if "page_tbl" in node:
+                raise ValueError(
+                    "truncate_cache does not support paged caches — "
+                    "prefill runs on dense staging caches and the paged "
+                    "insert maps rows through the page table")
             out = {}
             for name, v in node.items():
                 if name == "pos":
@@ -401,6 +406,10 @@ def commit_chunk(cfg: ArchConfig, caches, keep, c: int,
 
     def walk(node):
         if isinstance(node, dict):
+            if "page_tbl" in node:
+                raise ValueError(
+                    "commit_chunk does not support paged caches — the "
+                    "scheduler gates speculative verify off when paged")
             if "pos" not in node:
                 return {k: walk(v) for k, v in node.items()}
             pos_now = node["pos"]                      # (B,) == start + adv
@@ -448,13 +457,19 @@ def commit_chunk(cfg: ArchConfig, caches, keep, c: int,
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, flags: RunFlags,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, pages: Optional[int] = None):
+    """pages: page count of a PAGED resident cache — every attention
+    sub-block's k/v (and DSA kt/ktb) leaves become flat physical page
+    pools indirected by a per-slot ``page_tbl`` over the logical
+    [0, max_len) geometry (see models.attention.init_cache_attention).
+    Serving-engine layout only (inference.engine.can_page gates archs)."""
     defs = B.group_defs(cfg)
     ng = B.n_groups(cfg)
     enc_len = cfg.enc_seq_len if cfg.enc_dec else (
         cfg.n_image_tokens if cfg.cross_attn_period else 0)
     one = {f"b{i}": B.init_subblock_cache(cfg, d, batch, max_len, flags,
-                                          dtype, enc_len=enc_len)
+                                          dtype, enc_len=enc_len,
+                                          pages=pages)
            for i, d in enumerate(defs)}
     groups = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (ng,) + a.shape), one)
@@ -463,7 +478,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, flags: RunFlags,
         d = B.SubBlockDef("mla" if cfg.mla is not None else "attn", moe=False)
         caches["prologue"] = [
             B.init_subblock_cache(cfg, d, batch, max_len, flags, dtype,
-                                  enc_len=enc_len)
+                                  enc_len=enc_len, pages=pages)
             for _ in range(cfg.moe.first_k_dense)]
     return caches
 

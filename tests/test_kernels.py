@@ -7,7 +7,9 @@ import pytest
 
 from repro.core import masks as M
 from repro.kernels import ref
-from repro.kernels.ops import dsa_attention, wkv6
+from repro.kernels.ops import (dsa_attention, dsa_chunk_prefill,
+                               dsa_chunk_prefill_paged, dsa_decode,
+                               dsa_decode_paged, wkv6)
 
 
 def _mk_qkv(key, b, l, hq, hkv, hd, dtype):
@@ -64,6 +66,82 @@ def test_dsa_attention_window(rng):
         v.transpose(0, 2, 1, 3), idx, ok, block_q=bq, block_k=bq,
         causal=True, window=64).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5)
+
+
+# -- paged gather kernels ----------------------------------------------------
+#
+# The paged variants steer the k/v BlockSpec through a second scalar-
+# prefetched PHYSICAL index stream while masking with the logical one; on a
+# pool that scatters the dense cache's blocks across permuted pages they
+# must reproduce the dense gather kernel BITWISE (same arithmetic, same
+# block values — only the fetch address changes).
+
+
+def _scatter_to_pool(cache, tbl, bk):
+    """Scatter each batch row's logical blocks to its pool pages."""
+    b, s = cache.shape[:2]
+    n_kb = s // bk
+    pool = jnp.zeros((int(tbl.max()) + 1, bk) + cache.shape[2:],
+                     cache.dtype)
+    blocks = cache.reshape(b, n_kb, bk, *cache.shape[2:])
+    pool = pool.at[tbl.reshape(-1)].set(
+        blocks.reshape(b * n_kb, bk, *cache.shape[2:]))
+    return pool.reshape(-1, *cache.shape[2:])
+
+
+def _permuted_tbl(key, b, n_kb):
+    """Per-row page tables: disjoint page sets, permuted within each row,
+    page 0 left reserved (the zero page)."""
+    perm = jnp.stack([jax.random.permutation(jax.random.fold_in(key, i),
+                                             n_kb) for i in range(b)])
+    return (1 + jnp.arange(b)[:, None] * n_kb + perm).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])       # MHA + GQA
+@pytest.mark.parametrize("s,bk", [(128, 16), (256, 32)])
+def test_dsa_decode_paged_matches_dense_kernel(rng, s, bk, hq, hkv):
+    b, hd = 2, 32
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd))
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd))
+    kv_len = jnp.array([s, max(1, s - 37)], jnp.int32)     # ragged batch
+    n_kb = s // bk
+    sb = jax.random.normal(ks[3], (b, n_kb))
+    idx, ok = M.decode_block_topk_indices(sb, min(n_kb, 5), kv_len=kv_len,
+                                          block_k=bk, local=32)
+    tbl = _permuted_tbl(jax.random.fold_in(rng, 7), b, n_kb)
+    kp = _scatter_to_pool(kc, tbl, bk)
+    vp = _scatter_to_pool(vc, tbl, bk)
+    pidx = jnp.take_along_axis(tbl, idx, axis=1)
+    out = dsa_decode_paged(q, kp, vp, idx, pidx, ok, kv_len, block_k=bk)
+    dense = dsa_decode(q, kc, vc, idx, ok, kv_len, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dense))
+
+
+@pytest.mark.parametrize("s,c,bq,bk", [(128, 32, 16, 16), (96, 32, 16, 32)])
+def test_dsa_chunk_paged_matches_dense_kernel(rng, s, c, bq, bk):
+    b, hq, hkv, hd = 2, 4, 2, 32
+    ks = jax.random.split(rng, 5)
+    q = jax.random.normal(ks[0], (b, c, hq, hd))
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd))
+    q_off = jnp.array([32, 16], jnp.int32)                 # ragged depths
+    kv_len = q_off + jnp.array([c, c - 7], jnp.int32)
+    n_kb = -(-s // bk)
+    bs = jax.random.normal(ks[3], (b, c // bq, n_kb))
+    idx, ok = M.chunk_block_topk_indices(bs, min(n_kb, 4),
+                                         q_block_offset=q_off // bq)
+    tbl = _permuted_tbl(jax.random.fold_in(rng, 9), b, n_kb)
+    kp = _scatter_to_pool(kc, tbl, bk)
+    vp = _scatter_to_pool(vc, tbl, bk)
+    pidx = jnp.take_along_axis(tbl[:, None].repeat(idx.shape[1], 1), idx,
+                               axis=2)
+    out = dsa_chunk_prefill_paged(q, kp, vp, idx, pidx, ok, q_off, kv_len,
+                                  block_q=bq, block_k=bk)
+    dense = dsa_chunk_prefill(q, kc, vc, idx, ok, q_off, kv_len,
+                              block_q=bq, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dense))
 
 
 @pytest.mark.parametrize("s,chunk,hd", [(64, 16, 16), (128, 32, 64),

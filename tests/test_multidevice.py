@@ -173,6 +173,42 @@ def test_sharded_dsa_long_context_bitwise(rng, mesh):
                                                      seed=21))
 
 
+def test_sharded_paged_serving_bitwise(rng, mesh):
+    """Paged resident cache under the mesh: the physical page pool shards
+    over "data" while page tables ride the slot axis — paged sharded
+    serving (including a copy-on-write prefix-reuse group) reproduces
+    paged unsharded serving token-bitwise, and both drain the pool."""
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    kw = dict(slots=SLOTS, max_len=MAX_LEN, seg_len=4, long_context=True,
+              dsa_mode="block", chunk_tokens=16, paged=True)
+    plain = ContinuousEngine(cfg, params, **kw)
+    sharded = ContinuousEngine(cfg, params, mesh=mesh, **kw)
+    rng_np = np.random.default_rng(41)
+    sys_p = rng_np.integers(1, cfg.vocab - 4, size=(40,)).astype(np.int32)
+    shared_prompts = [np.concatenate([sys_p, rng_np.integers(
+        1, cfg.vocab - 4, size=(tail,)).astype(np.int32)])
+        for tail in (8, 15, 3)]
+
+    def mk(base=0):
+        reqs = _mk_requests(cfg.vocab, [(48, 8), (21, 12), (65, 5),
+                                        (30, 10)], seed=43)
+        for r in reqs:
+            r.rid += base
+        reqs += [Request(base + 10 + j, p, 5 + j, seed=j * 7 + 1,
+                         prefix_len=40)
+                 for j, p in enumerate(shared_prompts)]
+        return reqs
+
+    # wave 1 registers the shared prefix (all sharers co-admit: a MISS);
+    # wave 2's sharers HIT the registry and skip the shared chunks
+    _check_sharded_equals_plain(plain, sharded, mk)
+    _check_sharded_equals_plain(plain, sharded, lambda: mk(base=100))
+    assert sharded.stats["prefix_tokens_reused"] > 0
+    assert (sharded.pool.available()
+            == sharded.pool_pages - 1 - 40 // sharded._page_rows)
+
+
 def test_sharded_engine_generate_bitwise(dense, mesh):
     """Static Engine.generate under the mesh: batched prefill + the fused
     decode scan shard over the batch axis bitwise, greedy and sampled."""

@@ -82,6 +82,58 @@ def test_resolve_spec_divisibility(mesh_shape, dims):
         assert dim % n == 0          # divisibility always honored
 
 
+@given(st.integers(2, 24), st.integers(1, 4),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                          st.integers(1, 6)), max_size=40),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_page_pool_churn_never_leaks(n_pages, n_prefix, ops, seed):
+    """PagePool invariant under arbitrary admit/retire/share/evict churn:
+    every page in [1, n_pages) is EITHER free OR refcounted, never both
+    nor neither — a freed slot returns exactly its non-shared pages, and
+    no sequence of operations leaks or double-frees a page."""
+    from repro.inference.scheduler import PagePool
+
+    pool = PagePool(n_pages, page_rows=16)
+    rng = np.random.default_rng(seed)
+    shared = None
+
+    def check():
+        freed = set(pool.free)
+        held = {p for p in range(1, pool.n_pages) if pool.ref[p] > 0}
+        assert not (freed & held)                    # never both
+        assert freed | held == set(range(1, pool.n_pages))  # never neither
+        assert len(pool.free) == len(freed)          # no duplicates
+
+    for op, slot, n in ops:
+        if op == 0 and slot not in pool.slot_pages:  # admit (maybe shared)
+            n_sh = len(shared) if shared is not None else 0
+            if n > pool.available():
+                continue
+            if shared is not None:
+                pool.retain(shared)
+                pages = list(shared) + pool.alloc(n)
+            else:
+                pages = pool.alloc(n)
+            pool.assign_slot(slot, pages, n_sh)
+        elif op == 1 and slot in pool.slot_pages:    # retire
+            pool.free_slot(slot)
+        elif op == 2 and shared is None:             # register a prefix
+            if n_prefix > pool.available():
+                continue
+            shared = pool.alloc(n_prefix)
+            pool.register_prefix(("k", 16 * n_prefix, 64, "off"), shared)
+        elif op == 3 and shared is not None:         # LRU-evict it
+            pool.evict_for(pool.n_pages, keep=None)
+            shared = None
+        check()
+    for s in list(pool.slot_pages):                  # drain everything
+        pool.free_slot(s)
+    pool.evict_for(pool.n_pages, keep=None)
+    check()
+    assert pool.available() == pool.n_pages - 1      # whole pool back
+
+
 @given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
 @settings(**SET)
 def test_block_indices_within_range(nb, seed):

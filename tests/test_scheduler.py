@@ -385,6 +385,127 @@ def test_segment_compiles_once(dense):
     assert ce._segment._cache_size() == 1
 
 
+# -- paged KV cache + copy-on-write prefix reuse -----------------------------
+
+
+@pytest.fixture(scope="module")
+def dense_paged(dense):
+    cfg, params, _, ref = dense
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          paged=True)
+    return cfg, params, ce, ref
+
+
+def test_paged_token_exact_dense(dense_paged):
+    """Paged resident cache (block-table indirection over the shared page
+    pool): greedy AND sampled serving stays BITWISE token-exact vs the
+    dense solo engine, and retire/readmit churn returns every page."""
+    cfg, _, ce, ref = dense_paged
+    assert ce.paged and ce.pool is not None
+    reqs = _mk_requests(cfg.vocab, [(20, 5), (33, 9), (7, 1), (40, 12),
+                                    (12, 6)])
+    extra = _mk_requests(cfg.vocab, [(33, 6), (20, 4)], seed=2,
+                         greedy=False)
+    for r in extra:
+        r.rid += 10
+    _check_exact(ce, ref, reqs + extra)
+    assert ce.pool.available() == ce.pool_pages - 1   # nothing leaked
+
+
+def test_paged_token_exact_dsa_block_and_kernel(dsa):
+    """DSA long-context paged serving: logical block selection translates
+    through the page table (XLA block path AND the fused Pallas paged
+    gather kernel) token-bitwise vs the dense engine."""
+    cfg, params, _, _ = dsa
+    shapes = [(48, 6), (21, 8), (65, 5), (30, 4)]
+    for mode in ("block", "kernel"):
+        ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                              seg_len=4, long_context=True, dsa_mode=mode,
+                              paged=True)
+        ref = Engine(cfg, params, max_len=MAX_LEN, long_context=True,
+                     dsa_mode=mode)
+        reqs = _mk_requests(cfg.vocab, shapes, seed=131)
+        _check_exact(ce, ref, reqs)
+        assert ce.pool.available() == ce.pool_pages - 1, mode
+
+
+def test_paged_prefix_reuse_exact_and_skips_chunks(dsa):
+    """Copy-on-write prefix sharing: requests declaring a common prefix
+    map the same physical pages, skip the shared whole-page chunks at
+    admission (prefix registry HIT), and still emit BITWISE the dense
+    engine's tokens; the registry keeps the shared pages alive after the
+    readers retire."""
+    cfg, params, _, _ = dsa
+    rng = np.random.default_rng(141)
+    sys_p = rng.integers(1, cfg.vocab - 4, size=(40,)).astype(np.int32)
+
+    def mk(rid, tail, n, greedy=True):
+        p = np.concatenate([sys_p, rng.integers(
+            1, cfg.vocab - 4, size=(tail,)).astype(np.int32)])
+        return Request(rid, p, n, greedy=greedy, seed=rid * 7 + 1,
+                       prefix_len=40)
+
+    reqs = [mk(0, 8, 6), mk(1, 15, 5), mk(2, 3, 7, greedy=False),
+            mk(3, 20, 4), mk(4, 11, 5), mk(5, 6, 6, greedy=False)]
+    kw = dict(slots=2, max_len=MAX_LEN, seg_len=4, long_context=True,
+              dsa_mode="block", chunk_tokens=16)
+    ce = ContinuousEngine(cfg, params, paged=True, **kw)
+    plain = ContinuousEngine(cfg, params, **kw)
+    ref = Engine(cfg, params, max_len=MAX_LEN, long_context=True,
+                 dsa_mode="block")
+    _check_exact(ce, ref, reqs)
+    assert ce.stats["prefix_hits"] > 0
+    assert ce.stats["prefix_tokens_reused"] > 0
+    plain.run(list(reqs))
+    assert ce.stats["chunks"] < plain.stats["chunks"]   # chunks skipped
+    # the LRU registry still owns the shared pages; everything else is back
+    n_sh = 40 // ce._page_rows
+    assert len(ce.pool.prefixes) == 1
+    assert ce.pool.available() == ce.pool_pages - 1 - n_sh
+
+
+def test_paged_small_pool_backpressure_exact(dense):
+    """A pool smaller than slots*max_len: admission caps groups at what
+    the pool can fund and later requests wait for retirements — tokens
+    stay exact and the drained pool is whole again."""
+    cfg, params, _, ref = dense
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN, seg_len=4,
+                          paged=True, pool_pages=5)      # 4 usable pages
+    reqs = _mk_requests(cfg.vocab, [(20, 25), (17, 30), (30, 3), (20, 5)],
+                        seed=151)
+    _check_exact(ce, ref, reqs)
+    assert ce.pool.available() == 4
+
+
+def test_paged_admission_validation(dense_paged):
+    """Up-front refusals: a request whose pages can NEVER fit the pool, a
+    prefix_len outside the prompt, and a max_len that isn't whole pages
+    all fail at submit/construction with clear ValueErrors."""
+    cfg, params, ce, _ = dense_paged
+    small = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN,
+                             seg_len=4, paged=True, pool_pages=4)
+    with pytest.raises(ValueError, match="pages"):
+        small.submit(Request(1, np.ones((60,), np.int32), 20))
+    with pytest.raises(ValueError, match="prefix_len"):
+        ce.submit(Request(2, np.ones((8,), np.int32), 2, prefix_len=9))
+    with pytest.raises(ValueError, match="page size"):
+        ContinuousEngine(cfg, params, slots=2, max_len=90, seg_len=4,
+                         paged=True)
+
+
+def test_engine_generate_rejects_overflow(dense):
+    """Admission-time validation regression: Engine.generate refuses
+    prompt_len + n_new > max_len up front (clear ValueError, no cache
+    overflow), and per-row ``lengths`` count — a padded matrix whose TRUE
+    lengths fit is accepted."""
+    cfg, _, _, ref = dense
+    with pytest.raises(ValueError, match="max_len"):
+        ref.generate(np.ones((1, 90), np.int32), 10)
+    out = ref.generate(np.ones((1, 90), np.int32), 4,
+                       lengths=np.asarray([40]))
+    assert out.tokens.shape == (1, 4)
+
+
 if HAVE_HYPOTHESIS:
     _engines = {}
 
