@@ -60,7 +60,18 @@ _SERVE_RATIO_KEYS = {
     # paged baseline (timing: full runs only, lower is better)
     "slots_per_gib_ratio_prefix_vs_dense": True,
     "ttft_frac_prefix_vs_paged": False,
+    # Energon mixed-precision serving: slots-per-GiB of the int8-KV engine
+    # over the fp32 long-prompt engine — pure byte counts, deterministic,
+    # gated at smoke too (and against the absolute floor below)
+    "slots_per_gib_ratio_quant_vs_fp32": True,
 }
+
+# the quantized cache must pack at least this many times the slots of the
+# fp32 cache (the acceptance floor, not just no-regression-vs-baseline):
+# int8 payloads + f32 per-row scales give ~3.2x at hd=16, so 1.8 leaves
+# headroom for layout changes without letting quantization quietly stop
+# paying for itself
+_QUANT_SLOTS_PER_GIB_FLOOR = 1.8
 
 # spec-gate metrics (table_spec.py ratio row): acceptance collapsing or the
 # speculative/plain goodput ratio regressing are both structural failures
@@ -160,7 +171,8 @@ def check_serve(threshold: float, path: str = "") -> int:
         # chunked-vs-blocking structural ratio plus the deterministic
         # slots-per-GiB byte-count ratio there
         keys = {"goodput_ratio_chunked_vs_blocking": True,
-                "slots_per_gib_ratio_prefix_vs_dense": True}
+                "slots_per_gib_ratio_prefix_vs_dense": True,
+                "slots_per_gib_ratio_quant_vs_fp32": True}
         if ("goodput_ratio_sharded_vs_single" in br
                 and "goodput_ratio_sharded_vs_single" not in nr):
             # presence-only at smoke: forced host devices share the same
@@ -169,7 +181,8 @@ def check_serve(threshold: float, path: str = "") -> int:
             print("FAIL: serve ratio goodput_ratio_sharded_vs_single "
                   "missing from latest smoke run")
             return 1
-        for mode in ("continuous_paged", "continuous_prefix_hit"):
+        for mode in ("continuous_paged", "continuous_prefix_hit",
+                     "continuous_quant", "continuous_paged_quant"):
             # same presence logic for the paged serving rows: their VALUES
             # are noise at smoke, their disappearance is structural
             if (any(r.get("mode") == mode for r in base.get("rows", []))
@@ -178,6 +191,16 @@ def check_serve(threshold: float, path: str = "") -> int:
                 print(f"FAIL: serve mode row {mode} missing from latest "
                       "smoke run")
                 return 1
+    if "slots_per_gib_ratio_quant_vs_fp32" in nr:
+        # absolute value gate (byte-deterministic, so smoke gates it too):
+        # the quantized engine must actually pack more slots per GiB
+        v = nr["slots_per_gib_ratio_quant_vs_fp32"]
+        if v < _QUANT_SLOTS_PER_GIB_FLOOR:
+            print(f"FAIL: serve slots_per_gib_ratio_quant_vs_fp32 {v:.3f} "
+                  f"below the {_QUANT_SLOTS_PER_GIB_FLOOR} floor")
+            return 1
+        print(f"ok: serve slots_per_gib_ratio_quant_vs_fp32 {v:.3f} >= "
+              f"{_QUANT_SLOTS_PER_GIB_FLOOR} floor")
     return _check_ratio_keys(nr, br, keys, threshold, "serve")
 
 

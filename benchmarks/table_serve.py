@@ -56,6 +56,19 @@ long common prefix + a short unique tail) twice:
                          shared chunks, and the pool is sized to the
                          workload (shared pages ONCE + per-slot tails).
 
+Two mixed-precision modes (Energon, arXiv 2110.09310) serve the same
+long-prompt workload with the K/V cache stored int8 + per-row f32 scales
+(``kv_quant="int8"`` on the ServingConfig — dequant on gather, and
+token-identical to fp32 serving at this geometry):
+
+  continuous_quant        the dense long-prompt engine, quantized cache.
+  continuous_paged_quant  the same quantized cache behind the page-table
+                          indirection (scale leaves ride the same pages).
+
+Their ``slots_per_gib_ratio_quant_vs_fp32`` (vs the fp32 long-prompt
+engine) is a pure byte count — deterministic, so it is emitted and
+regression-gated at smoke scale too.
+
 Every resident engine's row carries ``cache_bytes`` (resident cache tree
 bytes) and ``slots_per_gib``; the ratio row derives
 ``slots_per_gib_ratio_prefix_vs_dense`` (the memory win of sharing, vs the
@@ -208,6 +221,15 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         block_l = ContinuousEngine(cfg, params, slots=slots,
                                    max_len=max_len_long, seg_len=seg_len,
                                    chunked_prefill=False)
+    # Energon mixed-precision rows: cont_l's exact config with the K/V
+    # cache held int8 + per-row scales (same traffic, same tokens, ~3.2x
+    # fewer cache bytes at hd=16), dense and paged
+    quant_l = ContinuousEngine(cfg, params, slots=slots,
+                               max_len=max_len_long, seg_len=seg_len,
+                               kv_quant="int8")
+    paged_quant_l = ContinuousEngine(cfg, params, slots=slots,
+                                     max_len=max_len_long, seg_len=seg_len,
+                                     kv_quant="int8", paged=True)
     # paged + copy-on-write prefix reuse, long-prompt config: the shared
     # system prompt spans most of the context while unique tails and
     # generations stay short — the serving shape prefix sharing exists for
@@ -246,6 +268,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                            (block, mixed_lens, wl_warm),
                            (cont_l, long_lens, wl_long_warm),
                            (block_l, long_lens, wl_long_warm),
+                           (quant_l, long_lens, wl_long_warm),
+                           (paged_quant_l, long_lens, wl_long_warm),
                            (paged_l, pfx_lens, wl_pfx_warm_nd),
                            (prefix_l, pfx_lens, wl_pfx_warm),
                            *(((cont_m, mixed_lens, wl_warm),)
@@ -263,6 +287,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     cont_runs, block_runs, bucketed_runs, exact_runs = [], [], [], []
     cont_long_runs, block_long_runs, cont_mesh_runs = [], [], []
     paged_runs, prefix_runs = [], []
+    quant_runs, paged_quant_runs = [], []
     for _ in range(trials):       # interleave: CPU drift hits modes equally
         bucketed_runs.append(_measure(bucketed, wl))
         block_runs.append(_measure(block, wl))
@@ -271,6 +296,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             cont_mesh_runs.append(_measure(cont_m, wl))
         block_long_runs.append(_measure(block_l, wl_long))
         cont_long_runs.append(_measure(cont_l, wl_long))
+        quant_runs.append(_measure(quant_l, wl_long))
+        paged_quant_runs.append(_measure(paged_quant_l, wl_long))
         paged_runs.append(_measure(paged_l, wl_pfx_nd))
         prefix_runs.append(_measure(prefix_l, wl_pfx))
     for _ in range(exact_trials):
@@ -288,6 +315,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         _best(exact_runs))
     s_cont_l, s_block_l = _best(cont_long_runs), _best(block_long_runs)
     s_paged, s_prefix = _best(paged_runs), _best(prefix_runs)
+    s_quant, s_pquant = _best(quant_runs), _best(paged_quant_runs)
     ratios = {
         "goodput_ratio_vs_static":
             s_cont["goodput_tok_s"] / max(s_exact["goodput_tok_s"], 1e-9),
@@ -303,6 +331,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     # deterministic byte counts (no timing): emitted at smoke too
     ratios["slots_per_gib_ratio_prefix_vs_dense"] = (
         s_prefix["slots_per_gib"] / max(s_cont_l["slots_per_gib"], 1e-9))
+    ratios["slots_per_gib_ratio_quant_vs_fp32"] = (
+        s_quant["slots_per_gib"] / max(s_cont_l["slots_per_gib"], 1e-9))
     if not smoke:
         # smoke-scale TTFTs are single milliseconds — value is noise there
         ratios["ttft_frac_prefix_vs_paged"] = (
@@ -325,6 +355,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                     ("continuous_blocking", s_block), ("continuous", s_cont),
                     ("continuous_blocking_longprompt", s_block_l),
                     ("continuous_longprompt", s_cont_l),
+                    ("continuous_quant", s_quant),
+                    ("continuous_paged_quant", s_pquant),
                     ("continuous_paged", s_paged),
                     ("continuous_prefix_hit", s_prefix),
                     *((("continuous_sharded", s_cont_m),)
@@ -341,7 +373,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         jrows.append(dict(s, mode=mode, slots=slots, seg_len=seg_len,
                           max_len=(max_len_long
                                    if ("longprompt" in mode or "paged" in
-                                       mode or "prefix" in mode)
+                                       mode or "prefix" in mode
+                                       or "quant" in mode)
                                    else max_len)))
     jrows.append(dict({k: round(v, 3) for k, v in ratios.items()},
                       mode="ratio", slots=slots, seg_len=seg_len))
@@ -363,6 +396,10 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         + (f"_ttftx{ratios['ttft_frac_prefix_vs_paged']:.2f}"
            if not smoke else "")
         + f"_reused_{s_prefix.get('prefix_tokens_reused', 0)}tok"))
+    lines.append(row(
+        "table_serve/quant", 0.0,
+        f"{ratios['slots_per_gib_ratio_quant_vs_fp32']:.2f}x_slots_per_gib"
+        f"_vs_fp32_int8kv"))
     if s_cont_m is not None:
         lines.append(row(
             "table_serve/sharded_vs_single", 0.0,

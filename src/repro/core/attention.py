@@ -71,6 +71,13 @@ def _pos_mask(lq: int, lk: int, causal: bool, window: int,
     return m
 
 
+def _dequant_rows(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Dequantize gathered int8/fp8 cache rows: per-(row, head) float32
+    scales broadcast over the trailing head_dim axis (Energon dequant-on-
+    gather — only the visited rows return to full precision)."""
+    return x.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
 def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
     """-> (B, Hkv, G, Lq, Lk) scores, scaled."""
     b, lq, hq, hd = q.shape
@@ -207,7 +214,9 @@ def chunk_attention(q, k_cache, v_cache, q_pos, *,
 def dsa_chunk_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
                               block_q: int, block_k: int,
                               q_offset: jax.Array,
-                              kv_len: Optional[jax.Array] = None
+                              kv_len: Optional[jax.Array] = None,
+                              k_scale: Optional[jax.Array] = None,
+                              v_scale: Optional[jax.Array] = None
                               ) -> jax.Array:
     """Block-gather DSA chunk prefill — the pure-XLA twin of the fused
     Pallas kernel in repro.kernels.dsa_chunk_prefill.
@@ -220,7 +229,8 @@ def dsa_chunk_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     block this performs exactly the gather + masked softmax of
     ``dsa_sparse_attention``'s scan step with the query positions shifted
     by q_offset, so a chunk at depth 0..L reproduces whole-prompt sparse
-    prefill bitwise on its rows.
+    prefill bitwise on its rows.  k_scale/v_scale: optional (B, S, Hkv)
+    per-row quantization scales (dequant-on-gather).
     """
     b, c, hq, hd = q.shape
     s_len, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -232,8 +242,13 @@ def dsa_chunk_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     if pad:
         k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
     kb = k_cache.reshape(b, n_kb, block_k, hkv, hd)
     vb = v_cache.reshape(b, n_kb, block_k, hkv, hdv)
+    sb_k = None if k_scale is None else k_scale.reshape(b, n_kb, block_k, hkv)
+    sb_v = None if v_scale is None else v_scale.reshape(b, n_kb, block_k, hkv)
     qs = q.reshape(b, n_qb, block_q, hq, hd).swapaxes(0, 1)   # (nQb, B, ...)
     idx_s = idx.swapaxes(0, 1)                                # (nQb, B, nb)
     val_s = idx_valid.swapaxes(0, 1)
@@ -245,6 +260,11 @@ def dsa_chunk_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
         vs = jnp.take_along_axis(vb, ib[:, :, None, None, None], axis=1)
         ks = ks.reshape(b, nb * block_k, hkv, hd)
         vs = vs.reshape(b, nb * block_k, hkv, hdv)
+        if sb_k is not None:
+            ss_k = jnp.take_along_axis(sb_k, ib[:, :, None, None], axis=1)
+            ss_v = jnp.take_along_axis(sb_v, ib[:, :, None, None], axis=1)
+            ks = _dequant_rows(ks, ss_k.reshape(b, nb * block_k, hkv))
+            vs = _dequant_rows(vs, ss_v.reshape(b, nb * block_k, hkv))
         s = _gqa_scores(qc, ks)                   # (B,Hkv,G,Bq,nb*Bk)
         kpos = (ib[:, :, None] * block_k
                 + jnp.arange(block_k)[None, None, :]).reshape(b, nb * block_k)
@@ -256,7 +276,7 @@ def dsa_chunk_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
             m = m & (kpos[:, None, :] < lim)
         s = jnp.where(m[:, None, None], s, NEG)
         p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-        return None, _gqa_out(p.astype(v_cache.dtype), vs)
+        return None, _gqa_out(p.astype(vs.dtype), vs)
 
     _, outs = _scan(step, None, (qs, idx_s, val_s, jnp.arange(n_qb)))
     return outs.swapaxes(0, 1).reshape(b, c, hq, hdv)
@@ -283,7 +303,9 @@ def decode_attention(q, k_cache, v_cache, *, kv_len: Optional[jax.Array] = None,
 
 def dsa_decode_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
                                block_k: int,
-                               kv_len: Optional[jax.Array] = None
+                               kv_len: Optional[jax.Array] = None,
+                               k_scale: Optional[jax.Array] = None,
+                               v_scale: Optional[jax.Array] = None
                                ) -> jax.Array:
     """Block-gather DSA decode — the pure-XLA twin of the fused Pallas
     kernel in repro.kernels.dsa_decode (decode fast path).
@@ -293,6 +315,8 @@ def dsa_decode_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     cache rows [j*block_k, (j+1)*block_k)).  Visits only nb*block_k cache
     rows; positions past kv_len (ragged batches, partial tail block) are
     masked.  With every valid block selected this EQUALS decode_attention.
+    k_scale/v_scale: optional (B, S, Hkv) per-row quantization scales for
+    int8/fp8 caches — gathered alongside and dequantized post-gather.
     """
     b, _, hq, hd = q.shape
     s_len, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -309,6 +333,16 @@ def dsa_decode_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     vs = jnp.take_along_axis(vb, idx[:, :, None, None, None], axis=1)
     ks = ks.reshape(b, nb * block_k, hkv, hd)
     vs = vs.reshape(b, nb * block_k, hkv, hdv)
+    if k_scale is not None:
+        if pad:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+        sb_k = k_scale.reshape(b, n_kb, block_k, hkv)
+        sb_v = v_scale.reshape(b, n_kb, block_k, hkv)
+        ss_k = jnp.take_along_axis(sb_k, idx[:, :, None, None], axis=1)
+        ss_v = jnp.take_along_axis(sb_v, idx[:, :, None, None], axis=1)
+        ks = _dequant_rows(ks, ss_k.reshape(b, nb * block_k, hkv))
+        vs = _dequant_rows(vs, ss_v.reshape(b, nb * block_k, hkv))
     kpos = (idx[:, :, None] * block_k
             + jnp.arange(block_k)[None, None, :]).reshape(b, nb * block_k)
     lim = jnp.full((b,), s_len, jnp.int32) if kv_len is None else kv_len
@@ -317,11 +351,13 @@ def dsa_decode_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     s = _gqa_scores(q, ks)                          # (B,Hkv,G,1,nb*Bk)
     s = jnp.where(m[:, None, None, None], s, NEG)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    return _gqa_out(p.astype(v_cache.dtype), vs)
+    return _gqa_out(p.astype(vs.dtype), vs)
 
 
 def dsa_decode_paged_block_attention(q, k_pool, v_pool, idx, pidx, idx_valid,
-                                     *, block_k: int, kv_len: jax.Array
+                                     *, block_k: int, kv_len: jax.Array,
+                                     k_scale: Optional[jax.Array] = None,
+                                     v_scale: Optional[jax.Array] = None
                                      ) -> jax.Array:
     """Paged twin of ``dsa_decode_block_attention``: the cache is a FLAT
     physical page pool shared by all slots instead of per-slot rows.
@@ -334,6 +370,7 @@ def dsa_decode_paged_block_attention(q, k_pool, v_pool, idx, pidx, idx_valid,
     page pidx, masks from the logical positions — with a page table whose
     mapped pages hold exactly the dense cache's block contents this is
     bitwise ``dsa_decode_block_attention`` on the dense cache.
+    k_scale/v_scale: optional (P*block_k, Hkv) per-row pool scales.
     """
     b, _, hq, hd = q.shape
     hkv = k_pool.shape[1]
@@ -343,6 +380,11 @@ def dsa_decode_paged_block_attention(q, k_pool, v_pool, idx, pidx, idx_valid,
     vb = v_pool.reshape(-1, block_k, hkv, hdv)
     ks = kb[pidx].reshape(b, nb * block_k, hkv, hd)
     vs = vb[pidx].reshape(b, nb * block_k, hkv, hdv)
+    if k_scale is not None:
+        sb_k = k_scale.reshape(-1, block_k, hkv)
+        sb_v = v_scale.reshape(-1, block_k, hkv)
+        ks = _dequant_rows(ks, sb_k[pidx].reshape(b, nb * block_k, hkv))
+        vs = _dequant_rows(vs, sb_v[pidx].reshape(b, nb * block_k, hkv))
     kpos = (idx[:, :, None] * block_k
             + jnp.arange(block_k)[None, None, :]).reshape(b, nb * block_k)
     m = idx_valid[:, :, None].repeat(block_k, axis=2).reshape(b, nb * block_k)
@@ -350,11 +392,14 @@ def dsa_decode_paged_block_attention(q, k_pool, v_pool, idx, pidx, idx_valid,
     s = _gqa_scores(q, ks)                           # (B,Hkv,G,1,nb*Bk)
     s = jnp.where(m[:, None, None, None], s, NEG)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    return _gqa_out(p.astype(v_pool.dtype), vs)
+    return _gqa_out(p.astype(vs.dtype), vs)
 
 
 def dsa_verify_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
-                               block_k: int, kv_len: jax.Array) -> jax.Array:
+                               block_k: int, kv_len: jax.Array,
+                               k_scale: Optional[jax.Array] = None,
+                               v_scale: Optional[jax.Array] = None
+                               ) -> jax.Array:
     """Speculative-verify twin of ``dsa_decode_block_attention``: C chunk
     rows, each with its OWN selected block list and ragged cache length.
 
@@ -378,6 +423,9 @@ def dsa_verify_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     if pad:
         k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
     kb = k_cache.reshape(b, n_kb, block_k, hkv, hd)
     vb = v_cache.reshape(b, n_kb, block_k, hkv, hdv)
     idx2 = idx.reshape(b, c * nb)
@@ -385,6 +433,13 @@ def dsa_verify_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     vs = jnp.take_along_axis(vb, idx2[:, :, None, None, None], axis=1)
     ks = ks.reshape(b, c, nb * block_k, hkv, hd)
     vs = vs.reshape(b, c, nb * block_k, hkv, hdv)
+    if k_scale is not None:
+        sb_k = k_scale.reshape(b, n_kb, block_k, hkv)
+        sb_v = v_scale.reshape(b, n_kb, block_k, hkv)
+        ss_k = jnp.take_along_axis(sb_k, idx2[:, :, None, None], axis=1)
+        ss_v = jnp.take_along_axis(sb_v, idx2[:, :, None, None], axis=1)
+        ks = _dequant_rows(ks, ss_k.reshape(b, c, nb * block_k, hkv))
+        vs = _dequant_rows(vs, ss_v.reshape(b, c, nb * block_k, hkv))
     kpos = (idx[..., None] * block_k
             + jnp.arange(block_k)[None, None, None, :]).reshape(
                 b, c, nb * block_k)
@@ -396,7 +451,7 @@ def dsa_verify_block_attention(q, k_cache, v_cache, idx, idx_valid, *,
     s = jnp.einsum("bcqhgd,bckhd->bchgqk", qg, ks)
     s = jnp.where(m[:, :, None, None, None], s, NEG)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    out = jnp.einsum("bchgqk,bckhd->bcqhgd", p.astype(v_cache.dtype), vs)
+    out = jnp.einsum("bchgqk,bckhd->bcqhgd", p.astype(vs.dtype), vs)
     return out.reshape(b, c, hq, hdv)
 
 

@@ -213,6 +213,21 @@ def verify_block_topk_indices(block_scores: jax.Array, nb_keep: int, *,
     return idx.reshape(b, c, -1), ok.reshape(b, c, -1)
 
 
+def dequant_topk_scores(s_int: jax.Array, scale: jax.Array, *,
+                        block_k: int = 1) -> jax.Array:
+    """Dequantize int8-selection scores just before the top-k reduction.
+
+    s_int: (..., n) int32 accumulator of an int8 x int8 selection matmul;
+    scale: broadcastable per-(row, key) product of the query-row and
+    key-row quantization scales.  ``block_k`` folds in the block-mean
+    normalization of the pooled ``ktb`` scores.  Selection is ranking-only
+    (Energon), so this is the ONLY point where the int8 path returns to
+    float — the top-k that follows sees float32 scores.
+    """
+    s = s_int.astype(jnp.float32) * scale
+    return s / block_k if block_k != 1 else s
+
+
 def block_mask_from_indices(idx: jax.Array, valid: jax.Array,
                             n_kb: int) -> jax.Array:
     """Dense (B, nQb, nKb) boolean block mask (reference/oracle path)."""

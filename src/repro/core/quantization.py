@@ -32,6 +32,47 @@ def fake_quant(x: jax.Array, bits: int, axis: int = -1) -> jax.Array:
     return x + jax.lax.stop_gradient(quantize(x, bits, axis=axis) - x)
 
 
+# --------------------------------------------------------------------------
+# Storage quantization (Energon-style mixed-precision serving).
+#
+# Unlike ``quantize`` above (fake-quant: returns float32 already multiplied
+# back by its scale), these helpers return the NARROW representation plus a
+# float32 per-row scale so caches can be held at 1 byte/element and
+# dequantized only where the math needs full precision (the top-k reduction,
+# or the attend over gathered survivors).  Symmetric, zero-point-free: a
+# zero row keeps scale 0.0 so dequant reproduces exact zeros — byte-
+# deterministic across paged/dense layouts that zero-fill dead rows.
+# --------------------------------------------------------------------------
+
+QUANT_STORE_DTYPES = ("int8", "fp8")
+_QMAX = {"int8": 127.0, "fp8": 448.0}    # fp8 = float8_e4m3fn
+
+
+def quant_store(x: jax.Array, axis: int = -1, dtype: str = "int8"):
+    """Quantize ``x`` for storage: returns ``(q, scale)`` with ``q`` int8 or
+    float8_e4m3fn and ``scale`` float32 with ``axis`` removed."""
+    if dtype not in _QMAX:
+        raise ValueError(f"quant_store dtype {dtype!r} not in "
+                         f"{QUANT_STORE_DTYPES}")
+    x = x.astype(jnp.float32)
+    qmax = _QMAX[dtype]
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = amax / qmax
+    inv = jnp.where(scale == 0, 0.0, 1.0 / jnp.where(scale == 0, 1.0, scale))
+    y = x * inv
+    if dtype == "int8":
+        q = jnp.clip(jnp.round(y), -128, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(jnp.float8_e4m3fn)
+    return q, jnp.squeeze(scale, axis=axis)
+
+
+def dequant(q: jax.Array, scale: jax.Array, axis: int = -1) -> jax.Array:
+    """Invert ``quant_store``: ``scale`` is broadcast back over ``axis``."""
+    return q.astype(jnp.float32) * jnp.expand_dims(
+        scale.astype(jnp.float32), axis)
+
+
 # Energy per MAC relative to an FP32 MAC (45nm, after Tang et al. 2021 /
 # Horowitz), used by benchmarks/fig8_energy.py to reproduce Figure 8.
 ENERGY_PER_MAC_VS_FP32 = {

@@ -1,0 +1,106 @@
+"""ServingConfig — one consolidated knob surface for both serving engines.
+
+``Engine`` and ``ContinuousEngine`` grew overlapping ~17-kwarg
+constructors; this dataclass is the single source of truth for every
+serving knob, validated once at construction.  Both engines accept
+
+    Engine(cfg, params, config=ServingConfig(max_len=4096, paged=True))
+
+and still accept the legacy keyword arguments, which are forwarded into
+the config (``Engine(cfg, params, max_len=4096)`` ==
+``Engine(cfg, params, config=ServingConfig(max_len=4096))`` — bitwise
+identical; the kwargs form is kept for compatibility and new call sites
+should build a ``ServingConfig``).  Engine-only knobs (``loop``,
+``prompt_buckets``) are ignored by ``ContinuousEngine`` and vice versa
+(``slots``, ``seg_len``, ...), so one config object can parameterize a
+whole serving stack.
+
+Mixed-precision serving (Energon, arXiv 2110.09310) lands here as two
+knobs rather than kwargs 18-19:
+
+  select_dtype  "float32" (default) | "int8" — precision of the DSA
+                selection path: the predicted-key caches kt/ktb are
+                stored int8 with per-row scales and the per-step
+                selection matmul runs int8xint8->int32, dequantized only
+                at the top-k reduction.  Selection is ranking-only, so
+                block top-k INDICES are the exactness surface.
+  kv_quant      None (default) | "int8" | "fp8" — storage dtype of the
+                K/V caches with per-(row, head) scales, dequantized on
+                gather in the non-gathered attend paths and the Pallas
+                kernels.  Gathered top-k attention stays full precision.
+
+The defaults leave every engine path bitwise unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.models.attention import (DSA_MODES, KV_QUANT_DTYPES,
+                                    SELECT_DTYPES)
+
+LOOPS = ("scan", "python")
+MOE_PREFILL_MODES = ("capacity", "dense")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    # -- shared (both engines) ---------------------------------------------
+    max_len: int = 2048              # resident cache rows per slot/row
+    long_context: bool = False       # allocate the DSA predicted-key cache
+    dsa_mode: str = "off"            # default DSA execution path
+    cache_dtype: Any = jnp.float32   # K/V cache dtype (fp paths)
+    pad_id: int = 0
+    moe_prefill: str = "capacity"    # "dense" = token-exact MoE prefill
+    mesh: Any = None                 # serving mesh (data-parallel SPMD)
+    shard_rules: Any = None          # logical-axis rules (None = default)
+    select_dtype: str = "float32"    # DSA selection precision (see above)
+    kv_quant: Optional[str] = None   # K/V cache storage quant (see above)
+    # -- Engine (static batch) ---------------------------------------------
+    loop: str = "scan"               # fused scan vs legacy per-token loop
+    prompt_buckets: bool = True
+    step_buckets: bool = True
+    # -- ContinuousEngine ----------------------------------------------------
+    slots: int = 4
+    seg_len: int = 16                # decode steps per fused segment
+    chunked_prefill: Optional[bool] = None   # None = auto by envelope
+    chunk_tokens: int = 64
+    spec: int = 0                    # speculative draft length (0 = off)
+    draft: Any = None                # proposer (None = NGramProposer)
+    spec_rounds: Optional[int] = None
+    max_mode_wait_s: Optional[float] = None
+    paged: bool = False              # page the resident KV cache
+    pool_pages: Optional[int] = None
+
+    def __post_init__(self):
+        for name, val, valid in (("dsa_mode", self.dsa_mode, DSA_MODES),
+                                 ("select_dtype", self.select_dtype,
+                                  SELECT_DTYPES),
+                                 ("kv_quant", self.kv_quant,
+                                  KV_QUANT_DTYPES),
+                                 ("loop", self.loop, LOOPS),
+                                 ("moe_prefill", self.moe_prefill,
+                                  MOE_PREFILL_MODES)):
+            if val not in valid:
+                raise ValueError(
+                    f"ServingConfig.{name}={val!r} is not a valid choice; "
+                    f"valid: {valid}")
+
+
+def resolve_config(config: Optional[ServingConfig], kw: dict
+                   ) -> ServingConfig:
+    """Merge legacy keyword arguments into a ``ServingConfig``.
+
+    ``config=None`` builds a fresh config from the kwargs; an explicit
+    config is overridden field-by-field by any kwargs also passed (the
+    kwargs win, matching what the legacy constructors did).  Unknown
+    kwargs raise TypeError just as the old constructors would.
+    """
+    if config is None:
+        return ServingConfig(**kw)
+    if not isinstance(config, ServingConfig):
+        raise TypeError(f"config must be a ServingConfig, got "
+                        f"{type(config).__name__}")
+    return dataclasses.replace(config, **kw) if kw else config

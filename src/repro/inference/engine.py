@@ -55,6 +55,7 @@ from repro.configs.base import ArchConfig
 from repro.distributed.sharding import (compute_context, make_serving_rules,
                                         replicate_put, shard_put_batch,
                                         shard_put_tree)
+from repro.inference.config import ServingConfig, resolve_config
 from repro.models.attention import RunFlags
 from repro.models.transformer import (cache_specs, decode_step, forward,
                                       init_cache, truncate_cache,
@@ -93,6 +94,16 @@ def can_page(cfg: ArchConfig) -> bool:
     return (cfg.mamba is None and cfg.rwkv is None and cfg.swa_window == 0
             and not cfg.enc_dec and cfg.mla is None
             and cfg.cross_attn_period == 0)
+
+
+def can_quantize(cfg: ArchConfig) -> bool:
+    """Mixed-precision serving (ServingConfig select_dtype/kv_quant)
+    covers the standard GQA attention cache layout — the same envelope as
+    paging: recurrent state (mamba/rwkv) and SWA ring buffers carry no
+    quantized token rows, enc-dec / cross-attn decoders hold encoder
+    caches outside the scheme, and MLA's latent c_kv/k_rope leaves are
+    already the compressed cache."""
+    return can_page(cfg)
 
 
 def can_chunk_prefill(cfg: ArchConfig, dsa_mode: str = "off",
@@ -149,45 +160,58 @@ def _sample(logits, key, greedy: bool, temperature=1.0):
 
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params, *, max_len: int = 2048,
-                 long_context: bool = False, dsa_mode: str = "off",
-                 cache_dtype=jnp.float32, loop: str = "scan",
-                 prompt_buckets: bool = True, step_buckets: bool = True,
-                 pad_id: int = 0, moe_prefill: str = "capacity",
-                 mesh=None, shard_rules=None):
-        assert loop in ("scan", "python"), loop
-        assert moe_prefill in ("capacity", "dense"), moe_prefill
+    def __init__(self, cfg: ArchConfig, params, *,
+                 config: Optional[ServingConfig] = None, **kw):
+        """Legacy keyword arguments (max_len=, dsa_mode=, ...) are
+        accepted and forwarded into the config — bitwise identical to the
+        pre-config constructor; prefer ``config=ServingConfig(...)`` in
+        new call sites."""
+        c = resolve_config(config, kw)      # validates all choice knobs
+        self.config = c
         self.cfg = cfg
+        if (c.select_dtype != "float32" or c.kv_quant) and \
+                not can_quantize(cfg):
+            raise ValueError(
+                f"select_dtype={c.select_dtype!r}/kv_quant={c.kv_quant!r} "
+                f"unsupported for arch {cfg.name!r} (see "
+                f"engine.can_quantize)")
+        if c.select_dtype != "float32" and not c.long_context:
+            raise ValueError("select_dtype quantizes the DSA predicted-key "
+                             "caches — requires long_context=True")
         # mesh-sharded serving (SPMD data parallelism over the batch/slots
         # axis): weights are replicated — every shard computes its rows
         # whole, which is what keeps sharded generation BITWISE equal to
         # unsharded — while caches/carries shard over "data".  mesh=None
         # (the default) leaves every dispatch exactly as before.
-        self.mesh = mesh
+        self.mesh = c.mesh
         self.shard_rules = None
-        if mesh is not None:
-            self.shard_rules = (shard_rules if shard_rules is not None
+        if c.mesh is not None:
+            self.shard_rules = (c.shard_rules if c.shard_rules is not None
                                 else make_serving_rules(
-                                    long_context=long_context))
-            params = replicate_put(params, mesh)
+                                    long_context=c.long_context))
+            params = replicate_put(params, c.mesh)
         self.params = params
-        self.max_len = max_len
-        self.loop = loop
-        self.pad_id = pad_id
-        self.bucket_prompts = prompt_buckets and can_bucket_prompts(cfg)
-        self.bucket_steps = step_buckets
+        self.max_len = c.max_len
+        self.loop = c.loop
+        self.pad_id = c.pad_id
+        self.bucket_prompts = c.prompt_buckets and can_bucket_prompts(cfg)
+        self.bucket_steps = c.step_buckets
         # moe_prefill="dense": route prefill through the decode-dense
         # expert path so prefill/chunk/decode are all token-exact (enables
         # chunked admission + speculation for MoE archs)
-        self.moe_dense = moe_prefill == "dense" and cfg.moe is not None
-        self.prefill_flags = RunFlags(mode="prefill", dsa_mode=dsa_mode,
+        self.moe_dense = c.moe_prefill == "dense" and cfg.moe is not None
+        self.prefill_flags = RunFlags(mode="prefill", dsa_mode=c.dsa_mode,
                                       with_mse=False,
-                                      long_context=long_context,
-                                      moe_dense=self.moe_dense)
-        self.decode_flags = RunFlags(mode="decode", dsa_mode=dsa_mode,
+                                      long_context=c.long_context,
+                                      moe_dense=self.moe_dense,
+                                      select_dtype=c.select_dtype,
+                                      kv_quant=c.kv_quant)
+        self.decode_flags = RunFlags(mode="decode", dsa_mode=c.dsa_mode,
                                      with_mse=False,
-                                     long_context=long_context)
-        self.cache_dtype = cache_dtype
+                                     long_context=c.long_context,
+                                     select_dtype=c.select_dtype,
+                                     kv_quant=c.kv_quant)
+        self.cache_dtype = c.cache_dtype
         self._spec_decoders: Dict[int, "object"] = {}
 
         def _prefill(params, batch, caches, lengths, flags: RunFlags):

@@ -88,18 +88,20 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import is_spec_leaf, shard, shard_put_tree
+from repro.inference.config import ServingConfig, resolve_config
 from repro.inference.engine import Engine, _ro_view, _sample, \
     can_chunk_prefill, can_page, pow2_bucket
 from repro.inference.speculative import NGramProposer, SpeculativeDecoder, \
     can_speculate
-from repro.models.attention import cache_page_size
+from repro.models.attention import DSA_MODES, cache_page_size
 from repro.models.transformer import chunk_step, decode_step, init_cache, \
     unstack_group_caches, unstacked_cache_specs
 
 # cache leaves with a per-token row axis right after the batch axis; their
 # slot row is zero-extended from the prefill bucket to the resident length
 # at insertion (everything beyond the prefill is wiped)
-_SEQ_KEYS = {"k", "v", "kt", "ktb", "c_kv", "k_rope"}
+_SEQ_KEYS = {"k", "v", "kt", "ktb", "c_kv", "k_rope",
+             "k_s", "v_s", "kt_s", "ktb_s"}
 
 
 
@@ -120,6 +122,12 @@ class Request:
     # when the key is left None, so equal declared prefixes always match.
     prefix_len: int = 0
     prefix_key: Optional[str] = None
+
+    def __post_init__(self):
+        if self.dsa_mode is not None and self.dsa_mode not in DSA_MODES:
+            raise ValueError(
+                f"Request.dsa_mode={self.dsa_mode!r} is not a valid DSA "
+                f"mode; valid: {DSA_MODES} (or None for the engine default)")
 
 
 @dataclasses.dataclass
@@ -289,21 +297,20 @@ class PagePool:
 class ContinuousEngine:
     """Resident continuous-batching engine (see module docstring)."""
 
-    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
-                 max_len: int = 2048, seg_len: int = 16,
-                 long_context: bool = False, dsa_mode: str = "off",
-                 cache_dtype=jnp.float32, pad_id: int = 0,
-                 chunked_prefill: Optional[bool] = None,
-                 chunk_tokens: int = 64, spec: int = 0, draft=None,
-                 spec_rounds: Optional[int] = None,
-                 max_mode_wait_s: Optional[float] = None,
-                 moe_prefill: str = "capacity", mesh=None,
-                 shard_rules=None, paged: bool = False,
-                 pool_pages: Optional[int] = None):
+    def __init__(self, cfg: ArchConfig, params, *,
+                 config: Optional[ServingConfig] = None, **kw):
+        """Build from a ``ServingConfig`` (``config=...``) or from the
+        legacy keyword arguments (``slots=``, ``max_len=``, ...), which are
+        forwarded into the config field-by-field — bitwise-identical
+        behavior either way.  New call sites should pass a config; the
+        kwargs form is kept for compatibility (deprecated, not removed)."""
+        c = resolve_config(config, kw)
+        self.config = c
         self.cfg = cfg
-        self.slots = slots
-        self.max_len = max_len
-        self.seg_len = seg_len
+        self.slots = slots = c.slots
+        self.max_len = max_len = c.max_len
+        self.seg_len = seg_len = c.seg_len
+        dsa_mode, long_context, paged = c.dsa_mode, c.long_context, c.paged
         # mesh-sharded resident serving: the (slots, max_len) cache and
         # every per-slot carry shard over the mesh's "data" axis (weights
         # replicated), so segments/chunks/verifies run as ONE SPMD program
@@ -311,14 +318,10 @@ class ContinuousEngine:
         # because each slot's row never leaves its shard (pinned by
         # tests/test_multidevice.py).  Slots not divisible by the data
         # axis simply resolve to replicated (graceful, not an error).
-        self.mesh = mesh
+        self.mesh = c.mesh
         # prefill machinery + flags are shared with the static engine so the
         # scheduler is token-exact against Engine.generate per request
-        self.engine = Engine(cfg, params, max_len=max_len,
-                             long_context=long_context, dsa_mode=dsa_mode,
-                             cache_dtype=cache_dtype, loop="scan",
-                             pad_id=pad_id, moe_prefill=moe_prefill,
-                             mesh=mesh, shard_rules=shard_rules)
+        self.engine = Engine(cfg, params, config=c, loop="scan")
         # chunked admission is the default wherever it is token-exact; the
         # legacy whole-prompt blocking prefill stays for ssm/swa/enc-dec
         # (where bucketing already auto-disables) and vision archs; MoE
@@ -326,8 +329,8 @@ class ContinuousEngine:
         # through the decode-dense expert path
         chunk_ok = self.engine.bucket_prompts and can_chunk_prefill(
             cfg, dsa_mode, moe_dense=self.engine.moe_dense)
-        self.chunked = chunk_ok if chunked_prefill is None else (
-            chunked_prefill and chunk_ok)
+        self.chunked = chunk_ok if c.chunked_prefill is None else (
+            c.chunked_prefill and chunk_ok)
         # PAGED resident cache (the perf tentpole): per-slot dense rows are
         # replaced by a block-table indirection over one shared physical
         # page pool (page size = the DSA block_k, so logical selection
@@ -355,7 +358,7 @@ class ContinuousEngine:
             # (parity with the dense layout) + the permanent zero page;
             # smaller pools trade capacity for memory and rely on
             # admission accounting to refuse what they can't back
-            self.pool_pages = (pool_pages if pool_pages is not None
+            self.pool_pages = (c.pool_pages if c.pool_pages is not None
                                else slots * self._n_kb + 1)
         else:
             self.pool_pages = 0
@@ -363,21 +366,21 @@ class ContinuousEngine:
         # the speculation envelope, mirroring chunked admission; the paged
         # cache keeps verify on the dense staging path only, so spec and
         # paged are mutually exclusive for now
-        self.spec = spec if (spec and not paged
-                             and can_speculate(cfg, dsa_mode, spec)
-                             ) else 0
-        self.draft = draft if draft is not None else (
+        self.spec = c.spec if (c.spec and not paged
+                               and can_speculate(cfg, dsa_mode, c.spec)
+                               ) else 0
+        self.draft = c.draft if c.draft is not None else (
             NGramProposer() if self.spec else None)
         # rounds per speculative segment: sized so a fully-accepted spec
         # segment emits about one plain segment's worth of tokens
-        self.spec_rounds = (spec_rounds if spec_rounds is not None
+        self.spec_rounds = (c.spec_rounds if c.spec_rounds is not None
                             else max(1, seg_len // (self.spec + 1))
                             ) if self.spec else 0
         self._spec = SpeculativeDecoder(cfg, self.spec) if self.spec else None
         # mode-affine starvation aging: a queued request whose dsa_mode
         # can't join the current segments forces a drain/mode-switch once
         # it has waited this long (None = wait for a natural idle drain)
-        self.max_mode_wait_s = max_mode_wait_s
+        self.max_mode_wait_s = c.max_mode_wait_s
         # chunk width: pow2, and block-aligned so chunk widths/starts stay
         # block_q/block_k multiples on the DSA paths (a chunk wider than a
         # small prompt bucket is fine: the overhang rows drop out of
@@ -386,7 +389,7 @@ class ContinuousEngine:
         if cfg.dsa.enabled:
             self._chunk_floor = max(self._chunk_floor, cfg.dsa.block_q,
                                     cfg.dsa.block_k)
-        self.chunk_tokens = pow2_bucket(chunk_tokens, self._chunk_floor)
+        self.chunk_tokens = pow2_bucket(c.chunk_tokens, self._chunk_floor)
 
         # logical axes of the unstacked cache leaves by NAME, recorded
         # from the real spec tree at reset() (single source of truth:
@@ -482,13 +485,13 @@ class ContinuousEngine:
                 if name == "page_tbl":
                     return _pin_cache_leaf(name, res.at[slot].set(tbl_row))
                 leaf = pre_by[jax.tree_util.keystr(path)][row]
-                if name in ("k", "v", "kt"):
+                if name in ("k", "v", "kt", "k_s", "v_s", "kt_s"):
                     r = jnp.arange(leaf.shape[0])
                     pg = tbl_row[r // bkp]
                     flat = jnp.where(pg > 0, pg * bkp + r % bkp, nrows_pool)
                     return _pin_cache_leaf(name, res.at[flat].set(
                         leaf.astype(res.dtype), mode="drop"))
-                if name == "ktb":
+                if name in ("ktb", "ktb_s"):
                     pgs = tbl_row[:leaf.shape[0]]
                     tgt = jnp.where(pgs > 0, pgs, self.pool_pages)
                     return _pin_cache_leaf(name, res.at[tgt].set(
@@ -507,10 +510,12 @@ class ContinuousEngine:
 
             def one(path, res):
                 name = _leaf_name(path)
-                if name in ("k", "v", "kt"):
-                    return _pin_cache_leaf(name, res.at[rows].set(0.0))
-                if name == "ktb":
-                    return _pin_cache_leaf(name, res.at[ids].set(0.0))
+                if name in ("k", "v", "kt", "k_s", "v_s", "kt_s"):
+                    return _pin_cache_leaf(name, res.at[rows].set(
+                        jnp.zeros((), res.dtype)))
+                if name in ("ktb", "ktb_s"):
+                    return _pin_cache_leaf(name, res.at[ids].set(
+                        jnp.zeros((), res.dtype)))
                 return res
             return jax.tree_util.tree_map_with_path(one, resident)
 
@@ -525,12 +530,13 @@ class ContinuousEngine:
 
             def one(path, st):
                 name = _leaf_name(path)
-                if name not in ("k", "v", "kt", "ktb", "pos"):
+                if name not in ("k", "v", "kt", "ktb", "pos",
+                                "k_s", "v_s", "kt_s", "ktb_s"):
                     return st
                 if name == "pos":
                     return jnp.full_like(st, r_rows)
                 src = res_by[jax.tree_util.keystr(path)]
-                if name == "ktb":
+                if name in ("ktb", "ktb_s"):
                     return st.at[:, :pages.shape[0]].set(
                         src[pages][None].astype(st.dtype))
                 rows = (pages[:, None] * bkp
@@ -639,7 +645,7 @@ class ContinuousEngine:
         if req.temperature <= 0.0:
             raise ValueError(f"request {req.rid}: temperature must be > 0")
         if req.dsa_mode is not None:
-            allowed = ({"off", "faithful", "block", "kernel"}
+            allowed = (set(DSA_MODES)
                        if self.engine.decode_flags.long_context
                        else {self.engine.decode_flags.dsa_mode})
             if req.dsa_mode not in allowed:

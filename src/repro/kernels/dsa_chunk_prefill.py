@@ -47,7 +47,7 @@ NEG = -1e30
 
 def _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
             acc_ref, m_ref, l_ref, *, block_q: int, block_k: int, nb: int,
-            scale: float):
+            scale: float, ks_ref=None, vs_ref=None):
     b, qb, j = pl.program_id(0), pl.program_id(2), pl.program_id(3)
 
     @pl.when(j == 0)
@@ -62,6 +62,10 @@ def _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
 
     q = q_ref[0, 0].astype(jnp.float32) * scale            # (Bq, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    if ks_ref is not None:
+        # dequant-on-gather: int8/fp8 cache rows land in VMEM narrow and
+        # return to f32 against their per-row scales only once streamed
+        k = k * ks_ref[0, :, 0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (Bq, Bk)
     q_pos = (qoff_ref[b] + qb * block_q
@@ -79,6 +83,8 @@ def _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
     p = jnp.where(mask, jnp.exp(s - m_new), 0.0)           # (Bq, Bk)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
     v = v_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    if vs_ref is not None:
+        v = v * vs_ref[0, :, 0][:, None]
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_ref[...] = m_new
@@ -87,6 +93,14 @@ def _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
     def _fini():
         denom = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def _quant_kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref,
+                  ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, nb: int, scale: float):
+    _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, block_q=block_q, block_k=block_k,
+            nb=nb, scale=scale, ks_ref=ks_ref, vs_ref=vs_ref)
 
 
 def _paged_kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref, q_ref,
@@ -100,17 +114,28 @@ def _paged_kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref, q_ref,
             nb=nb, scale=scale)
 
 
+def _paged_quant_kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref, q_ref,
+                        k_ref, v_ref, ks_ref, vs_ref, o_ref, acc_ref, m_ref,
+                        l_ref, *, block_q: int, block_k: int, nb: int,
+                        scale: float):
+    _kernel(idx_ref, ok_ref, qoff_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, block_q=block_q, block_k=block_k,
+            nb=nb, scale=scale, ks_ref=ks_ref, vs_ref=vs_ref)
+
+
 def dsa_chunk_paged_gather_attention(q, k_pool, v_pool, idx, pidx, ok,
                                      q_off, kv_len, *, block_q: int = 128,
                                      block_k: int = 128,
+                                     k_scale=None, v_scale=None,
                                      interpret: bool = False) -> jax.Array:
     """Paged twin of ``dsa_chunk_gather_attention``: the cache is one FLAT
     physical page pool (P*block_k, Hkv, hd) shared by all slots, and the
     selection arrives as DUAL scalar-prefetched streams — idx
     (B, nQb, nb) the LOGICAL block indices (position masking, unchanged
     kernel body) and pidx the same selection translated to PHYSICAL pages
-    through each slot's page table (HBM->VMEM gather steering).  Returns
-    (B,Hq,C,hd)."""
+    through each slot's page table (HBM->VMEM gather steering).
+    k_scale/v_scale: optional (P*block_k, Hkv) per-row scales of an
+    int8/fp8 pool (dequant-on-gather).  Returns (B,Hq,C,hd)."""
     b, hq, c, hd = q.shape
     hkv = k_pool.shape[1]
     g = hq // hkv
@@ -130,16 +155,25 @@ def dsa_chunk_paged_gather_attention(q, k_pool, v_pool, idx, pidx, ok,
     def kmap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref):
         return (0, pidx_ref[bi, qi, ji], hi // g, 0)
 
-    kern = functools.partial(_paged_kernel, block_q=block_q,
-                             block_k=block_k, nb=nb, scale=scale)
+    def smap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref, pidx_ref):
+        return (0, pidx_ref[bi, qi, ji], hi // g)
+
+    quant = k_scale is not None
+    kern = functools.partial(
+        _paged_quant_kernel if quant else _paged_kernel,
+        block_q=block_q, block_k=block_k, nb=nb, scale=scale)
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, hd), qmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+    ]
+    if quant:
+        in_specs += [pl.BlockSpec((1, block_k, 1), smap),
+                     pl.BlockSpec((1, block_k, 1), smap)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, hd), qmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, block_q, hd), qmap),
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), jnp.float32),
@@ -152,16 +186,23 @@ def dsa_chunk_paged_gather_attention(q, k_pool, v_pool, idx, pidx, ok,
         out_shape=jax.ShapeDtypeStruct((b, hq, c, hd), q.dtype),
         interpret=interpret,
     )
-    return fn(idx.astype(jnp.int32), ok.astype(jnp.int32),
-              q_off.astype(jnp.int32), kv_len.astype(jnp.int32),
-              pidx.astype(jnp.int32), q, kp, vp)
+    args = (idx.astype(jnp.int32), ok.astype(jnp.int32),
+            q_off.astype(jnp.int32), kv_len.astype(jnp.int32),
+            pidx.astype(jnp.int32), q, kp, vp)
+    if quant:
+        args += (k_scale.astype(jnp.float32)[None],
+                 v_scale.astype(jnp.float32)[None])
+    return fn(*args)
 
 
 def dsa_chunk_gather_attention(q, k_cache, v_cache, idx, ok, q_off, kv_len,
                                *, block_q: int = 128, block_k: int = 128,
+                               k_scale=None, v_scale=None,
                                interpret: bool = False) -> jax.Array:
     """q: (B,Hq,C,hd); k/v cache: (B,S,Hkv,hd); idx/ok: (B,C//block_q,nb);
-    q_off/kv_len: (B,).  Returns (B,Hq,C,hd)."""
+    q_off/kv_len: (B,).  k_scale/v_scale: optional (B,S,Hkv) per-row
+    scales of an int8/fp8 cache (dequant-on-gather).  Returns
+    (B,Hq,C,hd)."""
     b, hq, c, hd = q.shape
     s_len, hkv = k_cache.shape[1], k_cache.shape[2]
     g = hq // hkv
@@ -174,6 +215,9 @@ def dsa_chunk_gather_attention(q, k_cache, v_cache, idx, ok, q_off, kv_len,
     if pad:
         k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
     grid = (b, hq, n_qb, nb)
 
     def qmap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref):
@@ -182,16 +226,25 @@ def dsa_chunk_gather_attention(q, k_cache, v_cache, idx, ok, q_off, kv_len,
     def kmap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref):
         return (bi, idx_ref[bi, qi, ji], hi // g, 0)
 
-    kern = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+    def smap(bi, hi, qi, ji, idx_ref, ok_ref, qoff_ref, kvl_ref):
+        return (bi, idx_ref[bi, qi, ji], hi // g)
+
+    quant = k_scale is not None
+    kern = functools.partial(_quant_kernel if quant else _kernel,
+                             block_q=block_q, block_k=block_k,
                              nb=nb, scale=scale)
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, hd), qmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+    ]
+    if quant:
+        in_specs += [pl.BlockSpec((1, block_k, 1), smap),
+                     pl.BlockSpec((1, block_k, 1), smap)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, hd), qmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, block_q, hd), qmap),
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), jnp.float32),
@@ -204,6 +257,9 @@ def dsa_chunk_gather_attention(q, k_cache, v_cache, idx, ok, q_off, kv_len,
         out_shape=jax.ShapeDtypeStruct((b, hq, c, hd), q.dtype),
         interpret=interpret,
     )
-    return fn(idx.astype(jnp.int32), ok.astype(jnp.int32),
-              q_off.astype(jnp.int32), kv_len.astype(jnp.int32),
-              q, k_cache, v_cache)
+    args = (idx.astype(jnp.int32), ok.astype(jnp.int32),
+            q_off.astype(jnp.int32), kv_len.astype(jnp.int32),
+            q, k_cache, v_cache)
+    if quant:
+        args += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+    return fn(*args)

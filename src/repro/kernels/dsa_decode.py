@@ -41,7 +41,8 @@ NEG = -1e30
 
 
 def _kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, block_k: int, nb: int, scale: float):
+            acc_ref, m_ref, l_ref, *, block_k: int, nb: int, scale: float,
+            ks_ref=None, vs_ref=None):
     b, j = pl.program_id(0), pl.program_id(2)
 
     @pl.when(j == 0)
@@ -56,6 +57,10 @@ def _kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
 
     q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    if ks_ref is not None:
+        # dequant-on-gather: int8/fp8 cache rows land in VMEM narrow and
+        # return to f32 against their per-row scales only once streamed
+        k = k * ks_ref[0, :, 0][:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (1, Bk)
     kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
@@ -70,6 +75,8 @@ def _kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
     p = jnp.where(mask, jnp.exp(s - m_new), 0.0)           # (1, Bk)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
     v = v_ref[0, :, 0].astype(jnp.float32)                 # (Bk, hd)
+    if vs_ref is not None:
+        v = v * vs_ref[0, :, 0][:, None]
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_ref[...] = m_new
@@ -78,6 +85,14 @@ def _kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
     def _fini():
         denom = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def _quant_kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, ks_ref,
+                  vs_ref, o_ref, acc_ref, m_ref, l_ref, *, block_k: int,
+                  nb: int, scale: float):
+    _kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, block_k=block_k, nb=nb, scale=scale,
+            ks_ref=ks_ref, vs_ref=vs_ref)
 
 
 def _paged_kernel(idx_ref, ok_ref, kvl_ref, pidx_ref, q_ref, k_ref, v_ref,
@@ -90,16 +105,27 @@ def _paged_kernel(idx_ref, ok_ref, kvl_ref, pidx_ref, q_ref, k_ref, v_ref,
             acc_ref, m_ref, l_ref, block_k=block_k, nb=nb, scale=scale)
 
 
+def _paged_quant_kernel(idx_ref, ok_ref, kvl_ref, pidx_ref, q_ref, k_ref,
+                        v_ref, ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref,
+                        *, block_k: int, nb: int, scale: float):
+    _kernel(idx_ref, ok_ref, kvl_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, block_k=block_k, nb=nb, scale=scale,
+            ks_ref=ks_ref, vs_ref=vs_ref)
+
+
 def dsa_decode_paged_gather_attention(q, k_pool, v_pool, idx, pidx, ok,
                                       kv_len, *, block_k: int = 128,
+                                      k_scale=None, v_scale=None,
                                       interpret: bool = False) -> jax.Array:
     """Paged twin of ``dsa_decode_gather_attention``: the cache is one FLAT
     physical page pool (P*block_k, Hkv, hd) shared by all slots, and the
     selection arrives as DUAL scalar-prefetched streams — idx (B, nb) the
     LOGICAL block indices (position masking, unchanged kernel body) and
     pidx (B, nb) the same selection translated to PHYSICAL pages through
-    the slot's page table (HBM->VMEM gather steering).  Returns
-    (B,Hq,1,hd)."""
+    the slot's page table (HBM->VMEM gather steering).  k_scale/v_scale:
+    optional (P*block_k, Hkv) per-row scales of an int8/fp8 pool, streamed
+    through the same physical-page index maps (dequant-on-gather).
+    Returns (B,Hq,1,hd)."""
     b, hq, _, hd = q.shape
     hkv = k_pool.shape[1]
     g = hq // hkv
@@ -117,16 +143,25 @@ def dsa_decode_paged_gather_attention(q, k_pool, v_pool, idx, pidx, ok,
     def kmap(bi, hi, ji, idx_ref, ok_ref, kvl_ref, pidx_ref):
         return (0, pidx_ref[bi, ji], hi // g, 0)
 
-    kern = functools.partial(_paged_kernel, block_k=block_k, nb=nb,
-                             scale=scale)
+    def smap(bi, hi, ji, idx_ref, ok_ref, kvl_ref, pidx_ref):
+        return (0, pidx_ref[bi, ji], hi // g)
+
+    quant = k_scale is not None
+    kern = functools.partial(
+        _paged_quant_kernel if quant else _paged_kernel,
+        block_k=block_k, nb=nb, scale=scale)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, hd), qmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+    ]
+    if quant:
+        in_specs += [pl.BlockSpec((1, block_k, 1), smap),
+                     pl.BlockSpec((1, block_k, 1), smap)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, hd), qmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, hd), qmap),
         scratch_shapes=[
             pltpu.VMEM((1, hd), jnp.float32),
@@ -139,15 +174,21 @@ def dsa_decode_paged_gather_attention(q, k_pool, v_pool, idx, pidx, ok,
         out_shape=jax.ShapeDtypeStruct((b, hq, 1, hd), q.dtype),
         interpret=interpret,
     )
-    return fn(idx.astype(jnp.int32), ok.astype(jnp.int32),
-              kv_len.astype(jnp.int32), pidx.astype(jnp.int32), q, kp, vp)
+    args = (idx.astype(jnp.int32), ok.astype(jnp.int32),
+            kv_len.astype(jnp.int32), pidx.astype(jnp.int32), q, kp, vp)
+    if quant:
+        args += (k_scale.astype(jnp.float32)[None],
+                 v_scale.astype(jnp.float32)[None])
+    return fn(*args)
 
 
 def dsa_decode_gather_attention(q, k_cache, v_cache, idx, ok, kv_len, *,
                                 block_k: int = 128,
+                                k_scale=None, v_scale=None,
                                 interpret: bool = False) -> jax.Array:
     """q: (B,Hq,1,hd); k/v cache: (B,S,Hkv,hd); idx/ok: (B,nb);
-    kv_len: (B,).  Returns (B,Hq,1,hd)."""
+    kv_len: (B,).  k_scale/v_scale: optional (B,S,Hkv) per-row scales of
+    an int8/fp8 cache (dequant-on-gather).  Returns (B,Hq,1,hd)."""
     b, hq, _, hd = q.shape
     s_len, hkv = k_cache.shape[1], k_cache.shape[2]
     g = hq // hkv
@@ -158,6 +199,9 @@ def dsa_decode_gather_attention(q, k_cache, v_cache, idx, ok, kv_len, *,
     if pad:
         k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
     grid = (b, hq, nb)
 
     def qmap(bi, hi, ji, idx_ref, ok_ref, kvl_ref):
@@ -166,15 +210,24 @@ def dsa_decode_gather_attention(q, k_cache, v_cache, idx, ok, kv_len, *,
     def kmap(bi, hi, ji, idx_ref, ok_ref, kvl_ref):
         return (bi, idx_ref[bi, ji], hi // g, 0)
 
-    kern = functools.partial(_kernel, block_k=block_k, nb=nb, scale=scale)
+    def smap(bi, hi, ji, idx_ref, ok_ref, kvl_ref):
+        return (bi, idx_ref[bi, ji], hi // g)
+
+    quant = k_scale is not None
+    kern = functools.partial(_quant_kernel if quant else _kernel,
+                             block_k=block_k, nb=nb, scale=scale)
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, hd), qmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+        pl.BlockSpec((1, block_k, 1, hd), kmap),
+    ]
+    if quant:
+        in_specs += [pl.BlockSpec((1, block_k, 1), smap),
+                     pl.BlockSpec((1, block_k, 1), smap)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, hd), qmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-            pl.BlockSpec((1, block_k, 1, hd), kmap),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, hd), qmap),
         scratch_shapes=[
             pltpu.VMEM((1, hd), jnp.float32),
@@ -187,5 +240,8 @@ def dsa_decode_gather_attention(q, k_cache, v_cache, idx, ok, kv_len, *,
         out_shape=jax.ShapeDtypeStruct((b, hq, 1, hd), q.dtype),
         interpret=interpret,
     )
-    return fn(idx.astype(jnp.int32), ok.astype(jnp.int32),
-              kv_len.astype(jnp.int32), q, k_cache, v_cache)
+    args = (idx.astype(jnp.int32), ok.astype(jnp.int32),
+            kv_len.astype(jnp.int32), q, k_cache, v_cache)
+    if quant:
+        args += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+    return fn(*args)

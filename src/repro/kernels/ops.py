@@ -47,34 +47,40 @@ def dsa_attention(q, k, v, idx, valid, *, block_q=128, block_k=128,
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def dsa_decode(q, k_cache, v_cache, idx, ok, kv_len, *, block_k=128,
-               interpret=None):
+               k_scale=None, v_scale=None, interpret=None):
     """Fused DSA decode step (decode fast path).
 
     q: (B,1,Hq,hd) [model layout]; k/v cache: (B,S,Hkv,hd); idx/ok: (B,nb)
-    selected cache-block indices; kv_len: (B,).  Returns (B,1,Hq,hd).
+    selected cache-block indices; kv_len: (B,).  k_scale/v_scale: optional
+    (B,S,Hkv) per-row scales of an int8/fp8 cache (dequant-on-gather
+    inside the kernel).  Returns (B,1,Hq,hd).
     The pure-XLA twin is core.attention.dsa_decode_block_attention.
     """
     interpret = _default_interpret() if interpret is None else interpret
     qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,1,hd)
     out = dsa_decode_gather_attention(qt, k_cache, v_cache, idx, ok, kv_len,
-                                      block_k=block_k, interpret=interpret)
+                                      block_k=block_k, k_scale=k_scale,
+                                      v_scale=v_scale, interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def dsa_decode_paged(q, k_pool, v_pool, idx, pidx, ok, kv_len, *,
-                     block_k=128, interpret=None):
+                     block_k=128, k_scale=None, v_scale=None,
+                     interpret=None):
     """Fused DSA decode step over a PAGED cache (flat physical page pool).
 
     q: (B,1,Hq,hd) [model layout]; k/v pool: (P*block_k,Hkv,hd); idx/ok:
     (B,nb) selected LOGICAL cache-block indices; pidx: (B,nb) the same
-    selection as PHYSICAL pages; kv_len: (B,).  Returns (B,1,Hq,hd).
+    selection as PHYSICAL pages; kv_len: (B,).  k_scale/v_scale: optional
+    (P*block_k,Hkv) per-row pool scales.  Returns (B,1,Hq,hd).
     The pure-XLA twin is core.attention.dsa_decode_paged_block_attention.
     """
     interpret = _default_interpret() if interpret is None else interpret
     qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,1,hd)
     out = dsa_decode_paged_gather_attention(qt, k_pool, v_pool, idx, pidx,
                                             ok, kv_len, block_k=block_k,
+                                            k_scale=k_scale, v_scale=v_scale,
                                             interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
@@ -82,20 +88,23 @@ def dsa_decode_paged(q, k_pool, v_pool, idx, pidx, ok, kv_len, *,
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k",
                                              "interpret"))
 def dsa_chunk_prefill(q, k_cache, v_cache, idx, ok, q_off, kv_len, *,
-                      block_q=128, block_k=128, interpret=None):
+                      block_q=128, block_k=128, k_scale=None, v_scale=None,
+                      interpret=None):
     """Fused DSA chunk-prefill step (chunk-append fast path).
 
     q: (B,C,Hq,hd) [model layout]; k/v cache: (B,S,Hkv,hd); idx/ok:
     (B,C//block_q,nb) selected cache-block indices per chunk query block;
-    q_off: (B,) global chunk start positions; kv_len: (B,).  Returns
-    (B,C,Hq,hd).  The pure-XLA twin is
+    q_off: (B,) global chunk start positions; kv_len: (B,).
+    k_scale/v_scale: optional (B,S,Hkv) per-row scales of an int8/fp8
+    cache.  Returns (B,C,Hq,hd).  The pure-XLA twin is
     core.attention.dsa_chunk_block_attention.
     """
     interpret = _default_interpret() if interpret is None else interpret
     qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,C,hd)
     out = dsa_chunk_gather_attention(qt, k_cache, v_cache, idx, ok, q_off,
                                      kv_len, block_q=block_q,
-                                     block_k=block_k, interpret=interpret)
+                                     block_k=block_k, k_scale=k_scale,
+                                     v_scale=v_scale, interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 
@@ -103,18 +112,20 @@ def dsa_chunk_prefill(q, k_cache, v_cache, idx, ok, q_off, kv_len, *,
                                              "interpret"))
 def dsa_chunk_prefill_paged(q, k_pool, v_pool, idx, pidx, ok, q_off,
                             kv_len, *, block_q=128, block_k=128,
-                            interpret=None):
+                            k_scale=None, v_scale=None, interpret=None):
     """Fused DSA chunk-prefill step over a PAGED cache.
 
     q: (B,C,Hq,hd) [model layout]; k/v pool: (P*block_k,Hkv,hd); idx/ok:
     (B,C//block_q,nb) selected LOGICAL cache-block indices; pidx the same
-    selection as PHYSICAL pages; q_off/kv_len: (B,).  Returns (B,C,Hq,hd).
+    selection as PHYSICAL pages; q_off/kv_len: (B,).  k_scale/v_scale:
+    optional (P*block_k,Hkv) per-row pool scales.  Returns (B,C,Hq,hd).
     """
     interpret = _default_interpret() if interpret is None else interpret
     qt = q.transpose(0, 2, 1, 3)                    # (B,Hq,C,hd)
     out = dsa_chunk_paged_gather_attention(qt, k_pool, v_pool, idx, pidx,
                                            ok, q_off, kv_len,
                                            block_q=block_q, block_k=block_k,
+                                           k_scale=k_scale, v_scale=v_scale,
                                            interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 

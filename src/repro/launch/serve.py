@@ -32,6 +32,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config, reduced
+from repro.inference.config import ServingConfig
 from repro.inference.engine import Engine
 from repro.inference.scheduler import (ContinuousEngine, summarize,
                                        synthetic_workload)
@@ -40,14 +41,21 @@ from repro.launch.mesh import make_serving_mesh
 from repro.models.transformer import init_model
 
 
-def _serve_continuous(cfg, args, params, max_len, dsa_on, mesh):
-    eng = ContinuousEngine(
-        cfg, params, slots=args.slots or args.batch, max_len=max_len,
-        seg_len=args.seg_len, long_context=dsa_on,
+def _serving_config(cfg, args, max_len, dsa_on, mesh) -> ServingConfig:
+    """One ServingConfig for both engines, straight from the CLI flags."""
+    return ServingConfig(
+        max_len=max_len, long_context=dsa_on,
         dsa_mode=args.dsa_mode if dsa_on else "off",
-        spec=args.spec, moe_prefill=args.moe_prefill,
-        max_mode_wait_s=args.max_mode_wait, mesh=mesh,
+        moe_prefill=args.moe_prefill, mesh=mesh, loop=args.loop,
+        select_dtype=args.select_dtype if dsa_on else "float32",
+        kv_quant=args.kv_quant,
+        slots=args.slots or args.batch, seg_len=args.seg_len,
+        spec=args.spec, max_mode_wait_s=args.max_mode_wait,
         paged=args.paged, pool_pages=args.pool_pages or None)
+
+
+def _serve_continuous(cfg, args, params, config):
+    eng = ContinuousEngine(cfg, params, config=config)
     if args.spec and not eng.spec:
         print(f"note: spec={args.spec} outside the speculation envelope "
               f"for {cfg.name}; using plain segments")
@@ -112,6 +120,15 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="physical pages in the paged pool (0 = enough "
                          "for every slot at max_len)")
+    ap.add_argument("--select-dtype", default="float32",
+                    choices=["float32", "int8"],
+                    help="DSA selection precision (with --dsa): int8 stores "
+                         "the predicted-key caches quantized with per-row "
+                         "scales and runs the selection matmul int8xint8")
+    ap.add_argument("--kv-quant", default=None, choices=["int8", "fp8"],
+                    help="quantized K/V cache storage dtype with per-row "
+                         "scales, dequantized on gather (default: off; "
+                         "gathered top-k attention stays full precision)")
     ap.add_argument("--max-mode-wait", type=float, default=None,
                     help="seconds a queued other-dsa_mode request may "
                          "wait before forcing a drain/mode-switch "
@@ -138,12 +155,10 @@ def main(argv=None):
     if mesh is not None:
         print(f"serving mesh: {dict(mesh.shape)} over "
               f"{len(mesh.devices.flat)} devices")
+    config = _serving_config(cfg, args, max_len, dsa_on, mesh)
     if args.continuous:
-        return _serve_continuous(cfg, args, params, max_len, dsa_on, mesh)
-    eng = Engine(cfg, params, max_len=max_len,
-                 long_context=dsa_on,
-                 dsa_mode=args.dsa_mode if dsa_on else "off",
-                 loop=args.loop, moe_prefill=args.moe_prefill, mesh=mesh)
+        return _serve_continuous(cfg, args, params, config)
+    eng = Engine(cfg, params, config=config)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(1, cfg.vocab - 4,
                            size=(args.batch, args.prompt_len)).astype(np.int32)

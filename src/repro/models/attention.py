@@ -36,7 +36,7 @@ each cache slot is written once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,7 @@ from repro.configs.base import ArchConfig
 from repro.core import attention as A
 from repro.core import masks as M
 from repro.core import prediction as PRED
+from repro.core import quantization as Q
 from repro.distributed.sharding import shard
 from repro.models.common import dense_init, rms_norm, rope
 
@@ -52,6 +53,19 @@ from repro.models.common import dense_init, rms_norm, rope
 # Trailing tokens always attended at decode (keeps softmax support and the
 # local neighbourhood regardless of prediction quality; DESIGN.md §4).
 DECODE_LOCAL = 64
+
+# The canonical DSA execution modes.  Engines, the scheduler, and Request
+# all validate against THIS set (an unknown string used to fall through to
+# silent dense behavior).
+DSA_MODES = ("off", "faithful", "block", "kernel")
+
+# Mixed-precision serving knobs (Energon, arXiv 2110.09310): the narrow
+# dtypes the SELECTION caches (kt/ktb) and the resident KV cache may be
+# stored in.  Selection is ranking-only so block top-k INDICES are the
+# exactness surface; gathered top-k attention always runs full precision.
+SELECT_DTYPES = ("float32", "int8")
+KV_QUANT_DTYPES = (None, "int8", "fp8")
+_KV_QUANT_JNP = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
 
 # Page granularity of the PAGED resident cache when the arch has no DSA
 # decode cache (with one, the page size is cfg.dsa.block_k so pages line up
@@ -87,10 +101,32 @@ class RunFlags:
     # path so whole-prompt prefill and chunk steps are token-exact
     # (Engine(moe_prefill="dense"))
     moe_dense: bool = False
+    # mixed-precision serving (Energon): "int8" stores the predicted-key
+    # score caches kt/ktb as int8 with per-row scales and runs the per-step
+    # selection matmul in int8, dequantizing only at the top-k reduction
+    select_dtype: str = "float32"
+    # int8/fp8 KV-cache storage with dequant-on-gather; None = full precision
+    kv_quant: Optional[str] = None
 
 
 def dsa_active(cfg: ArchConfig, flags: RunFlags) -> bool:
     return cfg.dsa.enabled and flags.dsa_mode != "off"
+
+
+def _int8_select_scores(q_t, key_q, key_s, *, block_k: int = 1):
+    """Predicted-score matmul against an int8-stored key cache.
+
+    Quantizes the predicted queries per row, accumulates int8 x int8 in
+    int32, and dequantizes only at the top-k reduction (the Energon rule:
+    selection is ranking-only, so this is the whole low-precision path).
+    q_t (B, R, kp) float; key_q (B, N, kp) int8 with per-row scales key_s
+    (B, N) -> (B, R, N) float32 scores (divided by block_k for pooled
+    block caches)."""
+    qq, qs = Q.quant_store(q_t, axis=-1)
+    s_int = jnp.einsum("brk,bnk->brn", qq, key_q,
+                       preferred_element_type=jnp.int32)
+    return M.dequant_topk_scores(
+        s_int, qs[..., None] * key_s[:, None, :], block_k=block_k)
 
 
 # ---------------------------------------------------------------------------
@@ -282,6 +318,14 @@ def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
         # paths would otherwise jnp.pad the ENTIRE cache every step (an
         # O(S) copy inside the generation scan)
         s = -(-s // cfg.dsa.block_k) * cfg.dsa.block_k
+    # mixed-precision layout: narrow storage dtypes + float32 per-row scale
+    # leaves ("k_s"/"v_s"/"kt_s"/"ktb_s").  Scale-leaf PRESENCE is what the
+    # apply paths branch on — structure is static under jit, so every
+    # (flags, cache) pair keeps one compiled program and the compile set
+    # stays fixed.
+    kv_dt = _KV_QUANT_JNP[flags.kv_quant] if flags.kv_quant else dtype
+    sel_q = flags.select_dtype == "int8"
+    kt_dt = jnp.int8 if sel_q else dtype
     if pages is not None:
         # PAGED resident layout: one FLAT physical pool of ``pages`` pages
         # of ``bk`` rows each (page p owns pool rows [p*bk, (p+1)*bk)),
@@ -296,32 +340,45 @@ def init_cache_attention(cfg: ArchConfig, batch: int, max_len: int,
         bk = cfg.dsa.block_k if dsa_decode else PAGE_SIZE
         assert s % bk == 0, (s, bk)
         c = {
-            "k": jnp.zeros((pages * bk, cfg.n_kv_heads, hd), dtype),
-            "v": jnp.zeros((pages * bk, cfg.n_kv_heads, hd), dtype),
+            "k": jnp.zeros((pages * bk, cfg.n_kv_heads, hd), kv_dt),
+            "v": jnp.zeros((pages * bk, cfg.n_kv_heads, hd), kv_dt),
             "pos": jnp.zeros((batch,), jnp.int32),
             "page_tbl": jnp.zeros((batch, s // bk), jnp.int32),
         }
+        if flags.kv_quant:
+            c["k_s"] = jnp.zeros((pages * bk, cfg.n_kv_heads), jnp.float32)
+            c["v_s"] = jnp.zeros((pages * bk, cfg.n_kv_heads), jnp.float32)
         if dsa_decode:
             kp = PRED.predictor_k(cfg.d_model, cfg.dsa.sigma)
-            c["kt"] = jnp.zeros((pages * bk, kp), dtype)
+            c["kt"] = jnp.zeros((pages * bk, kp), kt_dt)
             # one ktb row per PAGE (page size == block_k): the block-pooled
             # score cache pages with the rows it summarizes
-            c["ktb"] = jnp.zeros((pages, kp), dtype)
+            c["ktb"] = jnp.zeros((pages, kp), kt_dt)
+            if sel_q:
+                c["kt_s"] = jnp.zeros((pages * bk,), jnp.float32)
+                c["ktb_s"] = jnp.zeros((pages,), jnp.float32)
         return c
     c = {
-        "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
-        "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), kv_dt),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), kv_dt),
         # per-slot cache depth: (B,) so continuous batching can decode rows
         # at independent positions (slot-ragged batches)
         "pos": jnp.zeros((batch,), jnp.int32),
     }
+    if flags.kv_quant:
+        c["k_s"] = jnp.zeros((batch, s, cfg.n_kv_heads), jnp.float32)
+        c["v_s"] = jnp.zeros((batch, s, cfg.n_kv_heads), jnp.float32)
     if dsa_decode:
         kp = PRED.predictor_k(cfg.d_model, cfg.dsa.sigma)
-        c["kt"] = jnp.zeros((batch, s, kp), dtype)
+        c["kt"] = jnp.zeros((batch, s, kp), kt_dt)
         # block-pooled twin: running sums of kt per block_k-sized cache
         # block; per-step selection reads these S/block_k scores instead of
         # S token scores (decode fast path)
-        c["ktb"] = jnp.zeros((batch, s // cfg.dsa.block_k, kp), dtype)
+        c["ktb"] = jnp.zeros((batch, s // cfg.dsa.block_k, kp), kt_dt)
+        if sel_q:
+            c["kt_s"] = jnp.zeros((batch, s), jnp.float32)
+            c["ktb_s"] = jnp.zeros((batch, s // cfg.dsa.block_k),
+                                   jnp.float32)
     return c
 
 
@@ -330,17 +387,29 @@ def cache_specs_attention(cache) -> Dict:
         out = {"k": ("pages", "kv_heads", "qkv"),
                "v": ("pages", "kv_heads", "qkv"),
                "pos": ("batch",), "page_tbl": ("batch", None)}
+        if "k_s" in cache:
+            out["k_s"] = ("pages", "kv_heads")
+            out["v_s"] = ("pages", "kv_heads")
         if "kt" in cache:
             out["kt"] = ("pages", "pred_k")
             out["ktb"] = ("pages", "pred_k")
+        if "kt_s" in cache:
+            out["kt_s"] = ("pages",)
+            out["ktb_s"] = ("pages",)
         return out
     out = {"k": ("batch", "cache_seq", "kv_heads", "qkv"),
            "v": ("batch", "cache_seq", "kv_heads", "qkv"),
            "pos": ("batch",)}
+    if "k_s" in cache:
+        out["k_s"] = ("batch", "cache_seq", "kv_heads")
+        out["v_s"] = ("batch", "cache_seq", "kv_heads")
     if "kt" in cache:
         out["kt"] = ("batch", "cache_seq", "pred_k")
     if "ktb" in cache:
         out["ktb"] = ("batch", "blocks", "pred_k")
+    if "kt_s" in cache:
+        out["kt_s"] = ("batch", "cache_seq")
+        out["ktb_s"] = ("batch", "blocks")
     return out
 
 
@@ -359,21 +428,49 @@ def _fill_cache(cfg, flags, cache, k, v, params, x):
 
     kc, vc = ring(k), ring(v)
     new = dict(cache)
-    new["k"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"].astype(kc.dtype), kc.astype(cache["k"].dtype), 0, axis=1)
-    new["v"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"].astype(vc.dtype), vc.astype(cache["v"].dtype), 0, axis=1)
+    if "k_s" in cache:
+        # quantized KV storage: narrow rows + per-(token, head) scales
+        kq, ks = Q.quant_store(kc, axis=-1, dtype=flags.kv_quant)
+        vq, vs = Q.quant_store(vc, axis=-1, dtype=flags.kv_quant)
+        new["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kq, 0, axis=1)
+        new["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vq, 0, axis=1)
+        new["k_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_s"], ks, 0, axis=1)
+        new["v_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_s"], vs, 0, axis=1)
+    else:
+        new["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"].astype(kc.dtype), kc.astype(cache["k"].dtype), 0,
+            axis=1)
+        new["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"].astype(vc.dtype), vc.astype(cache["v"].dtype), 0,
+            axis=1)
     new["pos"] = jnp.full((k.shape[0],), t, jnp.int32)
     if "kt" in cache:
         _, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
+        bkd = cfg.dsa.block_k
+        n_kb = cache["ktb"].shape[1]
+        pad = n_kb * bkd - s
+        if "kt_s" in cache:
+            ktq, kts = Q.quant_store(ring(k_t), axis=-1)
+            new["kt"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["kt"], ktq, 0, axis=1)
+            new["kt_s"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["kt_s"], kts, 0, axis=1)
+            # block sums' source of truth is the DEQUANTIZED kt rows, so
+            # chunked fills and truncate rebuilds reproduce them exactly
+            ktd = Q.dequant(new["kt"], new["kt_s"])
+            ktp = (jnp.pad(ktd, ((0, 0), (0, pad), (0, 0))) if pad else ktd)
+            sums = ktp.reshape(ktp.shape[0], n_kb, bkd, -1).sum(axis=2)
+            new["ktb"], new["ktb_s"] = Q.quant_store(sums, axis=-1)
+            return new
         new["kt"] = jax.lax.dynamic_update_slice_in_dim(
             cache["kt"].astype(k_t.dtype), ring(k_t).astype(cache["kt"].dtype),
             0, axis=1)
         # rebuild the block-pooled score cache from the freshly filled kt
         # (unwritten tail slots are zero, so plain block sums are exact)
-        bkd = cfg.dsa.block_k
-        n_kb = cache["ktb"].shape[1]
-        pad = n_kb * bkd - s
         ktp = jnp.pad(new["kt"], ((0, 0), (0, pad), (0, 0))) if pad else new["kt"]
         new["ktb"] = ktp.reshape(ktp.shape[0], n_kb, bkd, -1).sum(axis=2)
     return new
@@ -383,6 +480,15 @@ def _slot_pos(cache, b):
     """Per-slot cache depth (B,); tolerates legacy scalar ``pos`` caches."""
     pos = cache["pos"]
     return jnp.full((b,), pos, jnp.int32) if pos.ndim == 0 else pos
+
+
+def _kv_views(cache, kc, vc):
+    """Full-precision views of (possibly quantized) k/v caches for the
+    NON-gathered attend paths; gathered paths dequant after their gathers
+    (core.attention twins / the Pallas kernels) instead."""
+    if "k_s" in cache:
+        return Q.dequant(kc, cache["k_s"]), Q.dequant(vc, cache["v_s"])
+    return kc, vc
 
 
 def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
@@ -408,14 +514,23 @@ def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     slot = jnp.where(jnp.asarray(s) > pos, pos, pos % s)   # ring for SWA
     wslot = slot if active is None else jnp.where(active, slot, s)
     rows = jnp.arange(b)
-    kc = cache["k"].at[rows, wslot].set(k[:, 0].astype(cache["k"].dtype),
-                                        mode="drop")
-    vc = cache["v"].at[rows, wslot].set(v[:, 0].astype(cache["v"].dtype),
-                                        mode="drop")
+    if "k_s" in cache:
+        k1, ks = Q.quant_store(k[:, 0], axis=-1, dtype=flags.kv_quant)
+        v1, vs = Q.quant_store(v[:, 0], axis=-1, dtype=flags.kv_quant)
+    else:
+        k1, v1 = k[:, 0].astype(cache["k"].dtype), v[:, 0].astype(
+            cache["v"].dtype)
+    kc = cache["k"].at[rows, wslot].set(k1, mode="drop")
+    vc = cache["v"].at[rows, wslot].set(v1, mode="drop")
     kc = shard(kc, "batch", "cache_seq", "kv_heads", "qkv")
     vc = shard(vc, "batch", "cache_seq", "kv_heads", "qkv")
     new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
     new = dict(cache, k=kc, v=vc, pos=new_pos)
+    if "k_s" in cache:
+        new["k_s"] = shard(cache["k_s"].at[rows, wslot].set(ks, mode="drop"),
+                           "batch", "cache_seq", "kv_heads")
+        new["v_s"] = shard(cache["v_s"].at[rows, wslot].set(vs, mode="drop"),
+                           "batch", "cache_seq", "kv_heads")
     kv_len = jnp.minimum(pos + 1, s).astype(jnp.int32)
     if active is not None:
         kv_len = jnp.where(active, kv_len, 0)
@@ -423,6 +538,7 @@ def _apply_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         out = _dsa_decode(params, cfg, flags, x, q, kc, vc, new, wslot,
                           kv_len)
     else:
+        kc, vc = _kv_views(new, kc, vc)
         # SWA window semantics: init_cache_attention sizes the ring buffer
         # at s = min(max_len, decode_window, swa_window) slots, so with SWA
         # on (s <= window) the buffer can never hold more than one window
@@ -455,20 +571,35 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
     b, s = kc.shape[0], kc.shape[1]
     rows = jnp.arange(b)
     q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
-    new["kt"] = shard(new["kt"].at[rows, wslot].set(
-        k_t[:, 0].astype(new["kt"].dtype), mode="drop"),
-        "batch", "cache_seq", "pred_k")
+    if "kt_s" in new:
+        ktq, kts = Q.quant_store(k_t[:, 0], axis=-1)
+        new["kt"] = shard(new["kt"].at[rows, wslot].set(ktq, mode="drop"),
+                          "batch", "cache_seq", "pred_k")
+        new["kt_s"] = shard(
+            new["kt_s"].at[rows, wslot].set(kts, mode="drop"),
+            "batch", "cache_seq")
+    else:
+        new["kt"] = shard(new["kt"].at[rows, wslot].set(
+            k_t[:, 0].astype(new["kt"].dtype), mode="drop"),
+            "batch", "cache_seq", "pred_k")
+    k_scale = new.get("k_s")
+    v_scale = new.get("v_s")
     keep = M.keep_count(s, dsa.sparsity)
     if flags.dsa_mode == "off":
         # per-request dsa_mode override on a long-context engine: dense
         # decode over the full cache; kt stays maintained (ktb, like the
         # faithful path, is rebuilt at each admission's prefill)
-        return A.decode_attention(q, kc, vc, kv_len=kv_len)
+        kd, vd = _kv_views(new, kc, vc)
+        return A.decode_attention(q, kd, vd, kv_len=kv_len)
     if flags.dsa_mode == "faithful":
         # paper-faithful token granularity: top-k over all S cached scores
-        s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
-                             new["kt"].astype(jnp.float32))
-        return A.dsa_decode_attention(q, kc, vc, s_tilde, keep=keep,
+        if "kt_s" in new:
+            s_tilde = _int8_select_scores(q_t, new["kt"], new["kt_s"])[:, 0]
+        else:
+            s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
+                                 new["kt"].astype(jnp.float32))
+        kd, vd = _kv_views(new, kc, vc)
+        return A.dsa_decode_attention(q, kd, vd, s_tilde, keep=keep,
                                       kv_len=kv_len, local=DECODE_LOCAL)
     # block granularity (decode fast path): maintain running block sums of
     # kt, score S/block_k blocks, select, then gather whole blocks.  The
@@ -477,20 +608,36 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
     # (frozen rows carry an OOB block index and drop their add).
     bkd = dsa.block_k
     jb = wslot // bkd
-    new["ktb"] = shard(new["ktb"].at[rows, jb].add(
-        k_t[:, 0].astype(new["ktb"].dtype), mode="drop"),
-        "batch", "blocks", "pred_k")
     n_kb = new["ktb"].shape[1]
-    s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
-                       new["ktb"].astype(jnp.float32)) / bkd
+    if "ktb_s" in new:
+        # int8 block sums can't scatter-add across scales: gather the
+        # touched block, dequantize, add the new row, requantize, set
+        jc = jnp.minimum(jb, n_kb - 1)
+        old = Q.dequant(new["ktb"][rows, jc], new["ktb_s"][rows, jc])
+        bq_, bs_ = Q.quant_store(old + k_t[:, 0], axis=-1)
+        new["ktb"] = shard(new["ktb"].at[rows, jb].set(bq_, mode="drop"),
+                           "batch", "blocks", "pred_k")
+        new["ktb_s"] = shard(
+            new["ktb_s"].at[rows, jb].set(bs_, mode="drop"),
+            "batch", "blocks")
+        s_blk = _int8_select_scores(q_t, new["ktb"], new["ktb_s"],
+                                    block_k=bkd)[:, 0]
+    else:
+        new["ktb"] = shard(new["ktb"].at[rows, jb].add(
+            k_t[:, 0].astype(new["ktb"].dtype), mode="drop"),
+            "batch", "blocks", "pred_k")
+        s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
+                           new["ktb"].astype(jnp.float32)) / bkd
     nb_keep = min(n_kb, -(-keep // bkd) + -(-DECODE_LOCAL // bkd) + 1)
     idx, ok = M.decode_block_topk_indices(s_blk, nb_keep, kv_len=kv_len,
                                           block_k=bkd, local=DECODE_LOCAL)
     if flags.dsa_mode == "kernel":
         from repro.kernels.ops import dsa_decode as dsa_decode_kernel
-        return dsa_decode_kernel(q, kc, vc, idx, ok, kv_len, block_k=bkd)
+        return dsa_decode_kernel(q, kc, vc, idx, ok, kv_len, block_k=bkd,
+                                 k_scale=k_scale, v_scale=v_scale)
     return A.dsa_decode_block_attention(q, kc, vc, idx, ok, block_k=bkd,
-                                        kv_len=kv_len)
+                                        kv_len=kv_len, k_scale=k_scale,
+                                        v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -542,14 +689,23 @@ def _apply_paged_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     pg = tbl[rows, jnp.clip(wslot // bk, 0, n_kb - 1)]
     okw = (wslot < s) & (pg > 0)
     flat = jnp.where(okw, pg * bk + wslot % bk, nrows)
-    kc = cache["k"].at[flat].set(k[:, 0].astype(cache["k"].dtype),
-                                 mode="drop")
-    vc = cache["v"].at[flat].set(v[:, 0].astype(cache["v"].dtype),
-                                 mode="drop")
+    if "k_s" in cache:
+        k1, ks = Q.quant_store(k[:, 0], axis=-1, dtype=flags.kv_quant)
+        v1, vs = Q.quant_store(v[:, 0], axis=-1, dtype=flags.kv_quant)
+    else:
+        k1, v1 = k[:, 0].astype(cache["k"].dtype), v[:, 0].astype(
+            cache["v"].dtype)
+    kc = cache["k"].at[flat].set(k1, mode="drop")
+    vc = cache["v"].at[flat].set(v1, mode="drop")
     kc = shard(kc, "pages", "kv_heads", "qkv")
     vc = shard(vc, "pages", "kv_heads", "qkv")
     new_pos = pos + 1 if active is None else pos + active.astype(jnp.int32)
     new = dict(cache, k=kc, v=vc, pos=new_pos)
+    if "k_s" in cache:
+        new["k_s"] = shard(cache["k_s"].at[flat].set(ks, mode="drop"),
+                           "pages", "kv_heads")
+        new["v_s"] = shard(cache["v_s"].at[flat].set(vs, mode="drop"),
+                           "pages", "kv_heads")
     kv_len = jnp.minimum(pos + 1, s).astype(jnp.int32)
     if active is not None:
         kv_len = jnp.where(active, kv_len, 0)
@@ -558,7 +714,12 @@ def _apply_paged_decode(params, cfg: ArchConfig, flags: RunFlags, x, cache,
         out = _dsa_paged_decode(params, cfg, flags, x, q, kc, vc, new,
                                 flat, okw, pg, kv_len, view, bk)
     else:
-        out = A.decode_attention(q, kc[view], vc[view], kv_len=kv_len)
+        if "k_s" in new:
+            kd = Q.dequant(kc[view], new["k_s"][view])
+            vd = Q.dequant(vc[view], new["v_s"][view])
+        else:
+            kd, vd = kc[view], vc[view]
+        out = A.decode_attention(q, kd, vd, kv_len=kv_len)
     out = shard(out, "batch", None, "heads", "qkv")
     out = out.reshape(b, 1, -1) @ params["wo"]
     return out, new, {}
@@ -577,27 +738,62 @@ def _dsa_paged_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc,
     dsa = cfg.dsa
     s = view.shape[1]
     q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
-    ktc = new["kt"].at[flat].set(k_t[:, 0].astype(new["kt"].dtype),
-                                 mode="drop")
-    new["kt"] = shard(ktc, "pages", "pred_k")
+    if "kt_s" in new:
+        ktq, kts = Q.quant_store(k_t[:, 0], axis=-1)
+        ktc = new["kt"].at[flat].set(ktq, mode="drop")
+        kts_c = new["kt_s"].at[flat].set(kts, mode="drop")
+        new["kt"] = shard(ktc, "pages", "pred_k")
+        new["kt_s"] = shard(kts_c, "pages")
+    else:
+        ktc = new["kt"].at[flat].set(k_t[:, 0].astype(new["kt"].dtype),
+                                     mode="drop")
+        new["kt"] = shard(ktc, "pages", "pred_k")
+    k_scale = new.get("k_s")
+    v_scale = new.get("v_s")
+
+    def kv_view():
+        if "k_s" in new:
+            return (Q.dequant(kc[view], new["k_s"][view]),
+                    Q.dequant(vc[view], new["v_s"][view]))
+        return kc[view], vc[view]
+
     keep = M.keep_count(s, dsa.sparsity)
     if flags.dsa_mode == "off":
-        return A.decode_attention(q, kc[view], vc[view], kv_len=kv_len)
+        kd, vd = kv_view()
+        return A.decode_attention(q, kd, vd, kv_len=kv_len)
     if flags.dsa_mode == "faithful":
-        kt_view = ktc[view]
-        s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
-                             kt_view.astype(jnp.float32))
-        return A.dsa_decode_attention(q, kc[view], vc[view], s_tilde,
+        if "kt_s" in new:
+            s_tilde = _int8_select_scores(q_t, ktc[view],
+                                          kts_c[view])[:, 0]
+        else:
+            s_tilde = jnp.einsum("bok,bsk->bs", q_t.astype(jnp.float32),
+                                 ktc[view].astype(jnp.float32))
+        kd, vd = kv_view()
+        return A.dsa_decode_attention(q, kd, vd, s_tilde,
                                       keep=keep, kv_len=kv_len,
                                       local=DECODE_LOCAL)
     npages = new["ktb"].shape[0]
-    ktb = new["ktb"].at[jnp.where(okw, pg, npages)].add(
-        k_t[:, 0].astype(new["ktb"].dtype), mode="drop")
-    new["ktb"] = shard(ktb, "pages", "pred_k")
     tbl = new["page_tbl"]
     n_kb = tbl.shape[1]
-    s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
-                       ktb[tbl].astype(jnp.float32)) / bk
+    if "ktb_s" in new:
+        # per-page int8 block sums: dequant the touched page's row, add,
+        # requant, set (frozen rows gather the zero page and drop the set)
+        src = jnp.where(okw, pg, 0)
+        old = Q.dequant(new["ktb"][src], new["ktb_s"][src])
+        bq_, bs_ = Q.quant_store(old + k_t[:, 0], axis=-1)
+        tgt = jnp.where(okw, pg, npages)
+        ktb = new["ktb"].at[tgt].set(bq_, mode="drop")
+        ktb_s = new["ktb_s"].at[tgt].set(bs_, mode="drop")
+        new["ktb"] = shard(ktb, "pages", "pred_k")
+        new["ktb_s"] = shard(ktb_s, "pages")
+        s_blk = _int8_select_scores(q_t, ktb[tbl], ktb_s[tbl],
+                                    block_k=bk)[:, 0]
+    else:
+        ktb = new["ktb"].at[jnp.where(okw, pg, npages)].add(
+            k_t[:, 0].astype(new["ktb"].dtype), mode="drop")
+        new["ktb"] = shard(ktb, "pages", "pred_k")
+        s_blk = jnp.einsum("bok,bjk->bj", q_t.astype(jnp.float32),
+                           ktb[tbl].astype(jnp.float32)) / bk
     nb_keep = min(n_kb, -(-keep // bk) + -(-DECODE_LOCAL // bk) + 1)
     idx, ok = M.decode_block_topk_indices(s_blk, nb_keep, kv_len=kv_len,
                                           block_k=bk, local=DECODE_LOCAL)
@@ -605,9 +801,12 @@ def _dsa_paged_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc,
     if flags.dsa_mode == "kernel":
         from repro.kernels.ops import dsa_decode_paged as dsa_paged_kernel
         return dsa_paged_kernel(q, kc, vc, idx, pidx, ok, kv_len,
-                                block_k=bk)
+                                block_k=bk, k_scale=k_scale,
+                                v_scale=v_scale)
     return A.dsa_decode_paged_block_attention(q, kc, vc, idx, pidx, ok,
-                                              block_k=bk, kv_len=kv_len)
+                                              block_k=bk, kv_len=kv_len,
+                                              k_scale=k_scale,
+                                              v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -659,27 +858,55 @@ def _apply_chunk(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     wslot = p if active is None else jnp.where(active[:, None], p, s)
     rows = jnp.arange(b)[:, None]
     q = shard(q, "batch", None, "heads", "qkv")
-    kc = cache["k"].at[rows, wslot].set(
-        jnp.where(live[..., None, None], k, 0).astype(cache["k"].dtype),
-        mode="drop")
-    vc = cache["v"].at[rows, wslot].set(
-        jnp.where(live[..., None, None], v, 0).astype(cache["v"].dtype),
-        mode="drop")
+    if "k_s" in cache:
+        # pad rows quantize to (0, scale 0.0): dequant reproduces the exact
+        # zero rows truncate_cache leaves
+        kq, ks = Q.quant_store(jnp.where(live[..., None, None], k, 0),
+                               axis=-1, dtype=flags.kv_quant)
+        vq, vs = Q.quant_store(jnp.where(live[..., None, None], v, 0),
+                               axis=-1, dtype=flags.kv_quant)
+        kc = cache["k"].at[rows, wslot].set(kq, mode="drop")
+        vc = cache["v"].at[rows, wslot].set(vq, mode="drop")
+    else:
+        kc = cache["k"].at[rows, wslot].set(
+            jnp.where(live[..., None, None], k, 0).astype(cache["k"].dtype),
+            mode="drop")
+        vc = cache["v"].at[rows, wslot].set(
+            jnp.where(live[..., None, None], v, 0).astype(cache["v"].dtype),
+            mode="drop")
     kc = shard(kc, "batch", "cache_seq", "kv_heads", "qkv")
     vc = shard(vc, "batch", "cache_seq", "kv_heads", "qkv")
     adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
     new = dict(cache, k=kc, v=vc, pos=pos + adv)
+    if "k_s" in cache:
+        new["k_s"] = shard(
+            cache["k_s"].at[rows, wslot].set(ks, mode="drop"),
+            "batch", "cache_seq", "kv_heads")
+        new["v_s"] = shard(
+            cache["v_s"].at[rows, wslot].set(vs, mode="drop"),
+            "batch", "cache_seq", "kv_heads")
     kv_len = (pos + adv).astype(jnp.int32)
+
+    def sel_kv():
+        if "k_s" in new:
+            return (Q.dequant(kc[:, :sel], new["k_s"][:, :sel]),
+                    Q.dequant(vc[:, :sel], new["v_s"][:, :sel]))
+        return kc[:, :sel], vc[:, :sel]
+
     if "kt" in cache:
-        q_t, kt_sel = _chunk_fill_pred(params, cfg, x, new, wslot, live,
-                                       pos, active)
+        q_t, kt_sel, kt_sel_s = _chunk_fill_pred(params, cfg, x, new,
+                                                 wslot, live, pos, active)
         if dsa_active(cfg, flags):
-            out = _dsa_chunk_attend(cfg, flags, q, kc[:, :sel], vc[:, :sel],
-                                    q_t, kt_sel[:, :sel], p, pos, kv_len)
+            out = _dsa_chunk_attend(
+                cfg, flags, q, kc[:, :sel], vc[:, :sel], q_t,
+                kt_sel[:, :sel], p, pos, kv_len,
+                kt_sel_s=None if kt_sel_s is None else kt_sel_s[:, :sel],
+                k_scale=new["k_s"][:, :sel] if "k_s" in new else None,
+                v_scale=new["v_s"][:, :sel] if "v_s" in new else None)
         else:
-            out = A.chunk_attention(q, kc[:, :sel], vc[:, :sel], p)
+            out = A.chunk_attention(q, *sel_kv(), p)
     else:
-        out = A.chunk_attention(q, kc[:, :sel], vc[:, :sel], p)
+        out = A.chunk_attention(q, *sel_kv(), p)
     out = shard(out, "batch", None, "heads", "qkv")
     out = out.reshape(b, c, -1) @ params["wo"]
     return out, new, {}
@@ -705,26 +932,50 @@ def _chunk_fill_pred(params, cfg: ArchConfig, x, new, wslot, live, pos,
     rows = jnp.arange(b)[:, None]
     q_t, k_t = PRED.predict_qk(params["dsa"], x, None, dsa.quant_bits)
     ktv = jnp.where(live[..., None], k_t, 0)
+    bkd = dsa.block_k
+    assert c % bkd == 0, (c, bkd)
+    n_kb = new["ktb"].shape[1]
+    jb = (pos // bkd)[:, None] + jnp.arange(c // bkd)[None, :]
+    if active is not None:
+        jb = jnp.where(active[:, None], jb, n_kb)
+    if "kt_s" in new:
+        ktq, kts = Q.quant_store(k_t, axis=-1)
+        ktv_q = jnp.where(live[..., None], ktq, 0)
+        ktv_s = jnp.where(live, kts, 0.0)
+        kt_sel = new["kt"].at[rows, wslot].set(ktq, mode="drop")
+        kt_sel_s = new["kt_s"].at[rows, wslot].set(kts, mode="drop")
+        new["kt"] = shard(new["kt"].at[rows, wslot].set(ktv_q, mode="drop"),
+                          "batch", "cache_seq", "pred_k")
+        new["kt_s"] = shard(
+            new["kt_s"].at[rows, wslot].set(ktv_s, mode="drop"),
+            "batch", "cache_seq")
+        # the chunk is block-aligned and the cache never wraps, so every
+        # touched block is freshly covered: the quantized partial sums can
+        # scatter-SET where the float path scatter-adds into zeros
+        part = Q.dequant(ktv_q, ktv_s).reshape(b, c // bkd, bkd, -1).sum(
+            axis=2)
+        pq, ps = Q.quant_store(part, axis=-1)
+        new["ktb"] = shard(new["ktb"].at[rows, jb].set(pq, mode="drop"),
+                           "batch", "blocks", "pred_k")
+        new["ktb_s"] = shard(
+            new["ktb_s"].at[rows, jb].set(ps, mode="drop"),
+            "batch", "blocks")
+        return q_t, kt_sel, kt_sel_s
     kt_sel = new["kt"].at[rows, wslot].set(
         k_t.astype(new["kt"].dtype), mode="drop")
     new["kt"] = shard(new["kt"].at[rows, wslot].set(
         ktv.astype(new["kt"].dtype), mode="drop"),
         "batch", "cache_seq", "pred_k")
-    bkd = dsa.block_k
-    assert c % bkd == 0, (c, bkd)
     part = ktv.reshape(b, c // bkd, bkd, -1).sum(axis=2)
-    n_kb = new["ktb"].shape[1]
-    jb = (pos // bkd)[:, None] + jnp.arange(c // bkd)[None, :]
-    if active is not None:
-        jb = jnp.where(active[:, None], jb, n_kb)
     new["ktb"] = shard(new["ktb"].at[rows, jb].add(
         part.astype(new["ktb"].dtype), mode="drop"),
         "batch", "blocks", "pred_k")
-    return q_t, kt_sel
+    return q_t, kt_sel, None
 
 
 def _dsa_chunk_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
-                      kt_sel, p, pos, kv_len):
+                      kt_sel, p, pos, kv_len, *, kt_sel_s=None,
+                      k_scale=None, v_scale=None):
     """DSA pattern + sparse attention for a chunk — the chunk-resumable
     twin of ``_dsa_train_mask_and_aux`` + the prefill execution paths.
 
@@ -734,23 +985,33 @@ def _dsa_chunk_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
     feeding the XLA gather twin or the fused Pallas chunk kernel.  Scores
     run against ``kt_sel`` (B, S, k) so selection sees exactly the key
     views whole-prompt prefill saw; ``p`` (B, C) are the chunk queries'
-    global positions, ``pos`` (B,) the chunk start.
+    global positions, ``pos`` (B,) the chunk start.  ``kt_sel_s`` /
+    ``k_scale`` / ``v_scale`` carry the per-row scales of int8-stored
+    selection / KV caches (None = full-precision storage).
     """
     dsa = cfg.dsa
     b, c = q.shape[:2]
     s = kc.shape[1]
     if flags.dsa_mode == "faithful" or s % dsa.block_q or s % dsa.block_k:
         # token granularity — the whole-prompt path for this geometry
-        s_t = jnp.einsum("bqk,bsk->bqs", q_t, kt_sel)
+        if kt_sel_s is not None:
+            s_t = _int8_select_scores(q_t, kt_sel, kt_sel_s)
+        else:
+            s_t = jnp.einsum("bqk,bsk->bqs", q_t, kt_sel)
         valid = jnp.arange(s)[None, None, :] <= p[:, :, None]
         keep = M.keep_count(s, dsa.sparsity)
         mask = M.row_topk_mask(s_t, keep, valid)
+        if k_scale is not None:
+            kc, vc = Q.dequant(kc, k_scale), Q.dequant(vc, v_scale)
         return A.chunk_attention(q, kc, vc, p, token_mask=mask)
     bq, bkd = dsa.block_q, dsa.block_k
     assert c % bq == 0, (c, bq)
     n_kb = s // bkd
     q_blk = q_t.reshape(b, c // bq, bq, -1).mean(axis=2)
-    sc = jnp.einsum("bqk,bsk->bqs", q_blk, kt_sel)        # (B, nQb, S)
+    if kt_sel_s is not None:
+        sc = _int8_select_scores(q_blk, kt_sel, kt_sel_s)  # (B, nQb, S)
+    else:
+        sc = jnp.einsum("bqk,bsk->bqs", q_blk, kt_sel)     # (B, nQb, S)
     bs = sc.reshape(b, c // bq, n_kb, bkd).max(axis=-1)
     nb_keep = min(n_kb, max(dsa.min_blocks + dsa.local_blocks,
                             M.keep_count(n_kb, dsa.sparsity)))
@@ -760,10 +1021,12 @@ def _dsa_chunk_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
     if flags.dsa_mode == "kernel":
         from repro.kernels.ops import dsa_chunk_prefill as chunk_kernel
         return chunk_kernel(q, kc, vc, idx, ok, pos, kv_len,
-                            block_q=bq, block_k=bkd)
+                            block_q=bq, block_k=bkd, k_scale=k_scale,
+                            v_scale=v_scale)
     return A.dsa_chunk_block_attention(q, kc, vc, idx, ok, block_q=bq,
                                        block_k=bkd, q_offset=pos,
-                                       kv_len=kv_len)
+                                       kv_len=kv_len, k_scale=k_scale,
+                                       v_scale=v_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -806,38 +1069,60 @@ def _apply_verify(params, cfg: ArchConfig, flags: RunFlags, x, cache,
     wslot = p if active is None else jnp.where(active[:, None], p, s)
     rows = jnp.arange(b)[:, None]
     q = shard(q, "batch", None, "heads", "qkv")
-    kc = cache["k"].at[rows, wslot].set(k.astype(cache["k"].dtype),
-                                        mode="drop")
-    vc = cache["v"].at[rows, wslot].set(v.astype(cache["v"].dtype),
-                                        mode="drop")
+    if "k_s" in cache:
+        k1, ks = Q.quant_store(k, axis=-1, dtype=flags.kv_quant)
+        v1, vs = Q.quant_store(v, axis=-1, dtype=flags.kv_quant)
+    else:
+        k1, v1 = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    kc = cache["k"].at[rows, wslot].set(k1, mode="drop")
+    vc = cache["v"].at[rows, wslot].set(v1, mode="drop")
     kc = shard(kc, "batch", "cache_seq", "kv_heads", "qkv")
     vc = shard(vc, "batch", "cache_seq", "kv_heads", "qkv")
     adv = chunk_len if active is None else jnp.where(active, chunk_len, 0)
     new = dict(cache, k=kc, v=vc, pos=pos + adv)
+    if "k_s" in cache:
+        new["k_s"] = shard(cache["k_s"].at[rows, wslot].set(ks, mode="drop"),
+                           "batch", "cache_seq", "kv_heads")
+        new["v_s"] = shard(cache["v_s"].at[rows, wslot].set(vs, mode="drop"),
+                           "batch", "cache_seq", "kv_heads")
     kv_row = (p + 1).astype(jnp.int32)                     # (B, C) per row
     if active is not None:
         kv_row = jnp.where(active[:, None], kv_row, 0)
     if "kt" in cache:
         q_t, k_t = PRED.predict_qk(params["dsa"], x, None, cfg.dsa.quant_bits)
-        new["kt"] = shard(new["kt"].at[rows, wslot].set(
-            k_t.astype(new["kt"].dtype), mode="drop"),
-            "batch", "cache_seq", "pred_k")
+        if "kt_s" in cache:
+            ktq, kts = Q.quant_store(k_t, axis=-1)
+            new["kt"] = shard(new["kt"].at[rows, wslot].set(ktq,
+                                                            mode="drop"),
+                              "batch", "cache_seq", "pred_k")
+            new["kt_s"] = shard(
+                new["kt_s"].at[rows, wslot].set(kts, mode="drop"),
+                "batch", "cache_seq")
+        else:
+            new["kt"] = shard(new["kt"].at[rows, wslot].set(
+                k_t.astype(new["kt"].dtype), mode="drop"),
+                "batch", "cache_seq", "pred_k")
         if dsa_active(cfg, flags):
             out = _dsa_verify_attend(cfg, flags, q, kc, vc, q_t, new["kt"],
-                                     new["ktb"], p, kv_row)
+                                     new["ktb"], p, kv_row,
+                                     kt_s=new.get("kt_s"),
+                                     ktb_s=new.get("ktb_s"),
+                                     k_scale=new.get("k_s"),
+                                     v_scale=new.get("v_s"))
         else:
             # dsa_mode "off" on a long-context cache: dense decode over the
             # full buffer (kt maintained, like _dsa_decode's off path)
-            out = A.chunk_attention(q, kc, vc, p)
+            out = A.chunk_attention(q, *_kv_views(new, kc, vc), p)
     else:
-        out = A.chunk_attention(q, kc, vc, p)
+        out = A.chunk_attention(q, *_kv_views(new, kc, vc), p)
     out = shard(out, "batch", None, "heads", "qkv")
     out = out.reshape(b, c, -1) @ params["wo"]
     return out, new, {}
 
 
 def _dsa_verify_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
-                       kt_full, ktb, p, kv_row):
+                       kt_full, ktb, p, kv_row, *, kt_s=None, ktb_s=None,
+                       k_scale=None, v_scale=None):
     """Per-row DSA decode selection + attention for a verify chunk — the
     row-exact twin of ``_dsa_decode``'s execution paths.
 
@@ -846,20 +1131,30 @@ def _dsa_verify_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
     in force-kept blocks — see _apply_verify); p: (B, C) global positions;
     kv_row: (B, C) per-row kv_len.  Scores, top-k, gather and softmax all
     run per row with exactly the decode step's shapes and reduction order.
+    kt_s/ktb_s: int8-selection scales; k_scale/v_scale: kv_quant scales.
     """
     dsa = cfg.dsa
     b, c = q.shape[:2]
     s = kc.shape[1]
     keep = M.keep_count(s, dsa.sparsity)
     if flags.dsa_mode == "faithful":
-        s_tilde = jnp.einsum("bck,bsk->bcs", q_t.astype(jnp.float32),
-                             kt_full.astype(jnp.float32))
+        if kt_s is not None:
+            s_tilde = _int8_select_scores(q_t, kt_full, kt_s)
+        else:
+            s_tilde = jnp.einsum("bck,bsk->bcs", q_t.astype(jnp.float32),
+                                 kt_full.astype(jnp.float32))
+        if k_scale is not None:
+            kc = Q.dequant(kc, k_scale)
+            vc = Q.dequant(vc, v_scale)
         return A.dsa_verify_attention(q, kc, vc, s_tilde, keep=keep,
                                       kv_len=kv_row, local=DECODE_LOCAL)
     bkd = dsa.block_k
     n_kb = ktb.shape[1]
-    s_blk = jnp.einsum("bck,bjk->bcj", q_t.astype(jnp.float32),
-                       ktb.astype(jnp.float32)) / bkd
+    if ktb_s is not None:
+        s_blk = _int8_select_scores(q_t, ktb, ktb_s, block_k=bkd)
+    else:
+        s_blk = jnp.einsum("bck,bjk->bcj", q_t.astype(jnp.float32),
+                           ktb.astype(jnp.float32)) / bkd
     nb_keep = min(n_kb, -(-keep // bkd) + -(-DECODE_LOCAL // bkd) + 1)
     idx, ok = M.verify_block_topk_indices(s_blk, nb_keep, kv_len=kv_row,
                                           block_k=bkd, local=DECODE_LOCAL)
@@ -870,11 +1165,13 @@ def _dsa_verify_attend(cfg: ArchConfig, flags: RunFlags, q, kc, vc, q_t,
         # kernel-mode verification is bitwise by construction (C is small
         # and static — the unroll is part of the (slots, K) compile)
         outs = [dsa_decode_kernel(q[:, i:i + 1], kc, vc, idx[:, i],
-                                  ok[:, i], kv_row[:, i], block_k=bkd)
+                                  ok[:, i], kv_row[:, i], block_k=bkd,
+                                  k_scale=k_scale, v_scale=v_scale)
                 for i in range(c)]
         return jnp.concatenate(outs, axis=1)
     return A.dsa_verify_block_attention(q, kc, vc, idx, ok, block_k=bkd,
-                                        kv_len=kv_row)
+                                        kv_len=kv_row, k_scale=k_scale,
+                                        v_scale=v_scale)
 
 
 def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import quantization as Q
 from repro.distributed.sharding import map_specs, shard
 from repro.models import blocks as B
 from repro.models.attention import RunFlags
@@ -152,8 +153,11 @@ def unstack_group_caches(caches):
 # Cache leaves holding one row per cached token, keyed by their dict name;
 # value = seq-axis index counted from the END of the leaf's shape, so the
 # same rule covers stacked (n_groups, B, S, ...) and unstacked (B, S, ...)
-# layouts.  ktb is excluded: it is rebuilt from the masked kt.
-_SEQ_AXIS_FROM_END = {"k": 3, "v": 3, "kt": 2, "c_kv": 2, "k_rope": 2}
+# layouts.  ktb (and its scale ktb_s) is excluded: rebuilt from the
+# masked kt.  *_s leaves are the per-row quantization scales of int8/fp8
+# caches (one fewer trailing axis than their data leaf).
+_SEQ_AXIS_FROM_END = {"k": 3, "v": 3, "kt": 2, "c_kv": 2, "k_rope": 2,
+                      "k_s": 2, "v_s": 2, "kt_s": 1}
 
 
 def _mask_rows(a, length, axis_from_end: int):
@@ -198,7 +202,7 @@ def truncate_cache(cfg: ArchConfig, caches, length):
                 if name == "pos":
                     out[name] = jnp.broadcast_to(length, v.shape).astype(
                         v.dtype)
-                elif name == "ktb":
+                elif name in ("ktb", "ktb_s"):
                     continue                    # rebuilt below from kt
                 elif name in _SEQ_AXIS_FROM_END:
                     out[name] = _mask_rows(v, length,
@@ -207,15 +211,22 @@ def truncate_cache(cfg: ArchConfig, caches, length):
                     out[name] = walk(v)
             if "ktb" in node:
                 kt = out["kt"]
+                if "kt_s" in out:
+                    # int8 selection cache: block sums accumulate the
+                    # DEQUANTIZED kt rows (same source as the live updates)
+                    kt = Q.dequant(out["kt"], out["kt_s"])
                 bkd = cfg.dsa.block_k
                 n_kb = node["ktb"].shape[-2]
                 pad = n_kb * bkd - kt.shape[-2]
                 if pad:
                     kt = jnp.pad(kt, [(0, 0)] * (kt.ndim - 2)
                                  + [(0, pad), (0, 0)])
-                out["ktb"] = kt.reshape(*kt.shape[:-2], n_kb, bkd,
-                                        kt.shape[-1]).sum(axis=-2).astype(
-                                            node["ktb"].dtype)
+                sums = kt.reshape(*kt.shape[:-2], n_kb, bkd,
+                                  kt.shape[-1]).sum(axis=-2)
+                if "ktb_s" in node:
+                    out["ktb"], out["ktb_s"] = Q.quant_store(sums, axis=-1)
+                else:
+                    out["ktb"] = sums.astype(node["ktb"].dtype)
             return out
         if isinstance(node, (list, tuple)):
             return type(node)(walk(v) for v in node)
@@ -377,7 +388,7 @@ def verify_step(params, cfg: ArchConfig, flags: RunFlags, tokens, caches,
 
 # Cache leaves holding one row per cached token in the UNSTACKED decode
 # layout (batch axis 0, token-row axis 1) — the set commit_chunk rolls back.
-_COMMIT_ROW_KEYS = ("k", "v", "kt", "c_kv", "k_rope")
+_COMMIT_ROW_KEYS = ("k", "v", "kt", "c_kv", "k_rope", "k_s", "v_s", "kt_s")
 
 
 def commit_chunk(cfg: ArchConfig, caches, keep, c: int,
@@ -436,13 +447,22 @@ def commit_chunk(cfg: ArchConfig, caches, keep, c: int,
                 ridx = (jbs[:, :, None] * bkd
                         + jnp.arange(bkd)[None, None, :]).reshape(
                             b, nb_t * bkd)
-                g = jnp.take_along_axis(
-                    kt, jnp.minimum(ridx, kt.shape[1] - 1)[:, :, None],
-                    axis=1)
+                rclamp = jnp.minimum(ridx, kt.shape[1] - 1)
+                g = jnp.take_along_axis(kt, rclamp[:, :, None], axis=1)
+                if "kt_s" in node:
+                    gs = jnp.take_along_axis(out["kt_s"], rclamp, axis=1)
+                    g = Q.dequant(g, gs)
                 sums = g.reshape(b, nb_t, bkd, -1).sum(axis=2)
                 sjb = jnp.where((jbs < n_kb) & act[:, None], jbs, n_kb)
-                out["ktb"] = node["ktb"].at[rows, sjb].set(
-                    sums.astype(node["ktb"].dtype), mode="drop")
+                if "ktb_s" in node:
+                    bq, bs = Q.quant_store(sums, axis=-1)
+                    out["ktb"] = node["ktb"].at[rows, sjb].set(
+                        bq, mode="drop")
+                    out["ktb_s"] = node["ktb_s"].at[rows, sjb].set(
+                        bs, mode="drop")
+                else:
+                    out["ktb"] = node["ktb"].at[rows, sjb].set(
+                        sums.astype(node["ktb"].dtype), mode="drop")
             return out
         if isinstance(node, (list, tuple)):
             return type(node)(walk(v) for v in node)

@@ -144,6 +144,111 @@ def test_dsa_chunk_paged_matches_dense_kernel(rng, s, c, bq, bk):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(dense))
 
 
+# -- quantized-cache gather kernels ------------------------------------------
+#
+# With k_scale/v_scale the kernels stream an int8/fp8 cache and dequantize
+# per gathered block (row value * per-(row, head) scale) before the same
+# f32 flash loop.  Dequantizing the whole cache in XLA and running the
+# UNQUANTIZED kernel on it feeds bit-identical block values through
+# bit-identical arithmetic, so the twins must agree exactly.
+
+
+@pytest.mark.parametrize("qd", ["int8", "fp8"])
+@pytest.mark.parametrize("s,bk", [(128, 16), (256, 32)])
+def test_dsa_decode_quant_matches_dequant_reference(rng, s, bk, qd):
+    from repro.core.quantization import dequant, quant_store
+    b, hq, hkv, hd = 2, 4, 2, 32
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd))
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd))
+    kv_len = jnp.array([s, max(1, s - 21)], jnp.int32)
+    n_kb = s // bk
+    sb = jax.random.normal(ks[3], (b, n_kb))
+    idx, ok = M.decode_block_topk_indices(sb, min(n_kb, 5), kv_len=kv_len,
+                                          block_k=bk, local=32)
+    kq, ksc = quant_store(kc, dtype=qd)
+    vq, vsc = quant_store(vc, dtype=qd)
+    out = dsa_decode(q, kq, vq, idx, ok, kv_len, block_k=bk,
+                     k_scale=ksc, v_scale=vsc)
+    ref_out = dsa_decode(q, dequant(kq, ksc), dequant(vq, vsc), idx, ok,
+                         kv_len, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_out))
+
+
+def test_dsa_decode_paged_quant_matches_dense_quant(rng):
+    from repro.core.quantization import quant_store
+    b, s, bk, hq, hkv, hd = 2, 128, 16, 4, 2, 32
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd))
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd))
+    kv_len = jnp.array([s, s - 37], jnp.int32)
+    n_kb = s // bk
+    sb = jax.random.normal(ks[3], (b, n_kb))
+    idx, ok = M.decode_block_topk_indices(sb, 5, kv_len=kv_len,
+                                          block_k=bk, local=32)
+    kq, ksc = quant_store(kc)
+    vq, vsc = quant_store(vc)
+    tbl = _permuted_tbl(jax.random.fold_in(rng, 11), b, n_kb)
+    pidx = jnp.take_along_axis(tbl, idx, axis=1)
+    out = dsa_decode_paged(
+        q, _scatter_to_pool(kq, tbl, bk), _scatter_to_pool(vq, tbl, bk),
+        idx, pidx, ok, kv_len, block_k=bk,
+        k_scale=_scatter_to_pool(ksc, tbl, bk),
+        v_scale=_scatter_to_pool(vsc, tbl, bk))
+    dense = dsa_decode(q, kq, vq, idx, ok, kv_len, block_k=bk,
+                       k_scale=ksc, v_scale=vsc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dense))
+
+
+@pytest.mark.parametrize("qd", ["int8", "fp8"])
+def test_dsa_chunk_quant_matches_dequant_reference(rng, qd):
+    from repro.core.quantization import dequant, quant_store
+    b, s, c, bq, bk, hq, hkv, hd = 2, 128, 32, 16, 16, 4, 2, 32
+    ks = jax.random.split(rng, 5)
+    q = jax.random.normal(ks[0], (b, c, hq, hd))
+    kc = jax.random.normal(ks[1], (b, s, hkv, hd))
+    vc = jax.random.normal(ks[2], (b, s, hkv, hd))
+    q_off = jnp.array([32, 16], jnp.int32)
+    kv_len = q_off + jnp.array([c, c - 7], jnp.int32)
+    n_kb = s // bk
+    bs = jax.random.normal(ks[3], (b, c // bq, n_kb))
+    idx, ok = M.chunk_block_topk_indices(bs, 4, q_block_offset=q_off // bq)
+    kq, ksc = quant_store(kc, dtype=qd)
+    vq, vsc = quant_store(vc, dtype=qd)
+    out = dsa_chunk_prefill(q, kq, vq, idx, ok, q_off, kv_len, block_q=bq,
+                            block_k=bk, k_scale=ksc, v_scale=vsc)
+    ref_out = dsa_chunk_prefill(q, dequant(kq, ksc), dequant(vq, vsc), idx,
+                                ok, q_off, kv_len, block_q=bq, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref_out))
+
+
+def test_dsa_chunk_paged_quant_matches_dense_quant(rng):
+    from repro.core.quantization import quant_store
+    b, s, c, bq, bk, hq, hkv, hd = 2, 128, 32, 16, 16, 4, 2, 32
+    ks = jax.random.split(rng, 5)
+    q = jax.random.normal(ks[0], (b, c, hq, hd))
+    kq, ksc = quant_store(jax.random.normal(ks[1], (b, s, hkv, hd)))
+    vq, vsc = quant_store(jax.random.normal(ks[2], (b, s, hkv, hd)))
+    q_off = jnp.array([32, 16], jnp.int32)
+    kv_len = q_off + jnp.array([c, c - 7], jnp.int32)
+    n_kb = s // bk
+    bs = jax.random.normal(ks[3], (b, c // bq, n_kb))
+    idx, ok = M.chunk_block_topk_indices(bs, 4, q_block_offset=q_off // bq)
+    tbl = _permuted_tbl(jax.random.fold_in(rng, 13), b, n_kb)
+    pidx = jnp.take_along_axis(tbl[:, None].repeat(idx.shape[1], 1), idx,
+                               axis=2)
+    out = dsa_chunk_prefill_paged(
+        q, _scatter_to_pool(kq, tbl, bk), _scatter_to_pool(vq, tbl, bk),
+        idx, pidx, ok, q_off, kv_len, block_q=bq, block_k=bk,
+        k_scale=_scatter_to_pool(ksc, tbl, bk),
+        v_scale=_scatter_to_pool(vsc, tbl, bk))
+    dense = dsa_chunk_prefill(q, kq, vq, idx, ok, q_off, kv_len, block_q=bq,
+                              block_k=bk, k_scale=ksc, v_scale=vsc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(dense))
+
+
 @pytest.mark.parametrize("s,chunk,hd", [(64, 16, 16), (128, 32, 64),
                                         (256, 32, 32), (96, 32, 64)])
 def test_wkv6_shapes(rng, s, chunk, hd):

@@ -1,0 +1,216 @@
+"""Mixed-precision serving (Energon, arXiv 2110.09310) behind the
+consolidated ServingConfig API.
+
+Pins: (1) ``config=`` and the legacy kwargs constructors are BITWISE
+token-identical, and the default flags (select_dtype="float32",
+kv_quant=None) leave the cache tree structure byte-for-byte unchanged;
+(2) int8 selection preserves block top-k INDICES (ranking is the
+exactness surface — the attend over survivors stays full precision);
+(3) quantized serving is token-exact between paged and dense resident
+layouts; (4) the quantized cache packs >= 1.8x the slots per GiB; (5)
+invalid modes fail loudly at construction with the valid set listed."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import quantization as Q
+from repro.inference.config import ServingConfig, resolve_config
+from repro.inference.engine import Engine, can_quantize
+from repro.inference.scheduler import ContinuousEngine, Request
+from repro.models.attention import (DSA_MODES, KV_QUANT_DTYPES,
+                                    SELECT_DTYPES, _int8_select_scores)
+from repro.models.transformer import init_cache, init_model
+
+MAX_LEN = 96
+
+
+@pytest.fixture(scope="module")
+def setup(rng):
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    return cfg, params
+
+
+def _prompts(vocab, shape, seed=0):
+    return np.random.default_rng(seed).integers(
+        1, vocab - 4, size=shape).astype(np.int32)
+
+
+QUANT_CFG = dict(max_len=MAX_LEN, long_context=True, dsa_mode="block",
+                 select_dtype="int8", kv_quant="int8")
+
+
+# -- ServingConfig consolidation (satellite 1) -------------------------------
+
+
+def test_engine_config_equals_legacy_kwargs(setup):
+    cfg, params = setup
+    kw = dict(max_len=MAX_LEN, long_context=True, dsa_mode="block")
+    e_kw = Engine(cfg, params, **kw)
+    e_cfg = Engine(cfg, params, config=ServingConfig(**kw))
+    p = _prompts(cfg.vocab, (2, 24))
+    for greedy in (True, False):
+        a = e_kw.generate(p, 8, greedy=greedy, seed=3).tokens
+        b = e_cfg.generate(p, 8, greedy=greedy, seed=3).tokens
+        np.testing.assert_array_equal(a, b)
+    assert e_cfg.config.max_len == MAX_LEN
+
+
+def test_continuous_config_equals_legacy_kwargs(setup):
+    cfg, params = setup
+    kw = dict(slots=2, max_len=MAX_LEN, seg_len=4, long_context=True,
+              dsa_mode="block")
+    ce_kw = ContinuousEngine(cfg, params, **kw)
+    ce_cfg = ContinuousEngine(cfg, params, config=ServingConfig(**kw))
+    reqs = [Request(i, _prompts(cfg.vocab, (16 + 8 * i,), seed=i), 6,
+                    greedy=(i % 2 == 0), seed=i * 7 + 1) for i in range(3)]
+    a = ce_kw.run(reqs)
+    b = ce_cfg.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(a[r.rid], b[r.rid])
+
+
+def test_resolve_config_kwargs_win():
+    base = ServingConfig(max_len=64, slots=3)
+    c = resolve_config(base, {"max_len": 128})
+    assert (c.max_len, c.slots) == (128, 3)
+    assert resolve_config(base, {}) is base
+    with pytest.raises(TypeError):
+        resolve_config({"max_len": 64}, {})
+    with pytest.raises(TypeError):
+        resolve_config(None, {"no_such_knob": 1})
+
+
+def test_default_flags_leave_cache_structure(setup):
+    """select_dtype="float32"/kv_quant=None must not grow scale leaves —
+    the cache TREE (and therefore every compiled program) is unchanged."""
+    cfg, params = setup
+    e = Engine(cfg, params, max_len=MAX_LEN, long_context=True,
+               dsa_mode="block")
+    assert (e.decode_flags.select_dtype, e.decode_flags.kv_quant) == \
+        ("float32", None)
+    c = init_cache(cfg, 2, MAX_LEN, e.decode_flags, dtype=e.cache_dtype)
+    names = {p[-1].key for p, _ in
+             jax.tree_util.tree_flatten_with_path(c)[0]}
+    assert not {n for n in names if str(n).endswith("_s")}
+    assert all(x.dtype != jnp.int8 for x in jax.tree_util.tree_leaves(c))
+
+
+# -- mode validation (satellite 2) -------------------------------------------
+
+
+@pytest.mark.parametrize("field,bad", [("dsa_mode", "topk"),
+                                       ("select_dtype", "int4"),
+                                       ("kv_quant", "nf4"),
+                                       ("loop", "while"),
+                                       ("moe_prefill", "sparse")])
+def test_serving_config_rejects_invalid(field, bad):
+    with pytest.raises(ValueError, match=field):
+        ServingConfig(**{field: bad})
+
+
+def test_request_rejects_invalid_mode():
+    with pytest.raises(ValueError, match="dsa_mode"):
+        Request(0, np.ones((4,), np.int32), 2, dsa_mode="sparse")
+    for m in DSA_MODES + (None,):
+        Request(0, np.ones((4,), np.int32), 2, dsa_mode=m)
+
+
+def test_quant_outside_envelope_raises(setup):
+    cfg, params = setup
+    assert can_quantize(cfg)
+    with pytest.raises(ValueError, match="long_context"):
+        Engine(cfg, params, config=ServingConfig(
+            max_len=MAX_LEN, select_dtype="int8"))
+    swa = reduced(get_config("h2o_danube_1_8b"))
+    assert not can_quantize(swa)
+    p2, _ = init_model(jax.random.PRNGKey(0), swa)
+    with pytest.raises(ValueError, match="quant"):
+        Engine(swa, p2, config=ServingConfig(max_len=MAX_LEN,
+                                             kv_quant="int8"))
+
+
+# -- int8 selection preserves ranking (satellite 3) --------------------------
+
+
+def test_int8_topk_index_overlap():
+    """Block top-k indices from the int8 selection matmul overlap the fp32
+    selection >= 0.6 everywhere (in practice ~1.0): selection is ranking-
+    only, so index overlap — not score error — is the exactness surface."""
+    worst = 1.0
+    for seed, (b, n, kp, nb) in enumerate(
+            [(2, 64, 16, 8), (1, 128, 32, 12), (4, 32, 16, 4),
+             (2, 96, 64, 16), (3, 48, 24, 6)]):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q_t = jax.random.normal(ks[0], (b, 1, kp))
+        kt = jax.random.normal(ks[1], (b, n, kp)) * \
+            (0.25 + jax.random.uniform(ks[2], (b, n, 1)) * 4.0)
+        ktq, kts = Q.quant_store(kt, axis=-1)
+        s_f32 = jnp.einsum("brk,bnk->brn", q_t, kt)
+        s_int8 = _int8_select_scores(q_t, ktq, kts)
+        _, i_f32 = jax.lax.top_k(s_f32, nb)
+        _, i_int8 = jax.lax.top_k(s_int8, nb)
+        for bi in range(b):
+            ov = len(set(np.asarray(i_f32[bi, 0]).tolist())
+                     & set(np.asarray(i_int8[bi, 0]).tolist())) / nb
+            worst = min(worst, ov)
+    assert worst >= 0.6, f"worst int8-vs-fp32 top-k overlap {worst}"
+
+
+# -- quantized serving end-to-end --------------------------------------------
+
+
+def test_quant_cache_packs_more_slots(setup):
+    """The acceptance floor: int8 K/V + int8 kt with per-row f32 scales
+    must fit >= 1.8x the slots of the fp32 cache in the same bytes."""
+    cfg, params = setup
+    e32 = Engine(cfg, params, max_len=MAX_LEN, long_context=True,
+                 dsa_mode="block")
+    e8 = Engine(cfg, params, config=ServingConfig(**QUANT_CFG))
+    b32 = sum(x.nbytes for x in jax.tree_util.tree_leaves(
+        init_cache(cfg, 2, MAX_LEN, e32.decode_flags,
+                   dtype=e32.cache_dtype)))
+    b8 = sum(x.nbytes for x in jax.tree_util.tree_leaves(
+        init_cache(cfg, 2, MAX_LEN, e8.decode_flags,
+                   dtype=e8.cache_dtype)))
+    assert b32 / b8 >= 1.8, f"cache ratio {b32 / b8:.2f} < 1.8"
+
+
+@pytest.mark.parametrize("mode", ["faithful", "block", "kernel"])
+@pytest.mark.parametrize("kv_quant", ["int8", "fp8"])
+def test_quant_engine_generates(setup, mode, kv_quant):
+    cfg, params = setup
+    e = Engine(cfg, params, config=ServingConfig(
+        max_len=MAX_LEN, long_context=True, dsa_mode=mode,
+        select_dtype="int8", kv_quant=kv_quant))
+    p = _prompts(cfg.vocab, (2, 24))
+    toks = e.generate(p, 8).tokens
+    assert toks.shape == (2, 8)
+    assert ((toks >= 0) & (toks < cfg.vocab)).all()
+
+
+def test_quant_paged_matches_dense_continuous(setup):
+    """Paged + quantized serving is token-exact vs dense + quantized: the
+    scale leaves ride the same page-table indirection as their payloads."""
+    cfg, params = setup
+    base = ServingConfig(slots=2, seg_len=4, **QUANT_CFG)
+    ce_d = ContinuousEngine(cfg, params, config=base)
+    ce_p = ContinuousEngine(cfg, params,
+                            config=dataclasses.replace(base, paged=True))
+    reqs = [Request(i, _prompts(cfg.vocab, (16 + 16 * i,), seed=i), 6,
+                    greedy=(i % 2 == 0), seed=i * 5 + 3) for i in range(3)]
+    a = ce_d.run(reqs)
+    b = ce_p.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(a[r.rid], b[r.rid],
+                                      err_msg=f"rid {r.rid}")
+
+
+def test_constants_are_canonical():
+    assert DSA_MODES == ("off", "faithful", "block", "kernel")
+    assert SELECT_DTYPES == ("float32", "int8")
+    assert KV_QUANT_DTYPES == (None, "int8", "fp8")
