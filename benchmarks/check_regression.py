@@ -64,6 +64,11 @@ _SERVE_RATIO_KEYS = {
     # over the fp32 long-prompt engine — pure byte counts, deterministic,
     # gated at smoke too (and against the absolute floor below)
     "slots_per_gib_ratio_quant_vs_fp32": True,
+    # overload protection: goodput kept by the bounded-queue shedding
+    # engine over the unbounded baseline on the same 20x-rate deadline
+    # traffic (full runs only — smoke overload goodput is pure noise,
+    # where only the continuous_overload row's presence gates)
+    "goodput_ratio_shed_vs_unbounded": True,
 }
 
 # the quantized cache must pack at least this many times the slots of the
@@ -182,7 +187,8 @@ def check_serve(threshold: float, path: str = "") -> int:
                   "missing from latest smoke run")
             return 1
         for mode in ("continuous_paged", "continuous_prefix_hit",
-                     "continuous_quant", "continuous_paged_quant"):
+                     "continuous_quant", "continuous_paged_quant",
+                     "continuous_overload"):
             # same presence logic for the paged serving rows: their VALUES
             # are noise at smoke, their disappearance is structural
             if (any(r.get("mode") == mode for r in base.get("rows", []))

@@ -189,12 +189,25 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     wl = synthetic_workload(n_req, seed=0, **kw)
     wl_long_warm = synthetic_workload(n_req_long, seed=3, **kw_long)
     wl_long = synthetic_workload(n_req_long, seed=2, **kw_long)
+    # OVERLOAD traffic: the mixed shapes arriving 20x faster than the
+    # mixed config's rate — far above capacity — with a per-request
+    # deadline, so the row reports shedding + SLO attainment under
+    # pressure (the bounded queue sheds and keeps goodput; the unbounded
+    # baseline serves everything late and times out instead)
+    dl = 2.0 if smoke else 10.0
+    kw_over = dict(kw, rate_rps=kw["rate_rps"] * 20)
+    wl_over_warm = synthetic_workload(n_req, seed=7, deadline_s=dl,
+                                      **kw_over)
+    wl_over = synthetic_workload(n_req, seed=6, deadline_s=dl, **kw_over)
 
     cont = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
                             seg_len=seg_len)          # chunked (default)
     assert cont.chunked
     block = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
                              seg_len=seg_len, chunked_prefill=False)
+    shed = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
+                            seg_len=seg_len, queue_cap=max(2, slots),
+                            shed_policy="oldest")
     cont_m = None
     if mesh:
         ndev = jax.device_count()
@@ -266,6 +279,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     # measured trial on prefix_l is a registry HIT
     for eng, lens, wls in ((cont, mixed_lens, wl_warm),
                            (block, mixed_lens, wl_warm),
+                           (shed, mixed_lens, wl_over_warm),
                            (cont_l, long_lens, wl_long_warm),
                            (block_l, long_lens, wl_long_warm),
                            (quant_l, long_lens, wl_long_warm),
@@ -288,10 +302,16 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     cont_long_runs, block_long_runs, cont_mesh_runs = [], [], []
     paged_runs, prefix_runs = [], []
     quant_runs, paged_quant_runs = [], []
+    overload_runs, overload_unb_runs = [], []
     for _ in range(trials):       # interleave: CPU drift hits modes equally
         bucketed_runs.append(_measure(bucketed, wl))
         block_runs.append(_measure(block, wl))
         cont_runs.append(_measure(cont, wl))
+        overload_runs.append(_measure(shed, wl_over))
+        if not smoke:
+            # the unbounded baseline on the same overload traffic (full
+            # runs: smoke-scale goodput under overload is pure noise)
+            overload_unb_runs.append(_measure(cont, wl_over))
         if cont_m is not None:
             cont_mesh_runs.append(_measure(cont_m, wl))
         block_long_runs.append(_measure(block_l, wl_long))
@@ -316,6 +336,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     s_cont_l, s_block_l = _best(cont_long_runs), _best(block_long_runs)
     s_paged, s_prefix = _best(paged_runs), _best(prefix_runs)
     s_quant, s_pquant = _best(quant_runs), _best(paged_quant_runs)
+    s_over = _best(overload_runs)
+    s_over_unb = _best(overload_unb_runs) if overload_unb_runs else None
     ratios = {
         "goodput_ratio_vs_static":
             s_cont["goodput_tok_s"] / max(s_exact["goodput_tok_s"], 1e-9),
@@ -337,6 +359,12 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         # smoke-scale TTFTs are single milliseconds — value is noise there
         ratios["ttft_frac_prefix_vs_paged"] = (
             s_prefix["p95_ttft_s"] / max(s_paged["p95_ttft_s"], 1e-9))
+    if s_over_unb is not None:
+        # goodput kept under 20x overload by shedding vs serving everything
+        # late from an unbounded queue (full runs only — smoke overload
+        # goodput is single requests and pure noise)
+        ratios["goodput_ratio_shed_vs_unbounded"] = (
+            s_over["goodput_tok_s"] / max(s_over_unb["goodput_tok_s"], 1e-9))
     if not smoke:
         # long-prompt latencies at smoke scale are single milliseconds —
         # their ratios are scheduling noise, so only full runs emit them
@@ -359,6 +387,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                     ("continuous_paged_quant", s_pquant),
                     ("continuous_paged", s_paged),
                     ("continuous_prefix_hit", s_prefix),
+                    ("continuous_overload", s_over),
                     *((("continuous_sharded", s_cont_m),)
                       if s_cont_m is not None else ())):
         stall = s.get("admission_stall_frac")
@@ -400,6 +429,12 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
         "table_serve/quant", 0.0,
         f"{ratios['slots_per_gib_ratio_quant_vs_fp32']:.2f}x_slots_per_gib"
         f"_vs_fp32_int8kv"))
+    lines.append(row(
+        "table_serve/overload", 0.0,
+        f"shed_{s_over['n_shed']}_timeout_{s_over['n_timeout']}_slo_"
+        f"{s_over['slo_attainment']:.2f}"
+        + (f"_{ratios['goodput_ratio_shed_vs_unbounded']:.2f}x_vs_unbounded"
+           if s_over_unb is not None else "")))
     if s_cont_m is not None:
         lines.append(row(
             "table_serve/sharded_vs_single", 0.0,

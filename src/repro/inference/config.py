@@ -43,6 +43,7 @@ from repro.models.attention import (DSA_MODES, KV_QUANT_DTYPES,
 
 LOOPS = ("scan", "python")
 MOE_PREFILL_MODES = ("capacity", "dense")
+SHED_POLICIES = ("reject", "oldest", "lowest-priority")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +74,12 @@ class ServingConfig:
     max_mode_wait_s: Optional[float] = None
     paged: bool = False              # page the resident KV cache
     pool_pages: Optional[int] = None
+    # -- fault tolerance (ContinuousEngine) ----------------------------------
+    queue_cap: Optional[int] = None  # bounded admission queue (None = inf)
+    shed_policy: str = "reject"      # overload victim: see SHED_POLICIES
+    deadline_s: Optional[float] = None   # default per-request latency budget
+    admit_retries: int = 8           # unfundable-anchor retries before shed
+    injector: Any = None             # FaultInjector (None = no injection)
 
     def __post_init__(self):
         for name, val, valid in (("dsa_mode", self.dsa_mode, DSA_MODES),
@@ -82,11 +89,18 @@ class ServingConfig:
                                   KV_QUANT_DTYPES),
                                  ("loop", self.loop, LOOPS),
                                  ("moe_prefill", self.moe_prefill,
-                                  MOE_PREFILL_MODES)):
+                                  MOE_PREFILL_MODES),
+                                 ("shed_policy", self.shed_policy,
+                                  SHED_POLICIES)):
             if val not in valid:
                 raise ValueError(
                     f"ServingConfig.{name}={val!r} is not a valid choice; "
                     f"valid: {valid}")
+        if self.queue_cap is not None and self.queue_cap < 1:
+            raise ValueError("ServingConfig.queue_cap must be >= 1 "
+                             "(None = unbounded)")
+        if self.admit_retries < 0:
+            raise ValueError("ServingConfig.admit_retries must be >= 0")
 
 
 def resolve_config(config: Optional[ServingConfig], kw: dict

@@ -445,6 +445,10 @@ class Engine:
         # of failing deep inside prefill/decode once the cache overflows
         plen = (int(np.asarray(prompts).shape[1]) if lengths is None
                 else int(np.max(lengths)))
+        if plen == 0 or (lengths is not None
+                         and int(np.min(lengths)) < 1):
+            raise ValueError("empty prompt: decode needs at least one "
+                             "context token per row")
         if plen + n_new > self.max_len:
             raise ValueError(
                 f"prompt_len ({plen}) + n_new ({n_new}) exceeds the "

@@ -73,6 +73,22 @@ overrides add one compile per DISTINCT MODE actually used for the
 segment/chunk/prefill programs.  Nothing recompiles per request, per
 n_new, per temperature, per arrival pattern, or per burst size.
 ``warmup`` precompiles the fixed chunk-shape set for its prompt buckets.
+
+Fault tolerance: every request retires with a typed ``RequestResult.status``
+(``ok | timeout | cancelled | failed | shed``).  Deadlines
+(``Request.deadline_s`` / ``ServingConfig.deadline_s``) and ``cancel(rid)``
+retire queued, chunking, or resident requests at segment boundaries —
+a resident slot freezes via the existing ``active`` mask and returns its
+pages exactly like a normal retirement, so co-resident slots' tokens are
+bitwise untouched.  Overload sheds at a bounded admission queue
+(``queue_cap`` + ``shed_policy``), unfundable paged anchors retry with
+backoff instead of livelocking, a non-finite logits row fails ONLY its
+slot, a crashing draft proposer degrades speculative segments to plain
+decode (same tokens), a ``StepWatchdog`` flags slow segments, and a real
+device-side segment failure fails the in-flight batch, rebuilds the
+resident cache, and keeps serving the queue (``health()`` snapshots all
+of it).  With no deadlines, no queue bound, and no ``FaultInjector``
+armed, every path above is bitwise inert (pinned by tests/test_faults.py).
 """
 from __future__ import annotations
 
@@ -87,10 +103,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.distributed.fault_tolerance import StepWatchdog
 from repro.distributed.sharding import is_spec_leaf, shard, shard_put_tree
 from repro.inference.config import ServingConfig, resolve_config
 from repro.inference.engine import Engine, _ro_view, _sample, \
     can_chunk_prefill, can_page, pow2_bucket
+from repro.inference.faults import FaultError
 from repro.inference.speculative import NGramProposer, SpeculativeDecoder, \
     can_speculate
 from repro.models.attention import DSA_MODES, cache_page_size
@@ -122,6 +140,11 @@ class Request:
     # when the key is left None, so equal declared prefixes always match.
     prefix_len: int = 0
     prefix_key: Optional[str] = None
+    # lifecycle: latency budget in seconds since arrival (None = the
+    # engine's ServingConfig.deadline_s, which defaults to none), and the
+    # shedding priority under overload (higher survives "lowest-priority")
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         if self.dsa_mode is not None and self.dsa_mode not in DSA_MODES:
@@ -130,16 +153,24 @@ class Request:
                 f"mode; valid: {DSA_MODES} (or None for the engine default)")
 
 
+# the typed retirement statuses: "ok" delivered all n_new tokens; the rest
+# surface partial (timeout/cancelled/failed: whatever was collected before
+# the slot froze) or empty (shed, never admitted) token arrays
+STATUSES = ("ok", "timeout", "cancelled", "failed", "shed")
+
+
 @dataclasses.dataclass
 class RequestResult:
     rid: int
-    tokens: np.ndarray            # (n_new,)
+    tokens: np.ndarray            # (n_new,) when status == "ok", else fewer
     prompt_len: int
     n_new: int
     arrival_s: float
     admit_s: float
     finish_s: float
     first_token_s: float = 0.0    # when token 0 was sampled (TTFT anchor)
+    status: str = "ok"            # one of STATUSES
+    deadline_s: Optional[float] = None   # effective budget (SLO accounting)
 
     @property
     def latency_s(self) -> float:
@@ -187,6 +218,9 @@ class _PrefillGroup:
     n_chunks: int = 0
     mat: Optional[np.ndarray] = None   # (bpf, n_chunks*chunk) padded tokens
     tbls: Optional[List] = None   # paged: per-member page-table row (or None)
+    dead: Set[int] = dataclasses.field(default_factory=set)
+    # member indices cancelled/expired mid-chunk: their rows keep chunking
+    # (the group geometry is fixed) but they never activate or emit
 
 
 def _leaf_name(path) -> Optional[str]:
@@ -381,6 +415,15 @@ class ContinuousEngine:
         # can't join the current segments forces a drain/mode-switch once
         # it has waited this long (None = wait for a natural idle drain)
         self.max_mode_wait_s = c.max_mode_wait_s
+        # fault tolerance: bounded admission queue + shed policy, default
+        # latency budget, unfundable-anchor retry bound, fault injector
+        # (public and mutable — it never participates in compilation, so
+        # tests swap it between runs on one engine)
+        self.queue_cap = c.queue_cap
+        self.shed_policy = c.shed_policy
+        self.deadline_s = c.deadline_s
+        self.admit_retries = c.admit_retries
+        self.injector = c.injector
         # chunk width: pow2, and block-aligned so chunk widths/starts stay
         # block_q/block_k multiples on the DSA paths (a chunk wider than a
         # small prompt bucket is fine: the overhang rows drop out of
@@ -420,17 +463,29 @@ class ContinuousEngine:
             return jax.tree_util.tree_map_with_path(one, resident, pre)
 
         def _segment_fn(params, tok, caches, keys, active, greedy, temps,
-                        remaining, flags):
+                        remaining, poison, flags):
             """seg_len fused decode steps over all slots; inactive slots
             freeze.  Mirrors Engine._decode_loop's body per active row,
             with a per-slot PRNG chain (split + categorical per row) and
             per-slot sampling temperatures (1.0 divides exactly, so the
-            default is bit-identical to the unscaled chain)."""
+            default is bit-identical to the unscaled chain).
+
+            ``poison`` (traced, normally all-False — an elementwise select
+            with a False mask is a bitwise identity, so the fault plumbing
+            keeps the one-compile contract) NaNs a slot's logits row, and
+            the ``finite`` carry records per-slot whether every ACTIVE
+            step's logits row stayed finite — the host fails non-finite
+            slots after the segment (fault isolation: only the poisoned
+            row's own sampling consumes its logits, so co-resident slots
+            are untouched)."""
             def body(carry, _):
-                tok, caches, keys, active, remaining = carry
+                tok, caches, keys, active, remaining, finite = carry
                 logits, caches = decode_step(params, cfg, flags, tok,
                                              caches, active=active)
                 lg = logits[:, -1]
+                lg = jnp.where(poison[:, None],
+                               jnp.full_like(lg, jnp.nan), lg)
+                finite = finite & (~active | jnp.all(jnp.isfinite(lg), -1))
                 ks = jax.vmap(jax.random.split)(keys)         # (B, 2, 2)
                 nxt_s = jax.vmap(jax.random.categorical)(
                     ks[:, 1], lg / temps[:, None])
@@ -440,13 +495,15 @@ class ContinuousEngine:
                 nxt = jnp.where(active, nxt, tok[:, 0])[:, None]
                 remaining = remaining - active.astype(jnp.int32)
                 active = active & (remaining > 0)
-                return (nxt, caches, keys, active, remaining), nxt[:, 0]
+                return (nxt, caches, keys, active, remaining, finite), \
+                    nxt[:, 0]
 
             carry, toks = jax.lax.scan(
-                body, (tok, caches, keys, active, remaining), None,
-                length=seg_len)
-            tok, caches, keys, active, remaining = carry
-            return tok, caches, keys, active, remaining, toks.swapaxes(0, 1)
+                body, (tok, caches, keys, active, remaining,
+                       jnp.ones_like(active)), None, length=seg_len)
+            tok, caches, keys, active, remaining, finite = carry
+            return (tok, caches, keys, active, remaining, finite,
+                    toks.swapaxes(0, 1))
 
         def _chunk_fn(params, caches, toks, chunk_len, active, flags,
                       sel_len):
@@ -620,6 +677,15 @@ class ContinuousEngine:
 
     def submit(self, req: Request) -> None:
         plen = int(np.asarray(req.prompt).shape[-1])
+        if plen == 0:
+            raise ValueError(f"request {req.rid}: empty prompt — decode "
+                             f"needs at least one context token")
+        if req.rid in self._live:
+            # a silent duplicate would overwrite the first request's slot
+            # bookkeeping and drop one of the two results on the floor
+            raise ValueError(f"request {req.rid}: rid already in flight — "
+                             f"rids must be unique until their result is "
+                             f"emitted")
         if plen + req.n_new > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt {plen} + n_new {req.n_new} "
@@ -652,6 +718,17 @@ class ContinuousEngine:
                 raise ValueError(
                     f"request {req.rid}: dsa_mode {req.dsa_mode!r} needs a "
                     f"cache layout this engine doesn't hold ({allowed})")
+        if (self.queue_cap is not None
+                and len(self.queue) >= self.queue_cap):
+            victim = self._shed_victim(req)
+            if victim is not None:
+                # shed results never touched a slot: empty tokens, admit ==
+                # finish == arrival (deterministic — no wall clock involved)
+                self._emit(None, victim, np.zeros((0,), np.int32),
+                           victim.arrival_s, victim.arrival_s, "shed")
+                if victim is req:
+                    return
+        self._live.add(req.rid)
         self._enq_s[req.rid] = time.monotonic()
         self.queue.append(req)
 
@@ -727,14 +804,30 @@ class ContinuousEngine:
                     return 0          # never slotted: staging only
                 return self._pages_needed(r) - n_sh + shared_pending
 
+            forced = (self.injector is not None
+                      and self.injector.take("pool_exhaust") is not None)
             need0 = cost(first)
-            if need0 > self.pool.available():
+            if not forced and need0 > self.pool.available():
                 self.pool.evict_for(need0, keep=key0)
-            if need0 > self.pool.available():
-                rest.append(first)    # unfundable anchor: requeue, wait
+            if forced or need0 > self.pool.available():
+                # unfundable anchor: bounded retry instead of the old
+                # unconditional requeue (a livelock when nothing in flight
+                # could ever return pages).  With resident or chunking work
+                # the anchor waits for retirements as before; with the
+                # engine otherwise idle it sheds after admit_retries
+                # attempts — nothing will ever free the pages it needs.
+                n = self._unfundable.get(first.rid, 0) + 1
+                self._unfundable[first.rid] = n
+                if (n > self.admit_retries and self._pf is None
+                        and not any(s is not None for s in self._slot)):
+                    self._emit(None, first, np.zeros((0,), np.int32),
+                               first.arrival_s, first.arrival_s, "shed")
+                else:
+                    rest.append(first)
                 while rest:
                     self.queue.appendleft(rest.pop())
                 return []
+            self._unfundable.pop(first.rid, None)
             budget = self.pool.available() - need0
             if first.n_new > 1:
                 shared_pending = 0
@@ -819,9 +912,8 @@ class ContinuousEngine:
             tok0, key = self._sample_tok0(last[j:j + 1, -1], req)
             self.stats["useful_tokens"] += 1      # the prefill-sampled tok0
             if req.n_new == 1:   # first token IS the whole generation
-                results.append(RequestResult(
-                    req.rid, np.asarray([tok0], np.int32), len(req.prompt),
-                    req.n_new, req.arrival_s, now, now, first_token_s=now))
+                self._emit(results, req, np.asarray([tok0], np.int32),
+                           now, now, "ok", first_s=now)
                 continue
             slot = next(free)
             if self.paged:
@@ -983,7 +1075,8 @@ class ContinuousEngine:
                     sel_len=pf.bucket)
             pf.j += 1
             finishing = [i for i, r in enumerate(pf.reqs)
-                         if -(-len(r.prompt) // pf.chunk) == j + 1]
+                         if -(-len(r.prompt) // pf.chunk) == j + 1
+                         and i not in pf.dead]
             if not finishing:
                 continue
             last = np.asarray(last)       # sync: this chunk has completed
@@ -994,10 +1087,8 @@ class ContinuousEngine:
                 tok0, key = self._sample_tok0(last[i:i + 1], req)
                 self.stats["useful_tokens"] += 1
                 if req.n_new == 1:        # retires without touching a slot
-                    results.append(RequestResult(
-                        req.rid, np.asarray([tok0], np.int32),
-                        len(req.prompt), req.n_new, req.arrival_s, now, now,
-                        first_token_s=now))
+                    self._emit(results, req, np.asarray([tok0], np.int32),
+                               now, now, "ok", first_s=now)
                     continue
                 slot = pf.slots[i]        # early activation: decode NOW
                 with self._ctx():
@@ -1029,6 +1120,13 @@ class ContinuousEngine:
         admission/finish timestamps are sampled AFTER blocking work.
         Chunked mode only STARTS a group here (one in flight at a time) —
         its chunks run via ``step_prefill`` between decode segments."""
+        if self._pending:
+            # results emitted outside a results-carrying call (submit-time
+            # sheds, cancel(), unfundable sheds) surface at the next
+            # admission point
+            results.extend(self._pending)
+            self._pending.clear()
+        self._reap(clock, results)
         while self.queue:
             if self._pf is not None:
                 break                     # chunked group already in flight
@@ -1051,18 +1149,214 @@ class ContinuousEngine:
                 break
             self._admit_group(free, group, mode, clock, results)
 
+    # -- request lifecycle (deadlines / cancellation / shedding) ------------
+
+    def _eff_deadline(self, req: Request) -> Optional[float]:
+        return (req.deadline_s if req.deadline_s is not None
+                else self.deadline_s)
+
+    def _emit(self, results: Optional[List[RequestResult]], req: Request,
+              tokens, admit_s: float, finish_s: float, status: str,
+              first_s: float = 0.0) -> None:
+        """Retire ``req`` with a typed result: drops its queue bookkeeping
+        (rid becomes reusable), counts non-ok statuses, and appends to
+        ``results`` — or to ``self._pending`` (flushed at the next
+        admission point) when the caller carries no results list."""
+        self._live.discard(req.rid)
+        self._enq_s.pop(req.rid, None)
+        self._unfundable.pop(req.rid, None)
+        if status != "ok":
+            self.stats[status] += 1
+        res = RequestResult(
+            req.rid, np.asarray(tokens, np.int32).reshape(-1),
+            int(np.asarray(req.prompt).shape[-1]), req.n_new,
+            req.arrival_s, admit_s, finish_s, first_token_s=first_s,
+            status=status, deadline_s=self._eff_deadline(req))
+        (results if results is not None else self._pending).append(res)
+
+    def _partial(self, st: _SlotState) -> np.ndarray:
+        """A retiring resident slot's tokens so far: tok0 + every
+        collected segment chunk."""
+        return np.concatenate(
+            [np.asarray([st.tok0], np.int32)] + st.collected)
+
+    def _retire_slot(self, i: int) -> None:
+        """Free slot ``i`` outside the normal end-of-generation path:
+        the host ``active`` mirror is the next segment's dispatch truth,
+        so clearing it freezes the slot (kv_len = 0, writes dropped) and
+        co-resident slots never see a perturbation; pages return exactly
+        like a normal retirement."""
+        self._slot[i] = None
+        self._active[i] = False
+        if self.paged:
+            self.pool.free_slot(i)
+
+    def _kill_pf_member(self, pf: _PrefillGroup, i: int) -> None:
+        """Remove member ``i`` from an in-flight chunked admission: its
+        reserved slot and pages free now, its row keeps chunking (group
+        geometry is fixed) but never activates; the group's chunk count
+        shrinks to the surviving members' longest prompt."""
+        slot = pf.slots[i]
+        if slot is not None:
+            self._reserved.discard(slot)
+            if self.paged and slot in self.pool.slot_pages:
+                self.pool.free_slot(slot)
+            pf.slots[i] = None
+        pf.dead.add(i)
+        alive = [j for j in range(len(pf.reqs)) if j not in pf.dead]
+        if not alive:
+            self._pf = None
+        else:
+            pf.n_chunks = max(-(-len(pf.reqs[j].prompt) // pf.chunk)
+                              for j in alive)
+
+    def _shed_victim(self, req: Request) -> Optional[Request]:
+        """Overload: whom to shed when the admission queue sits at
+        ``queue_cap``.  "reject" sheds the arrival, "oldest" the longest-
+        queued request, "lowest-priority" the lowest-priority queued
+        request unless the arrival is lower still (ties reject the
+        arrival — stable under an equal-priority flood).  The returned
+        victim is already off the queue."""
+        if self.shed_policy == "reject":
+            return req
+        if self.shed_policy == "oldest":
+            return self.queue.popleft()
+        victim = min(self.queue, key=lambda r: r.priority)
+        if req.priority <= victim.priority:
+            return req
+        self.queue = deque(r for r in self.queue if r is not victim)
+        return victim
+
+    def _reap(self, clock, results: List[RequestResult]) -> None:
+        """Retire deadline-expired work at a segment boundary: queued
+        requests time out before admission (empty tokens), chunking
+        members leave their group, resident slots freeze via the active
+        mask and surface their partial tokens.  Runs at every admission
+        point, so expiry always lands BETWEEN segments."""
+        if self.deadline_s is None and not self._any_deadlines:
+            return
+        now = clock()
+
+        def expired(r):
+            d = self._eff_deadline(r)
+            return d is not None and now - r.arrival_s > d
+
+        if any(expired(r) for r in self.queue):
+            keep: deque = deque()
+            for r in self.queue:
+                if expired(r):
+                    self._emit(results, r, np.zeros((0,), np.int32),
+                               now, now, "timeout")
+                else:
+                    keep.append(r)
+            self.queue = keep
+        pf = self._pf
+        if pf is not None:
+            for i, r in enumerate(pf.reqs):
+                if i not in pf.dead and expired(r):
+                    self._emit(results, r, np.zeros((0,), np.int32),
+                               now, now, "timeout")
+                    self._kill_pf_member(pf, i)
+        for i, st in enumerate(self._slot):
+            if st is not None and expired(st.req):
+                self._emit(results, st.req, self._partial(st), st.admit_s,
+                           now, "timeout", first_s=st.first_token_s)
+                self._retire_slot(i)
+
+    def cancel(self, rid: int, now: float = 0.0) -> bool:
+        """Cancel a request wherever it lives — queued (empty tokens),
+        mid-chunked-admission, or resident (partial tokens, slot and
+        pages freed exactly like a normal retirement; co-resident slots
+        untouched).  Returns False for unknown or already-finished rids.
+        The result surfaces at the next admission point with status
+        "cancelled"."""
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue = deque(x for x in self.queue if x is not r)
+                self._emit(None, r, np.zeros((0,), np.int32), now, now,
+                           "cancelled")
+                return True
+        pf = self._pf
+        if pf is not None:
+            for i, r in enumerate(pf.reqs):
+                if r.rid == rid and i not in pf.dead:
+                    self._emit(None, r, np.zeros((0,), np.int32), now, now,
+                               "cancelled")
+                    self._kill_pf_member(pf, i)
+                    return True
+        for i, st in enumerate(self._slot):
+            if st is not None and st.req.rid == rid:
+                self._emit(None, st.req, self._partial(st), st.admit_s,
+                           now, "cancelled", first_s=st.first_token_s)
+                self._retire_slot(i)
+                return True
+        return False
+
+    @property
+    def _any_deadlines(self) -> bool:
+        return (any(r.deadline_s is not None for r in self.queue)
+                or (self._pf is not None
+                    and any(r.deadline_s is not None
+                            for r in self._pf.reqs))
+                or any(s is not None and s.req.deadline_s is not None
+                       for s in self._slot))
+
+    def _scrub_all(self, clock, results: List[RequestResult]) -> None:
+        """A device-side segment failure invalidated the DONATED resident
+        caches mid-dispatch: fail every in-flight request (resident slots
+        keep their pre-segment partial tokens, chunking members surface
+        empty), rebuild the resident cache and page pool from scratch
+        (registered prefix pages live in the cache, so the registry dies
+        with it), and keep serving the queue."""
+        now = clock()
+        for i, st in enumerate(self._slot):
+            if st is None:
+                continue
+            self._emit(results, st.req, self._partial(st), st.admit_s,
+                       now, "failed", first_s=st.first_token_s)
+            self._slot[i] = None
+        pf = self._pf
+        if pf is not None:
+            for i, r in enumerate(pf.reqs):
+                if i not in pf.dead:
+                    self._emit(results, r, np.zeros((0,), np.int32),
+                               now, now, "failed")
+            self._pf = None
+        self._reserved.clear()
+        self._init_resident()
+
+    def health(self) -> Dict[str, object]:
+        """Liveness / degradation snapshot for a serving front door:
+        occupancy, watchdog timings, failure counters, and the last
+        recorded error."""
+        pf = self._pf
+        return {
+            "resident": sum(s is not None for s in self._slot),
+            "queued": len(self.queue),
+            "reserved": len(self._reserved),
+            "chunking": 0 if pf is None else len(pf.reqs) - len(pf.dead),
+            "pool_free": self.pool.available() if self.paged else None,
+            "segments": self.stats["segments"],
+            "median_segment_s": self._watchdog.median_step_s,
+            "slow_segments": len(self._watchdog.slow_steps),
+            "watchdog_slow": self.stats["watchdog_slow"],
+            "dispatch_failures": self.stats["dispatch_failures"],
+            "proposer_failures": self.stats["proposer_failures"],
+            "spec_degraded": self._spec_degraded,
+            "failed": self.stats["failed"],
+            "shed": self.stats["shed"],
+            "cancelled": self.stats["cancelled"],
+            "timeout": self.stats["timeout"],
+            "last_error": self._last_error,
+        }
+
     # -- warmup / reset ------------------------------------------------------
 
-    def reset(self) -> None:
-        """Zero all slots, the queue, and stats (compiled functions are
-        kept)."""
-        self.stats = {"segments": 0, "useful_tokens": 0, "admitted": 0,
-                      "prefill_s": 0.0, "chunks": 0, "chunk_s": 0.0,
-                      "stall_s": 0.0, "segment_s": 0.0,
-                      "spec_rounds": 0, "spec_emitted": 0, "draft_s": 0.0,
-                      "accept_hist": [0] * (self.spec + 1),
-                      "prefix_hits": 0, "prefix_tokens_reused": 0}
-        self._enq_s: Dict[int, float] = {}
+    def _init_resident(self) -> None:
+        """(Re)build the resident cache, page pool, and every per-slot
+        host mirror — shared by ``reset`` and the scrub-all recovery path
+        (a rebuilt cache zeroes registered prefix pages, so the pool and
+        its prefix registry are rebuilt with it)."""
         self.pool = (PagePool(self.pool_pages, self._page_rows)
                      if self.paged else None)
         caches = unstack_group_caches(
@@ -1089,6 +1383,28 @@ class ContinuousEngine:
         self._reserved: Set[int] = set()
         self._pf: Optional[_PrefillGroup] = None
         self._cur_mode: Optional[str] = None
+
+    def reset(self) -> None:
+        """Zero all slots, the queue, and stats (compiled functions are
+        kept)."""
+        self.stats = {"segments": 0, "useful_tokens": 0, "admitted": 0,
+                      "prefill_s": 0.0, "chunks": 0, "chunk_s": 0.0,
+                      "stall_s": 0.0, "segment_s": 0.0,
+                      "spec_rounds": 0, "spec_emitted": 0, "draft_s": 0.0,
+                      "accept_hist": [0] * (self.spec + 1),
+                      "prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "shed": 0, "cancelled": 0, "timeout": 0, "failed": 0,
+                      "dispatch_failures": 0, "proposer_failures": 0,
+                      "watchdog_slow": 0}
+        self._enq_s: Dict[int, float] = {}
+        self._pending: List[RequestResult] = []
+        self._live: Set[int] = set()
+        self._unfundable: Dict[int, int] = {}
+        self._spec_degraded = False
+        self._spec_fail_streak = 0
+        self._last_error: Optional[str] = None
+        self._watchdog = StepWatchdog()
+        self._init_resident()
         self.queue.clear()
 
     def warmup(self, prompt_lens: Sequence[int]) -> None:
@@ -1123,23 +1439,64 @@ class ContinuousEngine:
         remaining = np.asarray(
             [s.remaining if s else 0 for s in self._slot], np.int32)
         mode = self._cur_mode or self.engine.decode_flags.dsa_mode
+        poison = np.zeros((self.slots,), bool)
+        inj = self.injector
+        if inj is not None:
+            for i, st in enumerate(self._slot):
+                if st is not None and inj.take("nan_logits",
+                                               st.req.rid) is not None:
+                    poison[i] = True
+            if inj.take("dispatch") is not None:
+                # transient dispatch failure: nothing launched, state is
+                # untouched — the serving loop simply retries next round
+                self.stats["dispatch_failures"] += 1
+                return
         t0 = time.monotonic()
-        with self._ctx():
-            tok, caches, keys, active, rem, toks = self._segment(
-                self.engine.params, self._put_b(self._tok), self._caches,
-                self._put_b(self._keys), self._put_b(self._active),
-                self._put_b(self._greedy), self._put_b(self._temps),
-                self._put_b(remaining), flags=self._flags(mode))
-        self._caches = caches
-        self._tok = np.array(tok)           # np.array: writable host copies
-        self._keys = np.array(keys)
-        self._active = np.array(active)
-        toks = np.asarray(toks)                       # (slots, seg_len)
+        self._watchdog.start()
+        if inj is not None:
+            f = inj.take("slow_segment")
+            if f is not None:
+                time.sleep(f.delay_s)   # stall INSIDE the watchdog window
+        try:
+            with self._ctx():
+                tok, caches, keys, active, rem, fin, toks = self._segment(
+                    self.engine.params, self._put_b(self._tok),
+                    self._caches, self._put_b(self._keys),
+                    self._put_b(self._active), self._put_b(self._greedy),
+                    self._put_b(self._temps), self._put_b(remaining),
+                    self._put_b(poison), flags=self._flags(mode))
+            self._caches = caches
+            self._tok = np.array(tok)       # np.array: writable host copies
+            self._keys = np.array(keys)
+            self._active = np.array(active)
+            fin = np.asarray(fin)
+            toks = np.asarray(toks)                   # (slots, seg_len)
+        except Exception as e:              # noqa: BLE001 — fail partially
+            # the dispatched computation itself failed: the DONATED caches
+            # can no longer be trusted — fail the in-flight batch, rebuild,
+            # keep serving the queue
+            self._last_error = repr(e)
+            self.stats["dispatch_failures"] += 1
+            self._scrub_all(clock, results)
+            return
         now = clock()                     # host copies above synced the step
         self.stats["segments"] += 1
         self.stats["segment_s"] += time.monotonic() - t0
+        if self._watchdog.stop(self.stats["segments"]):
+            self.stats["watchdog_slow"] += 1
         for i, st in enumerate(self._slot):
             if st is None:
+                continue
+            if not fin[i]:
+                # non-finite logits row: this slot's sampled tokens are
+                # garbage from the first bad step on — fail ONLY this slot
+                # with its pre-segment tokens (co-resident rows never read
+                # another row's logits, so they are bitwise unaffected)
+                self._last_error = (f"request {st.req.rid}: non-finite "
+                                    f"logits row in decode segment")
+                self._emit(results, st.req, self._partial(st), st.admit_s,
+                           now, "failed", first_s=st.first_token_s)
+                self._retire_slot(i)
                 continue
             emitted = min(st.remaining, self.seg_len)
             st.collected.append(toks[i, :emitted])
@@ -1147,13 +1504,8 @@ class ContinuousEngine:
             st.remaining -= emitted
             self.stats["useful_tokens"] += emitted
             if st.remaining == 0:
-                seq = np.concatenate(
-                    [np.asarray([st.tok0], np.int32)] + st.collected)
-                results.append(RequestResult(
-                    st.req.rid, seq.astype(np.int32),
-                    int(np.asarray(st.req.prompt).shape[-1]),
-                    st.req.n_new, st.req.arrival_s, st.admit_s, now,
-                    first_token_s=st.first_token_s))
+                self._emit(results, st.req, self._partial(st), st.admit_s,
+                           now, "ok", first_s=st.first_token_s)
                 self._slot[i] = None          # slot freed; reset at admit
                 if self.paged:
                     self.pool.free_slot(i)    # non-shared pages return
@@ -1176,6 +1528,7 @@ class ContinuousEngine:
             self._flags(self._cur_mode or self.engine.decode_flags.dsa_mode),
             spec_verify=True)
         t0 = time.monotonic()
+        self._watchdog.start()
         draft_s0 = self.stats["draft_s"]
         rounds_run = 0
         for _ in range(self.spec_rounds):
@@ -1187,7 +1540,24 @@ class ContinuousEngine:
             ctxs = [_ro_view(st.history, st.hist_len) if st is not None
                     else np.zeros((1,), np.int32) for st in self._slot]
             td = time.monotonic()
-            drafts = self.draft.propose(ctxs, self.spec)
+            try:
+                if (self.injector is not None
+                        and self.injector.take("proposer") is not None):
+                    raise FaultError("injected proposer fault")
+                drafts = self.draft.propose(ctxs, self.spec)
+                self._spec_fail_streak = 0
+            except Exception as e:          # noqa: BLE001 — degrade, don't die
+                # a crashing proposer only ever costs SPEED: spec segments
+                # are bitwise plain decode, so this segment falls back to a
+                # plain fused segment (below) and repeated failures stop
+                # consulting the proposer entirely
+                self.stats["draft_s"] += time.monotonic() - td
+                self.stats["proposer_failures"] += 1
+                self._last_error = repr(e)
+                self._spec_fail_streak += 1
+                if self._spec_fail_streak >= 3:
+                    self._spec_degraded = True
+                break
             self.stats["draft_s"] += time.monotonic() - td
             remaining = np.asarray(
                 [st.remaining if st else 0 for st in self._slot], np.int32)
@@ -1219,13 +1589,9 @@ class ContinuousEngine:
                 self.stats["spec_emitted"] += e
                 self.stats["accept_hist"][e - 1] += 1
                 if st.remaining == 0:
-                    seq = np.concatenate(
-                        [np.asarray([st.tok0], np.int32)] + st.collected)
-                    results.append(RequestResult(
-                        st.req.rid, seq.astype(np.int32),
-                        int(np.asarray(st.req.prompt).shape[-1]),
-                        st.req.n_new, st.req.arrival_s, st.admit_s, now,
-                        first_token_s=st.first_token_s))
+                    self._emit(results, st.req, self._partial(st),
+                               st.admit_s, now, "ok",
+                               first_s=st.first_token_s)
                     self._slot[i] = None  # slot freed; reset at admit
                     if self.paged:
                         self.pool.free_slot(i)
@@ -1237,6 +1603,14 @@ class ContinuousEngine:
             self.stats["segments"] += 1
             self.stats["segment_s"] += ((time.monotonic() - t0)
                                         - (self.stats["draft_s"] - draft_s0))
+            if self._watchdog.stop(self.stats["segments"]):
+                self.stats["watchdog_slow"] += 1
+        elif any(s is not None for s in self._slot):
+            # the proposer crashed before any verify round: this segment
+            # degrades to a plain fused segment so resident slots still
+            # make progress (same tokens — spec == plain bitwise)
+            self.run_segment(clock, results)
+            return
         if self._pf is None and not any(s is not None for s in self._slot):
             self._cur_mode = None         # idle: free to switch dsa_mode
 
@@ -1246,7 +1620,8 @@ class ContinuousEngine:
         speculation envelope (``can_speculate`` — per-request overrides
         like DSA-over-MLA fall back), else a plain fused segment."""
         mode = self._cur_mode or self.engine.decode_flags.dsa_mode
-        if self.spec and can_speculate(self.cfg, mode, self.spec):
+        if (self.spec and not self._spec_degraded
+                and can_speculate(self.cfg, mode, self.spec)):
             self.run_spec_segment(clock, results)
         else:
             self.run_segment(clock, results)
@@ -1266,6 +1641,8 @@ class ContinuousEngine:
             self.step_prefill(clock, results)
             if any(s is not None for s in self._slot):
                 self._step_decode(clock, results)
+        results.extend(self._pending)     # e.g. everything shed pre-loop
+        self._pending.clear()
         return {r.rid: r.tokens for r in results}
 
     def serve(self, workload: Sequence[Request]) -> List[RequestResult]:
@@ -1288,6 +1665,13 @@ class ContinuousEngine:
                 self._step_decode(clock, results)
             elif self._pf is None and not self.queue and i < len(items):
                 time.sleep(max(0.0, min(items[i].arrival_s - now, 0.05)))
+            elif self._pf is None and self.queue and self._unfundable:
+                # page-budget-unfundable anchor with nothing else to do:
+                # bounded exponential backoff instead of a busy spin
+                n = max(self._unfundable.values())
+                time.sleep(min(0.001 * (1 << min(n, 6)), 0.05))
+        results.extend(self._pending)
+        self._pending.clear()
         return sorted(results, key=lambda r: r.rid)
 
 
@@ -1346,10 +1730,13 @@ class StaticBatchServer:
 def synthetic_workload(n_requests: int, *, rate_rps: float,
                        prompt_lens=(64, 512), n_new_range=(16, 256),
                        vocab: int = 512, seed: int = 0,
-                       greedy: bool = True) -> List[Request]:
+                       greedy: bool = True,
+                       deadline_s: Optional[float] = None) -> List[Request]:
     """Open-loop Poisson arrival process with mixed request shapes:
     exponential inter-arrival gaps at ``rate_rps``, prompt lengths uniform
-    over [prompt_lens[0], prompt_lens[1]], n_new uniform over n_new_range."""
+    over [prompt_lens[0], prompt_lens[1]], n_new uniform over n_new_range.
+    ``deadline_s`` stamps every request with that latency budget (SLO
+    workloads; None leaves them budgetless)."""
     rng = np.random.default_rng(seed)
     t = 0.0
     out = []
@@ -1359,27 +1746,42 @@ def synthetic_workload(n_requests: int, *, rate_rps: float,
         n = int(rng.integers(n_new_range[0], n_new_range[1] + 1))
         prompt = rng.integers(1, vocab - 4, size=(plen,)).astype(np.int32)
         out.append(Request(rid, prompt, n, greedy=greedy, seed=rid,
-                           arrival_s=t))
+                           arrival_s=t, deadline_s=deadline_s))
     return out
 
 
 def summarize(results: Sequence[RequestResult],
               wall_s: float) -> Dict[str, float]:
     """Serving metrics: goodput (delivered new tokens per wall second),
-    request latency percentiles, and time-to-first-token percentiles.
-    Empty ``results`` (an aborted serve, a smoke bench that admitted
-    nothing) returns zeroed metrics instead of tracebacking on the
-    percentile of an empty array."""
-    if not results:
-        return {"n_requests": 0, "delivered_tokens": 0,
-                "wall_s": round(wall_s, 3), "goodput_tok_s": 0.0,
-                "p50_latency_s": 0.0, "p95_latency_s": 0.0,
-                "mean_latency_s": 0.0, "p50_ttft_s": 0.0,
-                "p95_ttft_s": 0.0}
-    lats = np.asarray([r.latency_s for r in results])
-    ttfts = np.asarray([r.ttft_s for r in results])
-    toks = sum(r.n_new for r in results)
-    return {
+    request latency percentiles, and time-to-first-token percentiles —
+    computed over COMPLETED (``status == "ok"``) results only, so shed or
+    timed-out requests don't inflate goodput; per-status counts and the
+    SLO-attainment fraction (share of completed deadline-carrying results
+    that finished within their budget) ride alongside.  All-ok result
+    sets report exactly the pre-status numbers.  Empty ``results`` (an
+    aborted serve, a smoke bench that admitted nothing) returns zeroed
+    metrics instead of tracebacking on the percentile of an empty
+    array."""
+    counts = {f"n_{s}": 0 for s in STATUSES}
+    for r in results:
+        counts[f"n_{r.status}"] += 1
+    ok = [r for r in results if r.status == "ok"]
+    budgeted = [r for r in ok if r.deadline_s is not None]
+    slo = (round(sum(r.latency_s <= r.deadline_s for r in budgeted)
+                 / len(budgeted), 4) if budgeted else 1.0)
+    if not ok:
+        out = {"n_requests": len(results), "delivered_tokens": 0,
+               "wall_s": round(wall_s, 3), "goodput_tok_s": 0.0,
+               "p50_latency_s": 0.0, "p95_latency_s": 0.0,
+               "mean_latency_s": 0.0, "p50_ttft_s": 0.0,
+               "p95_ttft_s": 0.0}
+        out.update(counts)
+        out["slo_attainment"] = slo
+        return out
+    lats = np.asarray([r.latency_s for r in ok])
+    ttfts = np.asarray([r.ttft_s for r in ok])
+    toks = sum(r.n_new for r in ok)
+    out = {
         "n_requests": len(results),
         "delivered_tokens": int(toks),
         "wall_s": round(wall_s, 3),
@@ -1390,3 +1792,6 @@ def summarize(results: Sequence[RequestResult],
         "p50_ttft_s": round(float(np.percentile(ttfts, 50)), 3),
         "p95_ttft_s": round(float(np.percentile(ttfts, 95)), 3),
     }
+    out.update(counts)
+    out["slo_attainment"] = slo
+    return out

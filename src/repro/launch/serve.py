@@ -51,7 +51,9 @@ def _serving_config(cfg, args, max_len, dsa_on, mesh) -> ServingConfig:
         kv_quant=args.kv_quant,
         slots=args.slots or args.batch, seg_len=args.seg_len,
         spec=args.spec, max_mode_wait_s=args.max_mode_wait,
-        paged=args.paged, pool_pages=args.pool_pages or None)
+        paged=args.paged, pool_pages=args.pool_pages or None,
+        deadline_s=args.deadline, queue_cap=args.queue_cap or None,
+        shed_policy=args.shed_policy)
 
 
 def _serve_continuous(cfg, args, params, config):
@@ -73,6 +75,13 @@ def _serve_continuous(cfg, args, params, config):
           f"p50 {s['p50_latency_s']:.2f} s / p95 {s['p95_latency_s']:.2f} s "
           f"latency ({int(eng.stats['segments'])} segments, "
           f"{int(eng.stats['admitted'])} admissions)")
+    dropped = [f"{s[k]} {k[2:]}" for k in ("n_timeout", "n_cancelled",
+                                           "n_failed", "n_shed") if s[k]]
+    if dropped or args.deadline is not None:
+        slo = (f", SLO attainment {s['slo_attainment']:.0%}"
+               if args.deadline is not None else "")
+        print(f"lifecycle : {s['n_ok']} ok"
+              + ("".join(f", {d}" for d in dropped)) + slo)
     return results
 
 
@@ -129,6 +138,17 @@ def main(argv=None):
                     help="quantized K/V cache storage dtype with per-row "
                          "scales, dequantized on gather (default: off; "
                          "gathered top-k attention stays full precision)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request latency budget in seconds "
+                         "(--continuous): requests retire with status "
+                         "'timeout' past it (default: no deadlines)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bounded admission queue for --continuous "
+                         "(0 = unbounded); overflow sheds per "
+                         "--shed-policy with status 'shed'")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "oldest", "lowest-priority"],
+                    help="whom to shed when the queue is at --queue-cap")
     ap.add_argument("--max-mode-wait", type=float, default=None,
                     help="seconds a queued other-dsa_mode request may "
                          "wait before forcing a drain/mode-switch "

@@ -170,3 +170,91 @@ def test_block_indices_within_range(nb, seed):
     assert bool(jnp.all((idx >= 0) & (idx < 8)))
     # every row keeps at least the local block
     assert bool(jnp.all(jnp.any(ok, axis=-1)))
+
+
+# -- serving chaos: random lifecycles never leak slots or pages ---------------
+
+_CHAOS = {}
+
+
+def _chaos_engine():
+    """Module-cached paged ContinuousEngine (compiling per example would
+    dominate the property run; reset() re-zeroes all state per example)."""
+    if "ce" not in _CHAOS:
+        from repro.configs import get_config, reduced
+        from repro.inference.scheduler import ContinuousEngine
+        from repro.models.transformer import init_model
+        cfg = reduced(get_config("stablelm_3b"))
+        params, _ = init_model(jax.random.PRNGKey(0), cfg)
+        _CHAOS["cfg"] = cfg
+        _CHAOS["ce"] = ContinuousEngine(
+            cfg, params, slots=2, max_len=64, seg_len=4, paged=True,
+            queue_cap=4, shed_policy="oldest")
+    return _CHAOS["cfg"], _CHAOS["ce"]
+
+
+@given(st.lists(st.tuples(st.integers(4, 24),                # prompt len
+                          st.integers(1, 6),                 # n_new
+                          st.one_of(st.none(),
+                                    st.floats(2.0, 40.0)),   # deadline_s
+                          st.integers(0, 3)),                # priority
+                min_size=1, max_size=5),
+       st.lists(st.integers(0, 4), max_size=3),              # cancel rids
+       st.booleans(),                                        # arm nan fault
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None, derandomize=True, database=None)
+def test_serving_chaos_never_leaks_slots_or_pages(shapes, cancels, nan,
+                                                  seed):
+    """Random request shapes / deadlines / priorities under a bounded
+    queue, random mid-flight cancellations, and an optionally armed NaN
+    fault: the engine always drains, every submitted rid surfaces exactly
+    one typed result, no slot/reservation/group survives, and the page
+    pool ends whole with every page free XOR refcounted."""
+    from repro.inference.faults import Fault, FaultInjector
+    from repro.inference.scheduler import STATUSES
+    cfg, ce = _chaos_engine()
+    ce.reset()
+    rng = np.random.default_rng(seed)
+    reqs = []
+    from repro.inference.scheduler import Request
+    for rid, (l, n, dl, pr) in enumerate(shapes):
+        reqs.append(Request(
+            rid, rng.integers(1, cfg.vocab - 4, size=(l,)).astype(np.int32),
+            n, seed=rid, deadline_s=dl, priority=pr))
+    ce.injector = (FaultInjector(Fault("nan_logits", after=1, count=2))
+                   if nan else None)
+    t = [0.0]
+    clock = lambda: t[0]
+    results = []
+    try:
+        for r in reqs:
+            ce.submit(r)
+        steps = 0
+        while ce.has_work():
+            assert steps < 400, "chaos schedule failed to drain"
+            if steps < len(cancels):
+                ce.cancel(cancels[steps], now=t[0])
+            ce.admit_ready(clock, results)
+            ce.step_prefill(clock, results)
+            if any(s is not None for s in ce._slot):
+                ce._step_decode(clock, results)
+            t[0] += 1.0
+            steps += 1
+        results.extend(ce._pending)
+        ce._pending.clear()
+    finally:
+        ce.injector = None
+    # exactly one typed result per submitted rid
+    assert sorted(r.rid for r in results) == [r.rid for r in reqs]
+    assert all(r.status in STATUSES for r in results)
+    # nothing resident, reserved, chunking, queued, or live
+    assert all(s is None for s in ce._slot)
+    assert not ce._reserved and ce._pf is None
+    assert not ce.queue and not ce._live and not ce._unfundable
+    # page pool whole: every page free XOR held, all returned
+    pool = ce.pool
+    freed = set(pool.free)
+    held = {p for p in range(1, pool.n_pages) if pool.ref[p] > 0}
+    assert not freed & held
+    assert freed | held == set(range(1, pool.n_pages))
+    assert pool.available() == ce.pool_pages - 1
