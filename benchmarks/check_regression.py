@@ -22,7 +22,9 @@ chunked vs blocking admission (higher is better), plus the chunked /
 blocking long-prompt p95 latency ratio and the paged prefix-reuse pair —
 slots-per-GiB vs the dense long-prompt engine (higher is better; pure
 byte counts, so it gates at smoke too) and prefix-hit / paged-baseline
-p95 TTFT (lower is better, full runs only).  A value fails
+p95 TTFT (lower is better, full runs only).  The traced / untraced
+goodput ratio additionally gates against an absolute 0.95 floor on full
+runs (telemetry's overhead promise).  A value fails
 when it worsens by more than ``--threshold`` relative to the baseline
 run.  Missing baselines pass with a notice (the first run on a new
 configuration has nothing to gate against).
@@ -69,7 +71,18 @@ _SERVE_RATIO_KEYS = {
     # traffic (full runs only — smoke overload goodput is pure noise,
     # where only the continuous_overload row's presence gates)
     "goodput_ratio_shed_vs_unbounded": True,
+    # telemetry overhead discipline: goodput of the fully-traced engine
+    # over the untraced one on the same mixed traffic (value-gated on full
+    # runs against both the baseline and the absolute floor below; at
+    # smoke scale only the key's presence gates)
+    "goodput_ratio_traced_vs_untraced": True,
 }
+
+# the traced engine must keep at least this fraction of untraced goodput
+# (the telemetry subsystem's acceptance floor, not just no-regression):
+# spans/metrics/compile-watching are host-side and sampled, so a larger
+# bill means telemetry leaked onto the hot path
+_TRACED_GOODPUT_FLOOR = 0.95
 
 # the quantized cache must pack at least this many times the slots of the
 # fp32 cache (the acceptance floor, not just no-regression-vs-baseline):
@@ -178,17 +191,19 @@ def check_serve(threshold: float, path: str = "") -> int:
         keys = {"goodput_ratio_chunked_vs_blocking": True,
                 "slots_per_gib_ratio_prefix_vs_dense": True,
                 "slots_per_gib_ratio_quant_vs_fp32": True}
-        if ("goodput_ratio_sharded_vs_single" in br
-                and "goodput_ratio_sharded_vs_single" not in nr):
+        for key in ("goodput_ratio_sharded_vs_single",
+                    "goodput_ratio_traced_vs_untraced"):
             # presence-only at smoke: forced host devices share the same
-            # cores so the VALUE is noise, but the sharded serving mode
+            # cores (sharded) and millisecond requests swing wildly
+            # (traced), so the VALUES are noise, but either ratio
             # vanishing from the bench is a structural regression
-            print("FAIL: serve ratio goodput_ratio_sharded_vs_single "
-                  "missing from latest smoke run")
-            return 1
+            if key in br and key not in nr:
+                print(f"FAIL: serve ratio {key} missing from latest "
+                      "smoke run")
+                return 1
         for mode in ("continuous_paged", "continuous_prefix_hit",
                      "continuous_quant", "continuous_paged_quant",
-                     "continuous_overload"):
+                     "continuous_overload", "continuous_traced"):
             # same presence logic for the paged serving rows: their VALUES
             # are noise at smoke, their disappearance is structural
             if (any(r.get("mode") == mode for r in base.get("rows", []))
@@ -207,6 +222,16 @@ def check_serve(threshold: float, path: str = "") -> int:
             return 1
         print(f"ok: serve slots_per_gib_ratio_quant_vs_fp32 {v:.3f} >= "
               f"{_QUANT_SLOTS_PER_GIB_FLOOR} floor")
+    if not new.get("smoke") and "goodput_ratio_traced_vs_untraced" in nr:
+        # absolute value gate, full runs only (smoke goodput is noise):
+        # telemetry must stay off the hot path
+        v = nr["goodput_ratio_traced_vs_untraced"]
+        if v < _TRACED_GOODPUT_FLOOR:
+            print(f"FAIL: serve goodput_ratio_traced_vs_untraced {v:.3f} "
+                  f"below the {_TRACED_GOODPUT_FLOOR} floor")
+            return 1
+        print(f"ok: serve goodput_ratio_traced_vs_untraced {v:.3f} >= "
+              f"{_TRACED_GOODPUT_FLOOR} floor")
     return _check_ratio_keys(nr, br, keys, threshold, "serve")
 
 

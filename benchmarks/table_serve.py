@@ -69,6 +69,15 @@ Their ``slots_per_gib_ratio_quant_vs_fp32`` (vs the fp32 long-prompt
 engine) is a pure byte count — deterministic, so it is emitted and
 regression-gated at smoke scale too.
 
+A ``continuous_traced`` mode serves the SAME mixed traffic as
+``continuous`` with full telemetry attached (request spans, segment
+events, compile watching, metrics registry — ``Telemetry(sample_every=8)``
+on the ServingConfig): its same-run ``goodput_ratio_traced_vs_untraced``
+is the overhead-discipline number the telemetry subsystem promises
+(>= 0.95 on full runs; smoke-scale goodput is noise so smoke only gates
+the key's presence), and its Chrome trace is written to
+``trace_serve.json`` at the repo root for the CI artifact.
+
 Every resident engine's row carries ``cache_bytes`` (resident cache tree
 bytes) and ``slots_per_gib``; the ratio row derives
 ``slots_per_gib_ratio_prefix_vs_dense`` (the memory win of sharing, vs the
@@ -86,6 +95,7 @@ strictly lower p95 on the long-prompt-heavy workload; prefix-hit serving
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import numpy as np
@@ -96,7 +106,10 @@ from repro.inference.engine import Engine
 from repro.inference.scheduler import (ContinuousEngine, Request,
                                        StaticBatchServer, summarize,
                                        synthetic_workload)
+from repro.inference.telemetry import Telemetry
 from repro.models.transformer import init_model
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _measure(server, workload):
@@ -208,6 +221,11 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     shed = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
                             seg_len=seg_len, queue_cap=max(2, slots),
                             shed_policy="oldest")
+    # cont's exact config with full telemetry attached: the traced /
+    # untraced goodput ratio IS the subsystem's overhead claim
+    traced = ContinuousEngine(cfg, params, slots=slots, max_len=max_len,
+                              seg_len=seg_len,
+                              telemetry=Telemetry(sample_every=8))
     cont_m = None
     if mesh:
         ndev = jax.device_count()
@@ -280,6 +298,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     for eng, lens, wls in ((cont, mixed_lens, wl_warm),
                            (block, mixed_lens, wl_warm),
                            (shed, mixed_lens, wl_over_warm),
+                           (traced, mixed_lens, wl_warm),
                            (cont_l, long_lens, wl_long_warm),
                            (block_l, long_lens, wl_long_warm),
                            (quant_l, long_lens, wl_long_warm),
@@ -293,6 +312,10 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     # the loop's warm serve was a registry MISS; this pass HITs it, so the
     # seed/skip programs are compiled before any measured trial
     prefix_l.serve(list(wl_pfx_warm))
+    # warmup() + the warm serve above populated traced's telemetry; wipe
+    # metrics/spans/events (the compile log survives by design) so the
+    # exported trace + registry cover measured traffic only
+    traced.telemetry.reset()
     bucketed = StaticBatchServer(Engine(cfg, params, max_len=max_len),
                                  batch_size=slots)
     bucketed.serve(list(wl_warm))
@@ -302,11 +325,12 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     cont_long_runs, block_long_runs, cont_mesh_runs = [], [], []
     paged_runs, prefix_runs = [], []
     quant_runs, paged_quant_runs = [], []
-    overload_runs, overload_unb_runs = [], []
+    overload_runs, overload_unb_runs, traced_runs = [], [], []
     for _ in range(trials):       # interleave: CPU drift hits modes equally
         bucketed_runs.append(_measure(bucketed, wl))
         block_runs.append(_measure(block, wl))
         cont_runs.append(_measure(cont, wl))
+        traced_runs.append(_measure(traced, wl))
         overload_runs.append(_measure(shed, wl_over))
         if not smoke:
             # the unbounded baseline on the same overload traffic (full
@@ -336,6 +360,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     s_cont_l, s_block_l = _best(cont_long_runs), _best(block_long_runs)
     s_paged, s_prefix = _best(paged_runs), _best(prefix_runs)
     s_quant, s_pquant = _best(quant_runs), _best(paged_quant_runs)
+    s_traced = _best(traced_runs)
     s_over = _best(overload_runs)
     s_over_unb = _best(overload_unb_runs) if overload_unb_runs else None
     ratios = {
@@ -345,6 +370,10 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             s_cont["goodput_tok_s"] / max(s_buck["goodput_tok_s"], 1e-9),
         "goodput_ratio_chunked_vs_blocking":
             s_cont["goodput_tok_s"] / max(s_block["goodput_tok_s"], 1e-9),
+        # telemetry overhead discipline: traced serving keeps >= 95% of
+        # untraced goodput on full runs (smoke gates presence only)
+        "goodput_ratio_traced_vs_untraced":
+            s_traced["goodput_tok_s"] / max(s_cont["goodput_tok_s"], 1e-9),
     }
     s_cont_m = _best(cont_mesh_runs) if cont_mesh_runs else None
     if s_cont_m is not None:
@@ -388,6 +417,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                     ("continuous_paged", s_paged),
                     ("continuous_prefix_hit", s_prefix),
                     ("continuous_overload", s_over),
+                    ("continuous_traced", s_traced),
                     *((("continuous_sharded", s_cont_m),)
                       if s_cont_m is not None else ())):
         stall = s.get("admission_stall_frac")
@@ -440,6 +470,14 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             "table_serve/sharded_vs_single", 0.0,
             f"{ratios['goodput_ratio_sharded_vs_single']:.2f}x_goodput_"
             f"dp{len(cont_m.mesh.devices.flat)}"))
+    # the measured trials' Chrome trace (perfetto-loadable) — the CI
+    # bench-gate uploads this next to the BENCH json
+    trace_path = os.path.join(_REPO_ROOT, "trace_serve.json")
+    traced.telemetry.write_chrome_trace(trace_path)
+    lines.append(row(
+        "table_serve/telemetry", 0.0,
+        f"{ratios['goodput_ratio_traced_vs_untraced']:.2f}x_traced_"
+        f"{len(traced.telemetry.events)}ev_{trace_path}"))
     lines.append(row("table_serve/json", 0.0, path))
     return lines
 

@@ -80,6 +80,10 @@ class ServingConfig:
     deadline_s: Optional[float] = None   # default per-request latency budget
     admit_retries: int = 8           # unfundable-anchor retries before shed
     injector: Any = None             # FaultInjector (None = no injection)
+    # -- observability -------------------------------------------------------
+    telemetry: Any = None            # inference.telemetry.Telemetry; None
+                                     # (default) is bitwise-inert: no jit
+                                     # wrapping, no hooks, no extra dispatch
 
     def __post_init__(self):
         for name, val, valid in (("dsa_mode", self.dsa_mode, DSA_MODES),

@@ -247,6 +247,18 @@ class Engine:
         self._decode_loop = jax.jit(
             _decode_loop, static_argnames=("n_steps", "greedy", "flags"),
             donate_argnums=(2,))
+        # compile-event observability: with telemetry enabled every jitted
+        # entry point is wrapped in a host-side watcher that records each
+        # distinct (program, shape-signature) dispatch; the wrapper forwards
+        # calls unchanged (donation included), and telemetry=None (default)
+        # leaves the bare jits in place — bitwise-inert
+        self.telemetry = c.telemetry
+        if self.telemetry is not None:
+            tel = self.telemetry
+            self._prefill = tel.wrap_jit("prefill", self._prefill)
+            self._decode = tel.wrap_jit("decode", self._decode)
+            self._decode_loop = tel.wrap_jit("decode_loop",
+                                             self._decode_loop)
 
     # -- mesh placement -----------------------------------------------------
 
@@ -329,7 +341,8 @@ class Engine:
     def _spec_decoder(self, k: int):
         from repro.inference.speculative import SpeculativeDecoder
         if k not in self._spec_decoders:
-            self._spec_decoders[k] = SpeculativeDecoder(self.cfg, k)
+            self._spec_decoders[k] = SpeculativeDecoder(
+                self.cfg, k, telemetry=self.telemetry)
         return self._spec_decoders[k]
 
     def _generate_spec(self, prompts, n_new: int, spec: int, draft, extras,

@@ -76,6 +76,9 @@ class FaultInjector:
     def __init__(self, *faults: Fault):
         self.faults = list(faults)
         self.fired: List[Tuple[str, Optional[int]]] = []
+        # optional Telemetry; the engine wires its own in before each
+        # consult so every fired fault lands on the trace timeline
+        self.telemetry = None
 
     def take(self, point: str, rid: Optional[int] = None
              ) -> Optional[Fault]:
@@ -92,5 +95,7 @@ class FaultInjector:
                 continue
             f.count -= 1
             self.fired.append((point, rid))
+            if self.telemetry is not None:
+                self.telemetry.on_fault(point, rid)
             return f
         return None

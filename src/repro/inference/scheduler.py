@@ -89,6 +89,15 @@ device-side segment failure fails the in-flight batch, rebuilds the
 resident cache, and keeps serving the queue (``health()`` snapshots all
 of it).  With no deadlines, no queue bound, and no ``FaultInjector``
 armed, every path above is bitwise inert (pinned by tests/test_faults.py).
+
+Observability: ``ServingConfig.telemetry`` (inference.telemetry.Telemetry)
+adds request spans + a Chrome-trace timeline of chunk bursts / decode
+segments / spec rounds / faults, a Prometheus metrics registry fed from
+the same ``_emit``/``health()`` surfaces (the three can never disagree),
+a compile-event watcher that makes the recompilation contract above a
+live, CI-assertable metric, and a sampled DSA block-selection probe
+(``_sparsity_probe``).  ``telemetry=None`` (default) is bitwise-inert —
+no wrapper, no hook, no extra dispatch (pinned by tests/test_telemetry.py).
 """
 from __future__ import annotations
 
@@ -410,7 +419,8 @@ class ContinuousEngine:
         self.spec_rounds = (c.spec_rounds if c.spec_rounds is not None
                             else max(1, seg_len // (self.spec + 1))
                             ) if self.spec else 0
-        self._spec = SpeculativeDecoder(cfg, self.spec) if self.spec else None
+        self._spec = SpeculativeDecoder(
+            cfg, self.spec, telemetry=c.telemetry) if self.spec else None
         # mode-affine starvation aging: a queued request whose dsa_mode
         # can't join the current segments forces a drain/mode-switch once
         # it has waited this long (None = wait for a natural idle drain)
@@ -613,6 +623,28 @@ class ContinuousEngine:
                               static_argnames=("flags", "sel_len"),
                               donate_argnums=(1,))
 
+        # observability (inference.telemetry): telemetry=None (default) is
+        # bitwise-inert — no wrapper, no hook, no extra dispatch.  With a
+        # Telemetry bound, every jitted entry point gains a host-side
+        # compile watcher (the engine's own prefill/decode jits were
+        # wrapped in Engine.__init__ from the same config), the request
+        # lifecycle and segment/chunk/fault events land on a trace
+        # timeline, and once per ``sample_every`` segments a sel_probe
+        # replay samples the DSA block selection (see _sparsity_probe).
+        self.telemetry = c.telemetry
+        self._probe = None              # lazily-built sparsity probe jit
+        self._probe_prev: Dict[int, tuple] = {}   # slot -> (rid, blocks)
+        if self.telemetry is not None:
+            tel = self.telemetry
+            tel.bind_engine(self)
+            self._insert = tel.wrap_jit("insert", self._insert)
+            self._insert_paged = tel.wrap_jit("insert_paged",
+                                              self._insert_paged)
+            self._zero_pages = tel.wrap_jit("zero_pages", self._zero_pages)
+            self._seed = tel.wrap_jit("seed", self._seed)
+            self._segment = tel.wrap_jit("segment", self._segment)
+            self._chunk = tel.wrap_jit("chunk", self._chunk)
+
         self.queue: deque = deque()
         self.reset()     # resident caches + host mirrors of device carries
 
@@ -731,6 +763,8 @@ class ContinuousEngine:
         self._live.add(req.rid)
         self._enq_s[req.rid] = time.monotonic()
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(req.rid, len(self.queue))
 
     def free_slots(self) -> List[int]:
         return [i for i in range(self.slots)
@@ -804,6 +838,8 @@ class ContinuousEngine:
                     return 0          # never slotted: staging only
                 return self._pages_needed(r) - n_sh + shared_pending
 
+            if self.injector is not None:
+                self.injector.telemetry = self.telemetry
             forced = (self.injector is not None
                       and self.injector.take("pool_exhaust") is not None)
             need0 = cost(first)
@@ -879,6 +915,8 @@ class ContinuousEngine:
         self._slot[slot] = _SlotState(req, tok0, [], req.n_new - 1, admit_s,
                                       first_token_s=first_s, history=hist,
                                       hist_len=prompt.size + 1)
+        if self.telemetry is not None:
+            self.telemetry.on_first_token(req.rid)
 
     def _admit_group(self, slots: List[int], group: List[Request], mode,
                      clock, results: List[RequestResult]) -> None:
@@ -898,9 +936,14 @@ class ContinuousEngine:
             p = np.asarray(r.prompt, np.int32)
             mat[j, :len(p)] = p
             lengths[j] = len(p)
+        tel = self.telemetry
+        tt0 = tel.now() if tel is not None else 0.0
         last, pcaches, tp = self.engine.prefill(mat, cache_len=bucket,
                                                 lengths=lengths,
                                                 dsa_mode=mode)
+        if tel is not None:
+            tel.on_admission(tt0, tp, len(group), bucket, mode,
+                             kind="blocking")
         self.stats["prefill_s"] += tp
         if any(s is not None for s in self._slot):
             self.stats["stall_s"] += tp   # resident decoders sat idle
@@ -912,6 +955,8 @@ class ContinuousEngine:
             tok0, key = self._sample_tok0(last[j:j + 1, -1], req)
             self.stats["useful_tokens"] += 1      # the prefill-sampled tok0
             if req.n_new == 1:   # first token IS the whole generation
+                if self.telemetry is not None:
+                    self.telemetry.on_first_token(req.rid)
                 self._emit(results, req, np.asarray([tok0], np.int32),
                            now, now, "ok", first_s=now)
                 continue
@@ -1022,6 +1067,11 @@ class ContinuousEngine:
                                  lengths, j=skip, n_chunks=n_chunks, mat=mat,
                                  tbls=tbls)
         self.stats["admitted"] += len(group)
+        if self.telemetry is not None:
+            self.telemetry.on_admission(self.telemetry.now(), 0.0,
+                                        len(group), bucket, mode,
+                                        kind="chunked",
+                                        prefix_skip_chunks=skip)
 
     def _chunk_burst(self) -> int:
         """How many chunks to run before yielding to a decode segment.
@@ -1087,6 +1137,8 @@ class ContinuousEngine:
                 tok0, key = self._sample_tok0(last[i:i + 1], req)
                 self.stats["useful_tokens"] += 1
                 if req.n_new == 1:        # retires without touching a slot
+                    if self.telemetry is not None:
+                        self.telemetry.on_first_token(req.rid)
                     self._emit(results, req, np.asarray([tok0], np.int32),
                                now, now, "ok", first_s=now)
                     continue
@@ -1112,6 +1164,9 @@ class ContinuousEngine:
         self.stats["chunk_s"] += dt
         if stalled:
             self.stats["stall_s"] += dt
+        if self.telemetry is not None:
+            self.telemetry.on_chunk_burst(dt, burst, pf.bucket, pf.mode,
+                                          len(pf.reqs))
         if pf.j >= pf.n_chunks:
             self._pf = None               # all members inserted already
 
@@ -1172,6 +1227,11 @@ class ContinuousEngine:
             int(np.asarray(req.prompt).shape[-1]), req.n_new,
             req.arrival_s, admit_s, finish_s, first_token_s=first_s,
             status=status, deadline_s=self._eff_deadline(req))
+        if self.telemetry is not None:
+            # the single retirement path: every result feeds the metrics
+            # registry exactly once, so the Prometheus per-status counters
+            # can never disagree with summarize() over the same results
+            self.telemetry.on_retire(res)
         (results if results is not None else self._pending).append(res)
 
     def _partial(self, st: _SlotState) -> np.ndarray:
@@ -1406,6 +1466,13 @@ class ContinuousEngine:
         self._watchdog = StepWatchdog()
         self._init_resident()
         self.queue.clear()
+        self._probe_prev.clear()
+        if self.telemetry is not None:
+            # the metrics registry, trace ring, and open spans restart
+            # with the engine; the compile log survives (the compiled
+            # programs do too), so health()-after-reset() and a fresh
+            # Prometheus snapshot both read as zeroed
+            self.telemetry.reset()
 
     def warmup(self, prompt_lens: Sequence[int]) -> None:
         """Precompile every admission/chunk/prefill/segment shape for the
@@ -1442,6 +1509,7 @@ class ContinuousEngine:
         poison = np.zeros((self.slots,), bool)
         inj = self.injector
         if inj is not None:
+            inj.telemetry = self.telemetry
             for i, st in enumerate(self._slot):
                 if st is not None and inj.take("nan_logits",
                                                st.req.rid) is not None:
@@ -1477,13 +1545,19 @@ class ContinuousEngine:
             # keep serving the queue
             self._last_error = repr(e)
             self.stats["dispatch_failures"] += 1
+            if self.telemetry is not None:
+                self.telemetry.on_error(repr(e))
             self._scrub_all(clock, results)
             return
         now = clock()                     # host copies above synced the step
         self.stats["segments"] += 1
-        self.stats["segment_s"] += time.monotonic() - t0
-        if self._watchdog.stop(self.stats["segments"]):
+        seg_wall = time.monotonic() - t0
+        self.stats["segment_s"] += seg_wall
+        slow = self._watchdog.stop(self.stats["segments"])
+        if slow:
             self.stats["watchdog_slow"] += 1
+        ut0 = self.stats["useful_tokens"]
+        n_act = sum(s is not None for s in self._slot)
         for i, st in enumerate(self._slot):
             if st is None:
                 continue
@@ -1509,8 +1583,87 @@ class ContinuousEngine:
                 self._slot[i] = None          # slot freed; reset at admit
                 if self.paged:
                     self.pool.free_slot(i)    # non-shared pages return
+        tel = self.telemetry
+        if tel is not None:
+            tel.on_segment(
+                "decode_segment", seg_wall, mode=mode, active=n_act,
+                tokens=self.stats["useful_tokens"] - ut0,
+                queued=len(self.queue),
+                resident=sum(s is not None for s in self._slot),
+                pool_free=(self.pool.available() if self.paged else None),
+                slow=slow)
+            if (tel.sample_every
+                    and self.stats["segments"] % tel.sample_every == 0):
+                self._sparsity_probe(mode)
         if self._pf is None and not any(s is not None for s in self._slot):
             self._cur_mode = None         # idle: free to switch dsa_mode
+
+    # -- dynamic-sparsity sampling ------------------------------------------
+
+    def _sparsity_probe(self, mode: str) -> None:
+        """Sample the DSA block selection for the CURRENT resident state:
+        replay one decode step with ``RunFlags.sel_probe`` set (a separate
+        non-donating jit — the hot segment program is untouched) and read
+        back ONLY the per-layer selection outputs; XLA dead-code
+        eliminates the attention/MLP compute the probe does not return, so
+        the probe costs roughly the selection path alone.  Records per-
+        slot keep-rate, selected-block churn vs the previous sample of the
+        same request, and cross-layer selection overlap."""
+        tel = self.telemetry
+        flags = self._flags(mode)
+        if not (flags.long_context and flags.dsa_mode in ("block", "kernel")
+                and self.cfg.mla is None):
+            return                      # no materialized block selection
+        if not self._active.any():
+            return
+        if self._probe is None:
+            cfg = self.cfg
+
+            def _probe_fn(params, tok, caches, active, flags):
+                _, new = decode_step(params, cfg, flags, tok, caches,
+                                     active=active)
+                sel = {"sel_idx": [], "sel_ok": [], "sel_kv": []}
+                for path, leaf in \
+                        jax.tree_util.tree_flatten_with_path(new)[0]:
+                    name = _leaf_name(path)
+                    if name in sel:
+                        sel[name].append(leaf)
+                return sel
+
+            self._probe = jax.jit(_probe_fn, static_argnames=("flags",))
+            self._probe = tel.wrap_jit("probe", self._probe)
+        pflags = dataclasses.replace(flags, sel_probe=True)
+        with self._ctx():
+            sel = self._probe(self.engine.params, self._put_b(self._tok),
+                              self._caches, self._put_b(self._active),
+                              flags=pflags)
+        idxs = [np.asarray(x) for x in sel["sel_idx"]]
+        oks = [np.asarray(x) for x in sel["sel_ok"]]
+        kvs = np.asarray(sel["sel_kv"][0])
+        bk = self.cfg.dsa.block_k
+        samples = []
+        for b in range(self.slots):
+            st = self._slot[b]
+            if st is None or not self._active[b]:
+                continue
+            n_valid = max(1, -(-int(kvs[b]) // bk))
+            sets = [frozenset(idx[b][ok[b]].tolist())
+                    for idx, ok in zip(idxs, oks)]
+            keep = float(np.mean([min(1.0, len(s) / n_valid)
+                                  for s in sets]))
+            overlap = None
+            if len(sets) > 1:
+                js = [len(a & c) / max(len(a | c), 1)
+                      for a, c in zip(sets, sets[1:])]
+                overlap = float(np.mean(js))
+            churn = None
+            prev = self._probe_prev.get(b)
+            if prev is not None and prev[0] == st.req.rid and sets[0]:
+                u = len(sets[0] | prev[1])
+                churn = 1.0 - len(sets[0] & prev[1]) / max(u, 1)
+            self._probe_prev[b] = (st.req.rid, sets[0])
+            samples.append((b, st.req.rid, keep, churn, overlap))
+        tel.on_sparsity_sample(self.stats["segments"], samples)
 
     # -- speculative decode segments ----------------------------------------
 
@@ -1530,6 +1683,7 @@ class ContinuousEngine:
         t0 = time.monotonic()
         self._watchdog.start()
         draft_s0 = self.stats["draft_s"]
+        ut0 = self.stats["useful_tokens"]
         rounds_run = 0
         for _ in range(self.spec_rounds):
             if not any(st is not None for st in self._slot):
@@ -1601,10 +1755,21 @@ class ContinuousEngine:
         # bursts against real verify cost, not draft-inflated wall time
         if rounds_run:
             self.stats["segments"] += 1
-            self.stats["segment_s"] += ((time.monotonic() - t0)
-                                        - (self.stats["draft_s"] - draft_s0))
-            if self._watchdog.stop(self.stats["segments"]):
+            seg_dev = ((time.monotonic() - t0)
+                       - (self.stats["draft_s"] - draft_s0))
+            self.stats["segment_s"] += seg_dev
+            slow = self._watchdog.stop(self.stats["segments"])
+            if slow:
                 self.stats["watchdog_slow"] += 1
+            if self.telemetry is not None:
+                self.telemetry.on_segment(
+                    "spec_segment", seg_dev,
+                    mode=flags.dsa_mode,
+                    active=sum(s is not None for s in self._slot),
+                    tokens=self.stats["useful_tokens"] - ut0,
+                    queued=len(self.queue),
+                    resident=sum(s is not None for s in self._slot),
+                    slow=slow, rounds=rounds_run)
         elif any(s is not None for s in self._slot):
             # the proposer crashed before any verify round: this segment
             # degrades to a plain fused segment so resident slots still

@@ -240,13 +240,17 @@ class SpeculativeDecoder:
     state (pending token, caches, per-slot key chains, budgets) is passed
     through, so one decoder serves any number of generations."""
 
-    def __init__(self, cfg: ArchConfig, k: int):
+    def __init__(self, cfg: ArchConfig, k: int, telemetry=None):
         assert k >= 1, "speculative decoding needs at least one draft token"
         self.cfg = cfg
         self.k = k
         self._verify = jax.jit(_make_verify(cfg),
                                static_argnames=("flags",),
                                donate_argnums=(3,))
+        if telemetry is not None:
+            # compile-event observability (inference.telemetry): record
+            # every distinct verify shape signature; forwards unchanged
+            self._verify = telemetry.wrap_jit("verify", self._verify)
 
     def verify(self, params, tok, drafts, caches, keys, active, greedy,
                temps, remaining, flags: RunFlags):

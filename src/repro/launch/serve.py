@@ -23,6 +23,13 @@ fused ``--seg-len``-step segments with per-segment retirement/admission:
 carry shard over the "data" axis with replicated weights, and serving
 stays BITWISE token-exact vs single-device.  Try it without accelerators
 via XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+``--trace-out trace.json`` / ``--metrics-out metrics.prom`` /
+``--telemetry-sample N`` enable serving telemetry
+(repro.inference.telemetry): a perfetto-loadable Chrome trace of the
+run's chunk bursts / decode segments / request lifecycles, a Prometheus
+metrics snapshot, the compile-event log, and (with --dsa) sampled DSA
+block-selection keep-rates.
 """
 from __future__ import annotations
 
@@ -37,11 +44,13 @@ from repro.inference.engine import Engine
 from repro.inference.scheduler import (ContinuousEngine, summarize,
                                        synthetic_workload)
 from repro.inference.speculative import can_speculate
+from repro.inference.telemetry import Telemetry
 from repro.launch.mesh import make_serving_mesh
 from repro.models.transformer import init_model
 
 
-def _serving_config(cfg, args, max_len, dsa_on, mesh) -> ServingConfig:
+def _serving_config(cfg, args, max_len, dsa_on, mesh,
+                    telemetry=None) -> ServingConfig:
     """One ServingConfig for both engines, straight from the CLI flags."""
     return ServingConfig(
         max_len=max_len, long_context=dsa_on,
@@ -53,7 +62,7 @@ def _serving_config(cfg, args, max_len, dsa_on, mesh) -> ServingConfig:
         spec=args.spec, max_mode_wait_s=args.max_mode_wait,
         paged=args.paged, pool_pages=args.pool_pages or None,
         deadline_s=args.deadline, queue_cap=args.queue_cap or None,
-        shed_policy=args.shed_policy)
+        shed_policy=args.shed_policy, telemetry=telemetry)
 
 
 def _serve_continuous(cfg, args, params, config):
@@ -68,7 +77,11 @@ def _serve_continuous(cfg, args, params, config):
         vocab=cfg.vocab, seed=args.seed)
     eng.warmup([len(r.prompt) for r in workload])
     results = eng.serve(workload)
-    s = summarize(results, max(r.finish_s for r in results))
+    # an all-shed/all-failed run completes zero requests: the wall clock
+    # defaults to 0 (summarize zeroes the ok-set stats) and the lifecycle
+    # line below still reports what happened instead of crashing here
+    wall = max((r.finish_s for r in results), default=0.0)
+    s = summarize(results, wall)
     print(f"continuous: {s['n_requests']} requests, "
           f"{s['delivered_tokens']} tokens in {s['wall_s']:.2f} s -> "
           f"{s['goodput_tok_s']:.1f} tok/s goodput, "
@@ -77,11 +90,27 @@ def _serve_continuous(cfg, args, params, config):
           f"{int(eng.stats['admitted'])} admissions)")
     dropped = [f"{s[k]} {k[2:]}" for k in ("n_timeout", "n_cancelled",
                                            "n_failed", "n_shed") if s[k]]
-    if dropped or args.deadline is not None:
+    if dropped or args.deadline is not None or not s["n_ok"]:
         slo = (f", SLO attainment {s['slo_attainment']:.0%}"
                if args.deadline is not None else "")
         print(f"lifecycle : {s['n_ok']} ok"
               + ("".join(f", {d}" for d in dropped)) + slo)
+    tel = eng.telemetry
+    if tel is not None:
+        if args.trace_out:
+            tel.write_chrome_trace(args.trace_out)
+            print(f"telemetry : {len(tel.events)} trace events -> "
+                  f"{args.trace_out} (load in Perfetto / chrome://tracing)")
+        if args.metrics_out:
+            tel.write_prometheus(args.metrics_out)
+            print(f"telemetry : Prometheus snapshot -> {args.metrics_out}")
+        progs = sorted({p for p, _, _ in tel.compiles})
+        print("compiles  : " + ", ".join(
+            f"{p}={tel.compile_count(p)}" for p in progs))
+        kr = tel.metrics.value("serving_dsa_keep_rate")
+        if isinstance(kr, tuple) and kr[0]:   # plain float 0.0 = no probe
+            print(f"sparsity  : {kr[0]} DSA selection samples, "
+                  f"mean keep-rate {kr[1]:.2f}")
     return results
 
 
@@ -159,6 +188,17 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=0,
                     help="devices in the serving mesh (with --mesh; "
                          "0 = all visible devices)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON timeline of the "
+                         "--continuous run here (perfetto-loadable; "
+                         "enables telemetry)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a Prometheus text-format metrics snapshot "
+                         "of the --continuous run here (enables telemetry)")
+    ap.add_argument("--telemetry-sample", type=int, default=0,
+                    help="sample the DSA block selection once per N decode "
+                         "segments (> 0 enables telemetry even without "
+                         "--trace-out/--metrics-out; default 0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -175,7 +215,11 @@ def main(argv=None):
     if mesh is not None:
         print(f"serving mesh: {dict(mesh.shape)} over "
               f"{len(mesh.devices.flat)} devices")
-    config = _serving_config(cfg, args, max_len, dsa_on, mesh)
+    tel = None
+    if args.trace_out or args.metrics_out or args.telemetry_sample:
+        tel = Telemetry(sample_every=args.telemetry_sample or 16)
+    config = _serving_config(cfg, args, max_len, dsa_on, mesh,
+                             telemetry=tel)
     if args.continuous:
         return _serve_continuous(cfg, args, params, config)
     eng = Engine(cfg, params, config=config)

@@ -107,6 +107,12 @@ class RunFlags:
     select_dtype: str = "float32"
     # int8/fp8 KV-cache storage with dequant-on-gather; None = full precision
     kv_quant: Optional[str] = None
+    # observability (inference.telemetry): stash the DSA block-selection
+    # outputs into the returned cache under "sel_idx"/"sel_ok"/"sel_kv".
+    # Only the sampled telemetry PROBE dispatch sets this — never a
+    # scan-carried segment (the extra keys make the cache tree asymmetric
+    # in/out, which a scan carry would reject).
+    sel_probe: bool = False
 
 
 def dsa_active(cfg: ArchConfig, flags: RunFlags) -> bool:
@@ -631,6 +637,8 @@ def _dsa_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc, vc,
     nb_keep = min(n_kb, -(-keep // bkd) + -(-DECODE_LOCAL // bkd) + 1)
     idx, ok = M.decode_block_topk_indices(s_blk, nb_keep, kv_len=kv_len,
                                           block_k=bkd, local=DECODE_LOCAL)
+    if flags.sel_probe:
+        new["sel_idx"], new["sel_ok"], new["sel_kv"] = idx, ok, kv_len
     if flags.dsa_mode == "kernel":
         from repro.kernels.ops import dsa_decode as dsa_decode_kernel
         return dsa_decode_kernel(q, kc, vc, idx, ok, kv_len, block_k=bkd,
@@ -797,6 +805,10 @@ def _dsa_paged_decode(params, cfg: ArchConfig, flags: RunFlags, x, q, kc,
     nb_keep = min(n_kb, -(-keep // bk) + -(-DECODE_LOCAL // bk) + 1)
     idx, ok = M.decode_block_topk_indices(s_blk, nb_keep, kv_len=kv_len,
                                           block_k=bk, local=DECODE_LOCAL)
+    if flags.sel_probe:
+        # logical block indices (pre page translation): comparable across
+        # steps even when the physical mapping changes
+        new["sel_idx"], new["sel_ok"], new["sel_kv"] = idx, ok, kv_len
     pidx = jnp.take_along_axis(tbl, idx, axis=1)          # physical pages
     if flags.dsa_mode == "kernel":
         from repro.kernels.ops import dsa_decode_paged as dsa_paged_kernel
