@@ -56,6 +56,14 @@ _SERVE_RATIO_KEYS = {
     "goodput_ratio_chunked_vs_blocking_long": True,
     "p95_ratio_chunked_vs_blocking_long": False,
     "goodput_ratio_sharded_vs_single": True,
+    # tensor-parallel serving (table_serve --tp): goodput of the tp=2
+    # weight-sharded engine over the replicated one (full runs only, same
+    # shared-cores caveat as the sharded ratio), and its per-device
+    # resident weight bytes over the replicated engine's — pure byte
+    # counts (~1/tp), deterministic, value-gated at smoke too and against
+    # the absolute ceiling below (lower is better)
+    "goodput_ratio_tp_vs_replicated": True,
+    "weight_bytes_per_device_ratio_tp_vs_replicated": False,
     # paged prefix reuse: slots-per-GiB of the prefix-hit engine over the
     # dense long-prompt engine (pure byte counts — deterministic, so it
     # also gates at smoke), and prefix-hit p95 TTFT over the no-reuse
@@ -83,6 +91,13 @@ _SERVE_RATIO_KEYS = {
 # spans/metrics/compile-watching are host-side and sampled, so a larger
 # bill means telemetry leaked onto the hot path
 _TRACED_GOODPUT_FLOOR = 0.95
+
+# a tp=2 weight-sharded engine must hold at most this fraction of the
+# replicated weight bytes per device (the acceptance ceiling, not just
+# no-regression): the ideal is 0.5 + the replicated norm/bias leaves
+# (~0.51 on the reduced bench arch), so 0.75 leaves headroom for layout
+# changes without letting tensor parallelism quietly stop sharding
+_TP_WEIGHT_BYTES_CEIL = 0.75
 
 # the quantized cache must pack at least this many times the slots of the
 # fp32 cache (the acceptance floor, not just no-regression-vs-baseline):
@@ -190,7 +205,9 @@ def check_serve(threshold: float, path: str = "") -> int:
         # slots-per-GiB byte-count ratio there
         keys = {"goodput_ratio_chunked_vs_blocking": True,
                 "slots_per_gib_ratio_prefix_vs_dense": True,
-                "slots_per_gib_ratio_quant_vs_fp32": True}
+                "slots_per_gib_ratio_quant_vs_fp32": True,
+                # byte-deterministic, so its VALUE gates at smoke too
+                "weight_bytes_per_device_ratio_tp_vs_replicated": False}
         for key in ("goodput_ratio_sharded_vs_single",
                     "goodput_ratio_traced_vs_untraced"):
             # presence-only at smoke: forced host devices share the same
@@ -203,7 +220,8 @@ def check_serve(threshold: float, path: str = "") -> int:
                 return 1
         for mode in ("continuous_paged", "continuous_prefix_hit",
                      "continuous_quant", "continuous_paged_quant",
-                     "continuous_overload", "continuous_traced"):
+                     "continuous_overload", "continuous_traced",
+                     "continuous_tp"):
             # same presence logic for the paged serving rows: their VALUES
             # are noise at smoke, their disappearance is structural
             if (any(r.get("mode") == mode for r in base.get("rows", []))
@@ -212,6 +230,17 @@ def check_serve(threshold: float, path: str = "") -> int:
                 print(f"FAIL: serve mode row {mode} missing from latest "
                       "smoke run")
                 return 1
+    if "weight_bytes_per_device_ratio_tp_vs_replicated" in nr:
+        # absolute value gate (byte-deterministic, so smoke gates it too):
+        # the tp engine must actually shard its weights
+        v = nr["weight_bytes_per_device_ratio_tp_vs_replicated"]
+        if v > _TP_WEIGHT_BYTES_CEIL:
+            print(f"FAIL: serve weight_bytes_per_device_ratio_tp_vs_"
+                  f"replicated {v:.3f} above the {_TP_WEIGHT_BYTES_CEIL} "
+                  f"ceiling")
+            return 1
+        print(f"ok: serve weight_bytes_per_device_ratio_tp_vs_replicated "
+              f"{v:.3f} <= {_TP_WEIGHT_BYTES_CEIL} ceiling")
     if "slots_per_gib_ratio_quant_vs_fp32" in nr:
         # absolute value gate (byte-deterministic, so smoke gates it too):
         # the quantized engine must actually pack more slots per GiB

@@ -36,6 +36,15 @@ mesh is forced host devices (XLA_FLAGS) so the ratio is a structural
 did-the-SPMD-program-survive signal, gated on full runs only (forced host
 "devices" share the same cores, so smoke-scale sharded goodput is noise).
 
+``--tp`` adds a ``continuous_tp`` mode: the same engine on a 2-D
+``("data","model")`` mesh with the weights sharded Megatron-style over a
+fixed tp=2 "model" axis (bitwise token-exact vs replicated).  Its
+``weight_bytes_per_device_ratio_tp_vs_replicated`` is a pure byte count
+(~1/tp plus the small replicated norm/bias leaves) so it is
+value-gated even at smoke; the ``goodput_ratio_tp_vs_replicated`` timing
+ratio lands on full runs only, for the same shared-cores reason as
+``--mesh``.
+
 Methodology — warm on one traffic sample, measure on another: every server
 first serves a seed-A workload (the continuous engines also run their
 explicit ``warmup``, their whole point being a FIXED precompilable shape
@@ -161,7 +170,7 @@ def _best(summaries):
 
 
 def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
-        slots: int = 0, mesh: bool = False) -> list:
+        slots: int = 0, mesh: bool = False, tp: bool = False) -> list:
     """``max_len`` / ``max_len_long`` / ``slots`` override the mixed and
     long-prompt-heavy configs (0 = the defaults below), so the serve gate
     can exercise admission at any context size — e.g. ``--max-len-long
@@ -244,6 +253,26 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                   f"divides slots={slots} ({ndev} device(s) visible; set "
                   f"XLA_FLAGS=--xla_force_host_platform_device_count=8) — "
                   f"skipping sharded rows")
+    cont_t = None
+    if tp:
+        ndev = jax.device_count()
+        if ndev >= 2:
+            from repro.launch.mesh import make_serving_mesh
+            # tensor-parallel row: weights shard over a fixed tp=2 "model"
+            # axis (fixed so the byte-deterministic per-device weight ratio
+            # is comparable across machines); slots take whatever data
+            # axis still fits
+            dp_t = max(d for d in range(1, min(slots, ndev // 2) + 1)
+                       if slots % d == 0)
+            cont_t = ContinuousEngine(cfg, params, slots=slots,
+                                      max_len=max_len, seg_len=seg_len,
+                                      mesh=make_serving_mesh(dp=dp_t, tp=2,
+                                                             cfg=cfg))
+            assert cont_t.engine.tp == 2
+        else:
+            print(f"table_serve: --tp needs >= 2 devices ({ndev} visible; "
+                  f"set XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+                  f" — skipping the tensor-parallel row")
     if max_len_long == max_len:
         cont_l, block_l = cont, block
     else:
@@ -306,7 +335,9 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                            (paged_l, pfx_lens, wl_pfx_warm_nd),
                            (prefix_l, pfx_lens, wl_pfx_warm),
                            *(((cont_m, mixed_lens, wl_warm),)
-                             if cont_m is not None else ())):
+                             if cont_m is not None else ()),
+                           *(((cont_t, mixed_lens, wl_warm),)
+                             if cont_t is not None else ())):
         eng.warmup(lens)
         eng.serve(list(wls))
     # the loop's warm serve was a registry MISS; this pass HITs it, so the
@@ -323,6 +354,7 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
 
     cont_runs, block_runs, bucketed_runs, exact_runs = [], [], [], []
     cont_long_runs, block_long_runs, cont_mesh_runs = [], [], []
+    cont_tp_runs = []
     paged_runs, prefix_runs = [], []
     quant_runs, paged_quant_runs = [], []
     overload_runs, overload_unb_runs, traced_runs = [], [], []
@@ -338,6 +370,8 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             overload_unb_runs.append(_measure(cont, wl_over))
         if cont_m is not None:
             cont_mesh_runs.append(_measure(cont_m, wl))
+        if cont_t is not None:
+            cont_tp_runs.append(_measure(cont_t, wl))
         block_long_runs.append(_measure(block_l, wl_long))
         cont_long_runs.append(_measure(cont_l, wl_long))
         quant_runs.append(_measure(quant_l, wl_long))
@@ -379,6 +413,24 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
     if s_cont_m is not None:
         ratios["goodput_ratio_sharded_vs_single"] = (
             s_cont_m["goodput_tok_s"] / max(s_cont["goodput_tok_s"], 1e-9))
+    s_cont_t = _best(cont_tp_runs) if cont_tp_runs else None
+    if s_cont_t is not None:
+        # per-device resident weight bytes, tp engine over the replicated
+        # cont engine — pure byte counts (no timing), ~1/tp + the small
+        # replicated norm/bias leaves, so it is value-gated even at smoke;
+        # the goodput ratio is timing and gates on full runs only (forced
+        # host devices share cores at smoke)
+        full_bytes = sum(leaf.nbytes
+                         for leaf in jax.tree.leaves(cont.engine.params))
+        wpd = cont_t.engine.weight_bytes_per_device()
+        ratios["weight_bytes_per_device_ratio_tp_vs_replicated"] = (
+            wpd / max(full_bytes, 1))
+        if not smoke:
+            ratios["goodput_ratio_tp_vs_replicated"] = (
+                s_cont_t["goodput_tok_s"] / max(s_cont["goodput_tok_s"],
+                                                1e-9))
+        s_cont_t = dict(s_cont_t, tp=cont_t.engine.tp,
+                        weight_bytes_per_device=int(wpd))
     # deterministic byte counts (no timing): emitted at smoke too
     ratios["slots_per_gib_ratio_prefix_vs_dense"] = (
         s_prefix["slots_per_gib"] / max(s_cont_l["slots_per_gib"], 1e-9))
@@ -419,7 +471,9 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
                     ("continuous_overload", s_over),
                     ("continuous_traced", s_traced),
                     *((("continuous_sharded", s_cont_m),)
-                      if s_cont_m is not None else ())):
+                      if s_cont_m is not None else ()),
+                    *((("continuous_tp", s_cont_t),)
+                      if s_cont_t is not None else ())):
         stall = s.get("admission_stall_frac")
         lines.append(row(f"table_serve/{mode}",
                          1e6 / max(s["goodput_tok_s"], 1e-9),
@@ -470,6 +524,13 @@ def run(smoke: bool = False, max_len: int = 0, max_len_long: int = 0,
             "table_serve/sharded_vs_single", 0.0,
             f"{ratios['goodput_ratio_sharded_vs_single']:.2f}x_goodput_"
             f"dp{len(cont_m.mesh.devices.flat)}"))
+    if s_cont_t is not None:
+        wr = ratios["weight_bytes_per_device_ratio_tp_vs_replicated"]
+        lines.append(row(
+            "table_serve/tp_vs_replicated", 0.0,
+            f"{wr:.2f}x_weight_bytes_per_device_tp{s_cont_t['tp']}"
+            + (f"_{ratios['goodput_ratio_tp_vs_replicated']:.2f}x_goodput"
+               if not smoke else "")))
     # the measured trials' Chrome trace (perfetto-loadable) — the CI
     # bench-gate uploads this next to the BENCH json
     trace_path = os.path.join(_REPO_ROOT, "trace_serve.json")
@@ -496,8 +557,12 @@ if __name__ == "__main__":
     ap.add_argument("--mesh", action="store_true",
                     help="also measure the mesh-sharded continuous engine "
                          "(data-parallel slots; needs >1 device)")
+    ap.add_argument("--tp", action="store_true",
+                    help="also measure the tensor-parallel continuous "
+                         "engine (weights sharded over a tp=2 \"model\" "
+                         "axis; needs >= 2 devices)")
     args = ap.parse_args()
     for line in run(smoke=args.smoke, max_len=args.max_len,
                     max_len_long=args.max_len_long, slots=args.slots,
-                    mesh=args.mesh):
+                    mesh=args.mesh, tp=args.tp):
         print(line)

@@ -64,6 +64,14 @@ and the sampled dynamic-sparsity probe reports the DSA block-selection
 keep rate.  Telemetry changes TOKENS never — ``telemetry=None``
 (the default) is bitwise-identical serving.
 
+Part 8 demos TENSOR-PARALLEL serving on a 2-D ``("data","model")`` mesh
+(``make_serving_mesh(dp=2, tp=2)``): weights shard Megatron-style over
+"model" (attention heads, MLP columns, vocab) so each device holds ~1/tp
+of the resident weight bytes, while slots still shard over "data" — and
+the tokens are BITWISE the replicated engine's.  Needs >= 4 devices
+(run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+demo on CPU); skipped otherwise.
+
     PYTHONPATH=src python examples/serve_decode.py
 """
 import dataclasses
@@ -267,6 +275,34 @@ def telemetry_serving(cfg, params):
           f"sampled slot observations (block top-k selection)")
 
 
+def tensor_parallel_serving(cfg, params):
+    """Part 8: a dp=2 x tp=2 mesh serves the same traffic as a replicated
+    single-device engine, with ~half the weight bytes resident per device
+    and bitwise-identical tokens."""
+    if jax.device_count() < 4:
+        print("tensor parallel    : skipped (needs >= 4 devices; run under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(dp=2, tp=2, cfg=cfg)   # validates divisibility
+    workload = synthetic_workload(8, rate_rps=40.0, prompt_lens=(16, 48),
+                                  n_new_range=(6, 16), vocab=cfg.vocab,
+                                  seed=3)
+    kw = dict(slots=4, max_len=96, seg_len=4)
+    plain = ContinuousEngine(cfg, params, **kw)
+    tp = ContinuousEngine(cfg, params, mesh=mesh, **kw)
+    res_p = plain.serve([dataclasses.replace(r) for r in workload])
+    res_t = tp.serve([dataclasses.replace(r) for r in workload])
+    toks_p = {r.rid: r.tokens.tolist() for r in res_p}
+    toks_t = {r.rid: r.tokens.tolist() for r in res_t}
+    full = sum(leaf.nbytes for leaf in jax.tree.leaves(params))
+    per_dev = tp.engine.weight_bytes_per_device()
+    print(f"tensor parallel    : dp=2 x tp={tp.engine.tp}, weight bytes/dev "
+          f"{per_dev / 2**20:.2f} MiB vs {full / 2**20:.2f} MiB replicated "
+          f"({per_dev / full:.2f}x), tokens bitwise equal: "
+          f"{toks_p == toks_t}")
+
+
 def main():
     cfg = reduced(get_config("yi_6b"))
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
@@ -277,6 +313,7 @@ def main():
     quantized_serving(cfg, params)
     degraded_serving(cfg, params)
     telemetry_serving(cfg, params)
+    tensor_parallel_serving(cfg, params)
 
 
 if __name__ == "__main__":

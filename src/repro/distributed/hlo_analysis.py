@@ -110,6 +110,58 @@ def collective_summary(colls: List[Collective]) -> Dict:
             "dci_wire_bytes": dci, "n_collectives": len(colls)}
 
 
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-op collective counts of a compiled per-device SPMD program."""
+    counts: Dict[str, int] = {}
+    for c in parse_collectives(hlo_text):
+        counts[c.op] = counts.get(c.op, 0) + 1
+    return counts
+
+
+def check_tp_decode_collectives(hlo_text: str, n_layers: int) -> Dict[str, int]:
+    """Assert a pure-TP (dp=1) decode-segment program carries exactly the
+    Megatron collective budget and nothing more.
+
+    Per layer the partitioner must emit ONE all-reduce per contracting
+    matmul group — the attention out-projection (contracting over
+    "model"-sharded heads) and the MLP down-projection (contracting over
+    sharded d_ff) — plus one all-reduce for the vocab-sharded embedding
+    gather and one all-gather that replicates the lm-head weight so the
+    logits land replicated for sampling.  The all-gather is weight-shaped:
+    GSPMD hoists it per segment, NOT per token, which is what keeps the
+    TP wire bill O(layers), independent of seg_len.
+
+    Raises AssertionError naming the op whose count is off; returns the
+    observed per-op counts.  Pair two calls at different seg_lens with
+    ``assert_collectives_token_invariant`` for the none-added-per-token
+    half of the contract.
+    """
+    counts = count_collectives(hlo_text)
+    expect = {"all-reduce": 2 * n_layers + 1, "all-gather": 1}
+    for op in ("reduce-scatter", "all-to-all", "collective-permute"):
+        assert counts.get(op, 0) == 0, (
+            f"TP decode segment emitted {counts[op]} unexpected {op} "
+            f"collective(s) — the Megatron budget has none")
+    why = {"all-reduce": "2*n_layers + 1: attn out-proj + mlp down-proj "
+                         "per layer, + the vocab-sharded embedding gather",
+           "all-gather": "the lm-head weight gather (replicated logits)"}
+    for op, n in expect.items():
+        got = counts.get(op, 0)
+        assert got == n, (f"TP decode segment {op} count {got} != "
+                          f"expected {n} ({why[op]})")
+    return counts
+
+
+def assert_collectives_token_invariant(hlo_a: str, hlo_b: str) -> None:
+    """Assert two lowerings of the same segment at DIFFERENT seg_lens have
+    identical collective counts — i.e. every collective lives inside the
+    (trip-count-varying) decode loop body or is hoisted out of it, and no
+    collective is added per decoded token."""
+    a, b = count_collectives(hlo_a), count_collectives(hlo_b)
+    assert a == b, (f"collective counts vary with segment length: {a} != {b}"
+                    " — a collective is being emitted per token")
+
+
 def roofline(flops_per_dev: float, hbm_bytes_per_dev: float,
              coll: Dict, model_flops_global: float = 0.0,
              n_chips: int = 256) -> Dict:

@@ -40,6 +40,13 @@ class ShardingRules:
     kv_heads: Axis = "model"
     qkv: Axis = None              # head_dim
     vocab: Axis = "model"
+    # logits activation vocab axis (embed/embed_act split, same reason):
+    # training shards logits over "model" for memory; TP SERVING replicates
+    # them (vocab_act=None) so greedy/categorical sampling runs on a
+    # replicated operand — jax's default (non-partitionable) threefry
+    # generates DIFFERENT bits for a sharded operand, which would break
+    # sampled token-exactness vs unsharded
+    vocab_act: Axis = "model"
     expert: Axis = "model"
     lora: Axis = None
     state: Axis = None
@@ -48,6 +55,11 @@ class ShardingRules:
     pred_k: Axis = None           # DSA projection dim
     blocks: Axis = None           # DSA block indices
     pages: Axis = None            # paged-cache physical page pool rows
+    # expert-parallel shard_map dispatch (training only): the serving rules
+    # turn it off so a TP serving mesh keeps the SAME capacity-prefill math
+    # as unsharded (the EP path has its own dispatch/capacity reduction
+    # order — correct, but not bitwise vs the vmap twin)
+    moe_ep: bool = True
 
     def axis(self, name: Optional[str]) -> Axis:
         if name is None:
@@ -95,28 +107,92 @@ def make_rules(*, multi_pod: bool = False, fsdp: bool = True,
     )
 
 
-def make_serving_rules(*, long_context: bool = False) -> ShardingRules:
+def make_serving_rules(*, long_context: bool = False,
+                       tp: bool = False) -> ShardingRules:
     """Rule table for the resident serving engines (inference.engine /
-    inference.scheduler): pure data parallelism over the batch/slots axis.
+    inference.scheduler): data parallelism over the batch/slots axis,
+    optionally tensor parallelism over "model".
 
-    Weights stay replicated and every slot's row is computed whole on one
-    shard, so per-row math (cache writes, DSA selection, softmax, the
-    per-slot PRNG chain) has exactly the unsharded reduction order —
-    sharded serving is BITWISE token-exact vs unsharded, the multi-device
-    serving contract pinned by tests/test_multidevice.py.  ``long_context``
-    additionally lets the KV-cache sequence axis shard over "model"
-    (flash-decode style — GSPMD splits the softmax reduction, so it is
-    throughput-only, NOT bitwise); a dp-only serving mesh has no "model"
-    axis and resolves it to replicated."""
+    ``tp=False`` (default): weights stay replicated and every slot's row is
+    computed whole on one shard, so per-row math (cache writes, DSA
+    selection, softmax, the per-slot PRNG chain) has exactly the unsharded
+    reduction order — sharded serving is BITWISE token-exact vs unsharded,
+    the multi-device serving contract pinned by tests/test_multidevice.py.
+    ``long_context`` additionally lets the KV-cache sequence axis shard
+    over "model" (flash-decode style — GSPMD splits the softmax reduction,
+    so it is throughput-only, NOT bitwise); a dp-only serving mesh has no
+    "model" axis and resolves it to replicated.
+
+    ``tp=True``: weights shard over "model" Megatron-style — Q/K/V/O over
+    heads/kv_heads, MLP and MoE expert matrices over mlp/expert,
+    embedding/lm_head over vocab — and the resident KV cache, its quant
+    scale leaves, and the paged pool rows become head-sharded alongside
+    them.  The activation constraints already threaded through the model
+    layers make GSPMD insert one all-reduce after each contracting matmul
+    (out @ wo over heads, h @ w2 over mlp, the MoE combine over expert);
+    per-head attend math is untouched (the embed contraction stays whole),
+    so serving stays token-exact vs unsharded at the same seeds/temps.
+    The DSA kt/ktb score caches have no head axis — they stay replicated
+    over "model", so every shard computes IDENTICAL block top-k indices
+    and the gather+attend is local to its own heads (Energon's
+    cheap-selection observation).  ``cache_seq`` is forced to None under
+    tp: head sharding takes the "model" axis (one-use-per-mesh-axis), and
+    seq-sharding the cache would split the softmax (not token-exact)."""
     return ShardingRules(
         batch="data", seq=None, seq_sp=None,
-        cache_seq="model" if long_context else None,
-        embed=None, embed_act=None, mlp=None, heads=None, kv_heads=None,
-        qkv=None, vocab=None, expert=None,
+        cache_seq="model" if (long_context and not tp) else None,
+        embed=None, embed_act=None,
+        mlp="model" if tp else None,
+        heads="model" if tp else None,
+        kv_heads="model" if tp else None,
+        qkv=None,
+        # weights shard over vocab; the logits ACTIVATION stays replicated
+        # (vocab_act=None) so sampling draws identical random bits — the
+        # all-gather after the lm_head matmul concatenates columns whose
+        # embed contraction was computed whole per shard
+        vocab="model" if tp else None,
+        vocab_act=None,
+        expert="model" if tp else None,
         # paged resident caches: the physical page pool shards over "data"
         # like the per-slot rows it replaces (non-divisible pool sizes
-        # resolve to replicated — graceful)
-        pages="data")
+        # resolve to replicated — graceful); under tp the pool rows are
+        # additionally head-sharded via kv_heads above
+        pages="data",
+        moe_ep=False)
+
+
+def serving_tp_issues(cfg, tp: int) -> list:
+    """Names of the logical weight axes whose model dims do NOT divide a
+    ``tp``-way "model" mesh axis (empty list == cfg can TP-shard cleanly).
+
+    Shared by ``launch.mesh.make_serving_mesh`` (up-front ``ValueError``
+    naming the offending axis) and ``inference.engine.Engine`` (graceful
+    fall-back to replicated weights, mirroring slots-vs-data).  ``cfg`` is
+    duck-typed on the ArchConfig fields so this module keeps zero config
+    imports.  vocab is deliberately NOT checked: a non-dividing vocab
+    simply resolves that one leaf to replicated (per-leaf fallback in
+    ``resolve_spec``) without breaking head/mlp sharding."""
+    tp = int(tp)
+    if tp <= 1:
+        return []
+    issues = []
+    if cfg.n_heads % tp:
+        issues.append(f'heads (n_heads={cfg.n_heads} % tp={tp} != 0)')
+    n_kv = getattr(cfg, "n_kv_heads", None) or cfg.n_heads
+    if n_kv % tp:
+        issues.append(f'kv_heads (n_kv_heads={n_kv} % tp={tp} != 0)')
+    if cfg.d_ff % tp:
+        issues.append(f'mlp (d_ff={cfg.d_ff} % tp={tp} != 0)')
+    moe = getattr(cfg, "moe", None)
+    if moe is not None:
+        d_ff_e = getattr(moe, "d_ff_expert", None) or cfg.d_ff
+        # expert matrices are (E, d_model, d_ff_expert); either the expert
+        # axis or the per-expert ff axis dividing is enough to shard them
+        if moe.num_experts % tp and d_ff_e % tp:
+            issues.append(
+                f'expert (num_experts={moe.num_experts} and '
+                f'd_ff_expert={d_ff_e}, neither % tp={tp} == 0)')
+    return issues
 
 
 # Rules used by model code; installed by the launcher before tracing.

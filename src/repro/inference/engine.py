@@ -52,14 +52,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import (compute_context, make_serving_rules,
-                                        replicate_put, shard_put_batch,
+from jax.experimental.shard_map import shard_map
+
+from repro.distributed.sharding import (compute_context, current_mesh,
+                                        make_serving_rules, replicate_put,
+                                        serving_tp_issues, shard_put_batch,
                                         shard_put_tree)
 from repro.inference.config import ServingConfig, resolve_config
 from repro.models.attention import RunFlags
 from repro.models.transformer import (cache_specs, decode_step, forward,
-                                      init_cache, truncate_cache,
-                                      unstack_group_caches)
+                                      init_cache, model_param_specs,
+                                      truncate_cache, unstack_group_caches)
 
 # floor for power-of-two buckets: prompt lengths and scan step counts are
 # rounded up to at least this (tiny shapes all share one compile)
@@ -154,9 +157,30 @@ def _sample(logits, key, greedy: bool, temperature=1.0):
     is bit-identical to the unscaled chain."""
     if greedy:
         return jnp.argmax(logits, -1)[:, None].astype(jnp.int32), key
-    key, sk = jax.random.split(key)
-    return (jax.random.categorical(sk, logits / temperature)[:, None]
-            .astype(jnp.int32), key)
+
+    def _draw(k, x):
+        k2, sk = jax.random.split(k)
+        return (jax.random.categorical(sk, x)[:, None]
+                .astype(jnp.int32), k2)
+
+    lg = logits / temperature
+    mesh = current_mesh()
+    if mesh is None:
+        return _draw(key, lg)
+    # Under a mesh the whole rng chain (split + gumbel draw) runs inside a
+    # fully-REPLICATED shard_map: each device executes the full-size,
+    # unpartitioned draw locally, bitwise identical to the unsharded
+    # program.  A with_sharding_constraint on the logits is NOT enough —
+    # it pins the consumer tensor, but GSPMD still partitions the threefry
+    # producer chain (per-device counter slices of the gumbel iota), and
+    # jax's default non-partitionable threefry pairs counter i with
+    # i + n/2 of the LOCAL slice, generating different bits than the
+    # replicated stream.  shard_map takes the chain out of GSPMD's reach.
+    p_rep = jax.sharding.PartitionSpec()
+    return shard_map(_draw, mesh=mesh,
+                     in_specs=(p_rep, p_rep),
+                     out_specs=(p_rep, p_rep),
+                     check_rep=False)(key, lg)
 
 
 class Engine:
@@ -178,18 +202,33 @@ class Engine:
         if c.select_dtype != "float32" and not c.long_context:
             raise ValueError("select_dtype quantizes the DSA predicted-key "
                              "caches — requires long_context=True")
-        # mesh-sharded serving (SPMD data parallelism over the batch/slots
-        # axis): weights are replicated — every shard computes its rows
-        # whole, which is what keeps sharded generation BITWISE equal to
-        # unsharded — while caches/carries shard over "data".  mesh=None
-        # (the default) leaves every dispatch exactly as before.
+        # mesh-sharded serving: caches/carries shard over "data" (SPMD data
+        # parallelism over the batch/slots axis), and on a 2-D
+        # ("data", "model") mesh whose model dims divide, weights ALSO
+        # shard over "model" (tensor parallelism: Q/K/V/O over heads,
+        # MLP/experts over mlp/expert, embedding over vocab) with the KV
+        # cache head-sharded alongside — GSPMD inserts the post-matmul
+        # all-reduces from the activation constraints already in the model
+        # layers, and generation stays token-exact vs unsharded (the
+        # reduction order is fixed per mesh).  An indivisible-TP config
+        # falls back to replicated weights gracefully, mirroring the
+        # slots-vs-data behavior; mesh=None (the default) leaves every
+        # dispatch exactly as before.
         self.mesh = c.mesh
         self.shard_rules = None
+        self.tp = 1
         if c.mesh is not None:
+            tp = int(dict(c.mesh.shape).get("model", 1))
+            tp_ok = tp > 1 and not serving_tp_issues(cfg, tp)
             self.shard_rules = (c.shard_rules if c.shard_rules is not None
                                 else make_serving_rules(
-                                    long_context=c.long_context))
-            params = replicate_put(params, c.mesh)
+                                    long_context=c.long_context, tp=tp_ok))
+            if tp_ok or (c.shard_rules is not None and tp > 1):
+                params = shard_put_tree(params, model_param_specs(cfg),
+                                        c.mesh, self.shard_rules)
+                self.tp = tp
+            else:
+                params = replicate_put(params, c.mesh)
         self.params = params
         self.max_len = c.max_len
         self.loop = c.loop
@@ -277,6 +316,24 @@ class Engine:
         if self.mesh is None:
             return caches
         return shard_put_tree(caches, specs, self.mesh, self.shard_rules)
+
+    def weight_bytes_per_device(self) -> int:
+        """Resident weight bytes ON ONE DEVICE (shard shapes, not global
+        shapes) — the quantity tensor parallelism reduces ~1/tp.  With
+        replicated weights (mesh=None or dp-only) this equals the full
+        parameter footprint; benchmarks/table_serve.py gates the tp-vs-
+        replicated ratio on it (pure byte counts, deterministic)."""
+        total = 0
+        for x in jax.tree.leaves(self.params):
+            shape = tuple(x.shape)
+            sh = getattr(x, "sharding", None)
+            if sh is not None and hasattr(sh, "shard_shape"):
+                shape = sh.shard_shape(shape)
+            n = 1
+            for d in shape:
+                n *= int(d)
+            total += n * x.dtype.itemsize
+        return int(total)
 
     # -- prefill ------------------------------------------------------------
 
@@ -370,7 +427,10 @@ class Engine:
         temp = jnp.asarray(temperature, jnp.float32)
         key = jax.random.PRNGKey(seed)
         t0 = time.monotonic()
-        tok, key = _sample(logits[:, -1], key, greedy, temp)
+        # _ctx(): under a mesh the eager draw must see the mesh so _sample
+        # replicates it (sharded prefill logits → different threefry bits)
+        with self._ctx():
+            tok, key = _sample(logits[:, -1], key, greedy, temp)
         if lengths is None:
             lengths = np.full((b,), prompts.shape[1], np.int32)
         tok_np = np.asarray(tok)
@@ -481,8 +541,13 @@ class Engine:
         t0 = time.monotonic()
         # token 1 comes from the prefill logits: n_new tokens need exactly
         # n_new - 1 decode steps (the scan path may execute a few more to
-        # stay on a bucketed scan length; surplus tokens are truncated)
-        tok, key = _sample(logits[:, -1], key, greedy, temp)
+        # stay on a bucketed scan length; surplus tokens are truncated).
+        # _ctx() so _sample finds the mesh on this EAGER call too and runs
+        # the draw in its replicated shard_map (sharded prefill logits
+        # would otherwise hand the draw a partitioned shape — different
+        # threefry bits)
+        with self._ctx():
+            tok, key = _sample(logits[:, -1], key, greedy, temp)
         dispatches = 0
         steps_exec = 0
         if self.loop == "scan":
@@ -510,7 +575,8 @@ class Engine:
                     logits, caches = self._decode(self.params, tok, caches,
                                                   flags=dflags)
                 dispatches += 1
-                tok, key = _sample(logits[:, -1], key, greedy, temp)
+                with self._ctx():
+                    tok, key = _sample(logits[:, -1], key, greedy, temp)
                 out.append(np.asarray(tok))
             steps_exec = n_new - 1
             toks = jnp.concatenate(out, axis=1)

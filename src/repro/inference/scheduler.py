@@ -50,12 +50,19 @@ previous one retires.  This module keeps a single RESIDENT engine of
                   prefill compile per distinct mode used).
 
 Mesh sharding (``mesh=``): the resident cache and every per-slot carry
-shard over the mesh's "data" axis with replicated weights
+shard over the mesh's "data" axis
 (distributed.sharding.make_serving_rules), so segments, chunked
-admission, and speculative verify run as ONE SPMD program per host group
-— and, because each slot's row is computed whole on one shard, sharded
-serving is BITWISE token-exact vs mesh=None (tests/test_multidevice.py,
-CI's forced-host-device multi-device job).
+admission, and speculative verify run as ONE SPMD program per host group.
+On a 1-D ("data",) mesh weights are replicated and each slot's row is
+computed whole on one shard; on a 2-D ("data", "model") mesh weights
+ADDITIONALLY shard over "model" (tensor parallelism: Q/K/V/O over heads,
+MLP/experts, vocab) with the resident KV cache and its quant scales
+head-sharded alongside, GSPMD inserting one all-reduce after each
+contracting matmul.  Both stay token-exact vs mesh=None at the same
+seeds/temps/dsa_mode — the reduction order is fixed per mesh
+(tests/test_multidevice.py, CI's forced-host-device multi-device job).
+The DSA kt/ktb score caches stay replicated over "model", so every shard
+selects IDENTICAL top-k blocks and attends on its own heads locally.
 
 Token-exactness: a request served here produces exactly the tokens of
 ``Engine(cfg, params, max_len=<same>).generate(prompt[None], n_new,
@@ -355,12 +362,14 @@ class ContinuousEngine:
         self.seg_len = seg_len = c.seg_len
         dsa_mode, long_context, paged = c.dsa_mode, c.long_context, c.paged
         # mesh-sharded resident serving: the (slots, max_len) cache and
-        # every per-slot carry shard over the mesh's "data" axis (weights
-        # replicated), so segments/chunks/verifies run as ONE SPMD program
-        # per host group — and stay BITWISE token-exact vs mesh=None
-        # because each slot's row never leaves its shard (pinned by
-        # tests/test_multidevice.py).  Slots not divisible by the data
-        # axis simply resolve to replicated (graceful, not an error).
+        # every per-slot carry shard over the mesh's "data" axis, so
+        # segments/chunks/verifies run as ONE SPMD program per host group
+        # — and stay token-exact vs mesh=None (pinned by
+        # tests/test_multidevice.py).  Weights replicate on a dp-only
+        # mesh; a ("data", "model") mesh tensor-parallel-shards them (and
+        # the cache's head axes) over "model" — see Engine.__init__.
+        # Slots not divisible by the data axis simply resolve to
+        # replicated (graceful, not an error).
         self.mesh = c.mesh
         # prefill machinery + flags are shared with the static engine so the
         # scheduler is token-exact against Engine.generate per request
@@ -496,6 +505,12 @@ class ContinuousEngine:
                 lg = jnp.where(poison[:, None],
                                jnp.full_like(lg, jnp.nan), lg)
                 finite = finite & (~active | jnp.all(jnp.isfinite(lg), -1))
+                # rows shard over "data", vocab REPLICATED per row: the
+                # per-slot draw must see its whole row locally — jax's
+                # default threefry generates different bits for a
+                # partitioned shape, so a TP mesh's idle "model" axis must
+                # not split the gumbel generation (no-op without a mesh)
+                lg = shard(lg, "batch", None)
                 ks = jax.vmap(jax.random.split)(keys)         # (B, 2, 2)
                 nxt_s = jax.vmap(jax.random.categorical)(
                     ks[:, 1], lg / temps[:, None])
@@ -1443,6 +1458,11 @@ class ContinuousEngine:
         self._reserved: Set[int] = set()
         self._pf: Optional[_PrefillGroup] = None
         self._cur_mode: Optional[str] = None
+
+    def weight_bytes_per_device(self) -> int:
+        """Per-device resident weight bytes of the inner engine — ~1/tp of
+        the replicated footprint on a tensor-parallel serving mesh."""
+        return self.engine.weight_bytes_per_device()
 
     def reset(self) -> None:
         """Zero all slots, the queue, and stats (compiled functions are

@@ -27,15 +27,69 @@ def make_host_mesh(model: int = 1):
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
-def make_serving_mesh(dp: int = 0):
-    """Data-parallel serving mesh: a single "data" axis over ``dp``
-    devices (0 = all).  The resident serving engines shard their slot axis
-    over it (sharding.make_serving_rules); on CI this is exercised with
+def make_serving_mesh(dp: int = 0, tp: int = 1, cfg=None):
+    """Serving mesh: a single "data" axis over ``dp`` devices (0 = all)
+    for data-parallel serving, or a 2-D ``("data", "model")`` mesh when
+    ``tp > 1`` — the serving engines shard their slot axis over "data"
+    and (tensor parallelism) weights + KV heads over "model"
+    (sharding.make_serving_rules).  On CI this is exercised with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the SPMD
-    serving program runs without accelerators."""
-    n = dp or len(jax.devices())
+    serving program runs without accelerators.
+
+    ``cfg``: optional ArchConfig validated UP FRONT — an indivisible
+    head/mlp/expert axis raises a ``ValueError`` naming the offending
+    axis here instead of surfacing as a deep XLA sharding error (the
+    engines themselves fall back to replicated weights gracefully when
+    handed an indivisible mesh without this validation)."""
+    tp = max(1, int(tp))
+    if tp == 1:
+        n = dp or len(jax.devices())
+        try:
+            return jax.make_mesh((n,), ("data",))
+        except Exception:       # older jax without jax.make_mesh
+            import numpy as np
+            return jax.sharding.Mesh(np.asarray(jax.devices()[:n]), ("data",))
+    if cfg is not None:
+        from repro.distributed.sharding import serving_tp_issues
+        issues = serving_tp_issues(cfg, tp)
+        if issues:
+            raise ValueError(
+                f"tp={tp} does not divide arch "
+                f"{getattr(cfg, 'name', '?')!r} on axis "
+                + "; ".join(issues)
+                + " — pick a tp that divides, or serve dp-only "
+                "(replicated weights)")
+    n = len(jax.devices())
+    if n % tp:
+        raise ValueError(f"tp={tp} does not divide the {n} visible devices")
+    dp = dp or n // tp
+    if dp * tp > n:
+        raise ValueError(f"dp={dp} x tp={tp} needs {dp * tp} devices, "
+                         f"only {n} visible")
     try:
-        return jax.make_mesh((n,), ("data",))
-    except Exception:       # older jax without jax.make_mesh
+        return jax.make_mesh((dp, tp), ("data", "model"))
+    except Exception:           # older jax without jax.make_mesh
         import numpy as np
-        return jax.sharding.Mesh(np.asarray(jax.devices()[:n]), ("data",))
+        devs = np.asarray(jax.devices()[:dp * tp]).reshape(dp, tp)
+        return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def init_serving_processes(coordinator: str, num_processes: int,
+                           process_id: int,
+                           local_device_ids=None) -> None:
+    """Multi-controller launch (``jax.distributed.initialize``): every
+    process runs the SAME serving program and the mesh spans all
+    processes' devices, so a dp x tp mesh built afterwards by
+    ``make_serving_mesh`` shards weights across hosts — not only forced
+    host devices.  Call ONCE per process before any other jax use
+    (device enumeration is global after this).
+
+    coordinator: "host:port" of process 0, reachable from every node."""
+    if num_processes <= 1:
+        return
+    kw = dict(coordinator_address=coordinator,
+              num_processes=int(num_processes),
+              process_id=int(process_id))
+    if local_device_ids is not None:
+        kw["local_device_ids"] = local_device_ids
+    jax.distributed.initialize(**kw)

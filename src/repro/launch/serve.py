@@ -21,8 +21,18 @@ fused ``--seg-len``-step segments with per-segment retirement/admission:
 ``--mesh`` shards the resident engine over a data-parallel serving mesh of
 ``--dp`` devices (0 = all): the (slots, max_len) cache and every per-slot
 carry shard over the "data" axis with replicated weights, and serving
-stays BITWISE token-exact vs single-device.  Try it without accelerators
-via XLA_FLAGS=--xla_force_host_platform_device_count=8.
+stays BITWISE token-exact vs single-device.  ``--tp N`` builds a 2-D
+(data, model) mesh instead and additionally shards WEIGHTS + KV heads
+over the "model" axis (tensor parallelism — per-device weight bytes drop
+~1/N; still token-exact, validated up front against the arch config).
+Try either without accelerators via
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+``--nodes N --coordinator host:port --node-id I`` launches the SAME
+program as one of N cooperating processes (jax.distributed.initialize):
+the serving mesh then spans every node's devices, so dp x tp sharding
+crosses hosts — run the identical command on each node, varying only
+--node-id.
 
 ``--trace-out trace.json`` / ``--metrics-out metrics.prom`` /
 ``--telemetry-sample N`` enable serving telemetry
@@ -45,7 +55,7 @@ from repro.inference.scheduler import (ContinuousEngine, summarize,
                                        synthetic_workload)
 from repro.inference.speculative import can_speculate
 from repro.inference.telemetry import Telemetry
-from repro.launch.mesh import make_serving_mesh
+from repro.launch.mesh import init_serving_processes, make_serving_mesh
 from repro.models.transformer import init_model
 
 
@@ -67,6 +77,10 @@ def _serving_config(cfg, args, max_len, dsa_on, mesh,
 
 def _serve_continuous(cfg, args, params, config):
     eng = ContinuousEngine(cfg, params, config=config)
+    if eng.mesh is not None and eng.engine.tp > 1:
+        print(f"tensor parallel: tp={eng.engine.tp}, "
+              f"{eng.weight_bytes_per_device() / 2**20:.2f} MiB "
+              f"weights/device")
     if args.spec and not eng.spec:
         print(f"note: spec={args.spec} outside the speculation envelope "
               f"for {cfg.name}; using plain segments")
@@ -188,6 +202,19 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=0,
                     help="devices in the serving mesh (with --mesh; "
                          "0 = all visible devices)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards: builds a 2-D "
+                         "(data, model) serving mesh and shards weights + "
+                         "KV heads over 'model' (validated against the "
+                         "arch config; token-exact vs unsharded)")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="cooperating processes for a multi-controller "
+                         "launch (jax.distributed.initialize; run the "
+                         "same command on every node)")
+    ap.add_argument("--coordinator", default="127.0.0.1:12321",
+                    help="host:port of node 0 for --nodes > 1")
+    ap.add_argument("--node-id", type=int, default=0,
+                    help="this process's index in [0, --nodes)")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome trace-event JSON timeline of the "
                          "--continuous run here (perfetto-loadable; "
@@ -202,6 +229,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    # multi-controller: every process enumerates the GLOBAL device set
+    # after this, so it must run before any jax device use below
+    if args.nodes > 1:
+        init_serving_processes(args.coordinator, args.nodes, args.node_id)
+        print(f"node {args.node_id}/{args.nodes}: "
+              f"{jax.local_device_count()} local / "
+              f"{jax.device_count()} global devices")
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
@@ -211,7 +246,8 @@ def main(argv=None):
     if args.paged:
         page = cfg.dsa.block_k if dsa_on else 16
         max_len = -(-max_len // page) * page
-    mesh = make_serving_mesh(args.dp) if (args.mesh or args.dp) else None
+    mesh = (make_serving_mesh(args.dp, tp=args.tp, cfg=cfg)
+            if (args.mesh or args.dp or args.tp > 1) else None)
     if mesh is not None:
         print(f"serving mesh: {dict(mesh.shape)} over "
               f"{len(mesh.devices.flat)} devices")
@@ -223,6 +259,10 @@ def main(argv=None):
     if args.continuous:
         return _serve_continuous(cfg, args, params, config)
     eng = Engine(cfg, params, config=config)
+    if mesh is not None and eng.tp > 1:
+        print(f"tensor parallel: tp={eng.tp}, "
+              f"{eng.weight_bytes_per_device() / 2**20:.2f} MiB "
+              f"weights/device")
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(1, cfg.vocab - 4,
                            size=(args.batch, args.prompt_len)).astype(np.int32)

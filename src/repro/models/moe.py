@@ -192,6 +192,10 @@ def _moe_decode_dense(params, cfg: ArchConfig, x):
     xb = jnp.broadcast_to(x2[None], (e, b * s, d))
     yb = _expert_ffn(params["w1"].astype(x.dtype), params["w3"].astype(x.dtype),
                      params["w2"].astype(x.dtype), xb)       # (E, T, d)
+    # TP serving: expert matrices shard over "model", so each shard runs
+    # its LOCAL experts densely and the combine (contracting e) all-reduces
+    # partial sums — pin yb so GSPMD places the reduce there, not earlier
+    yb = shard(yb, "expert", None, None)
     y = jnp.einsum("etd,te->td", yb, cw)
     return y.reshape(b, s, d), aux
 
@@ -209,16 +213,21 @@ def _axis_size(mesh, ax) -> int:
 
 def apply_moe(params, cfg: ArchConfig, x, *, decode: bool = False
               ) -> Tuple[jax.Array, Dict]:
-    """x: (B, S, d) -> (y, aux).  Chooses EP / TP / decode-dense path."""
+    """x: (B, S, d) -> (y, aux).  Chooses EP / TP / decode-dense path.
+
+    The EP shard_map path additionally requires ``rules.moe_ep`` — the
+    serving rule tables turn it off so a TP serving mesh keeps capacity
+    prefill on the SAME vmap dispatch as unsharded (token-exactness)."""
     mo = cfg.moe
     mesh = current_mesh()
+    rules = get_rules()
     has_mesh = mesh is not None and not mesh.empty and "model" in mesh.axis_names
     n_model = _axis_size(mesh, "model") if has_mesh else 1
     aux: Dict[str, jax.Array] = {}
     if decode or x.shape[1] == 1:
         y, a = _moe_decode_dense(params, cfg, x)
-    elif (has_mesh and mo.num_experts % n_model == 0 and n_model > 1
-          and x.shape[1] % n_model == 0):
+    elif (rules.moe_ep and has_mesh and mo.num_experts % n_model == 0
+          and n_model > 1 and x.shape[1] % n_model == 0):
         y, a = _moe_ep_shardmap(params, cfg, x, mesh)
     else:
         # TP experts: dispatch per batch row (vmap) so capacity buffers
@@ -231,5 +240,6 @@ def apply_moe(params, cfg: ArchConfig, x, *, decode: bool = False
     if mo.num_shared_experts:
         h = jax.nn.silu(x @ params["sw1"].astype(x.dtype))
         h = h * (x @ params["sw3"].astype(x.dtype))
+        h = shard(h, "batch", "seq", "mlp")
         y = y + h @ params["sw2"].astype(x.dtype)
     return y, aux

@@ -84,6 +84,25 @@ def init_model(key, cfg: ArchConfig):
     return params, specs
 
 
+def model_param_specs(cfg: ArchConfig):
+    """Logical-axis spec tree parallel to ``init_model(key, cfg)[0]``,
+    WITHOUT allocating parameters (abstract ``eval_shape`` trace; the spec
+    tuples are plain Python built during tracing and captured through a
+    side channel).  The serving engines resolve it against a tensor-
+    parallel mesh to land host weights sharded over "model"
+    (inference.engine) — they receive only the params tree from callers,
+    so the spec tree has to be reconstructible from cfg alone."""
+    holder = {}
+
+    def capture(key):
+        params, specs = init_model(key, cfg)
+        holder["specs"] = specs
+        return 0
+
+    jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return holder["specs"]
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -310,7 +329,11 @@ def forward(params, cfg: ArchConfig, flags: RunFlags,
     head = (params["embed"].T if cfg.tie_embeddings
             else params["lm_head"]).astype(x.dtype)
     logits = x @ head
-    logits = shard(logits, "batch", None, "vocab")
+    # "vocab_act", not "vocab": training shards logits over "model", but
+    # the TP serving rules replicate them here (all-gather of columns each
+    # computed whole) so sampling sees a replicated operand — identical
+    # threefry bits, token-exact vs unsharded
+    logits = shard(logits, "batch", None, "vocab_act")
     new_caches = None
     if caches is not None:
         new_caches = dict(caches, groups=new_gc)

@@ -241,3 +241,216 @@ def test_sharded_segment_compiles_once(dense, mesh):
     sharded.reset()
     sharded.run(_mk_requests(cfg.vocab, [(9, 2), (41, 4)], seed=6))
     assert tel.compile_count("segment") == 1
+
+
+# ---------------------------------------------------------------------------
+# Tensor parallelism: 2-D (data, model) meshes shard WEIGHTS over "model"
+# ---------------------------------------------------------------------------
+# The dp×tp grid keeps the forced 8-device pool honest: 1×2 and 1×4 are
+# pure-TP meshes (every slot row's heads/d_ff split across shards), 2×2
+# composes TP with the slot sharding above.  Exactness is the contract —
+# TP reorders the contracting-matmul reductions (psum over shards) but
+# must not flip a single token at the same seeds/temps/dsa_mode.
+
+TP_GRID = [(1, 2), (2, 2), (1, 4)]
+
+
+def _tp_ids(val):
+    return f"dp{val[0]}xtp{val[1]}" if isinstance(val, tuple) else str(val)
+
+
+@pytest.mark.parametrize("grid", TP_GRID, ids=_tp_ids)
+def test_tp_weights_shard_over_model(dense, grid):
+    """Weights REALLY shard: engine.tp records the model-axis width, the
+    attention projections carry a NamedSharding naming "model", and the
+    per-device resident weight bytes shrink ~1/tp (norm/bias leaves stay
+    replicated, so the ratio is a touch above the ideal)."""
+    dp, tp = grid
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=dp, tp=tp, cfg=cfg)
+    eng = Engine(cfg, params, max_len=MAX_LEN, mesh=mesh)
+    assert eng.tp == tp
+    specs = [str(leaf.sharding.spec)
+             for leaf in jax.tree.leaves(eng.params)]
+    assert any("model" in s for s in specs)
+    full = sum(leaf.nbytes for leaf in jax.tree.leaves(params))
+    ratio = eng.weight_bytes_per_device() / full
+    assert ratio <= 1.0 / tp + 0.08, ratio
+
+
+@pytest.mark.parametrize("grid", TP_GRID, ids=_tp_ids)
+def test_tp_continuous_chunked_bitwise(dense, grid):
+    """Chunked admission + decode segments under dp×tp: one SPMD program,
+    tokens bitwise the unsharded engine's."""
+    dp, tp = grid
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=dp, tp=tp, cfg=cfg)
+    kw = dict(slots=SLOTS, max_len=MAX_LEN, seg_len=4)
+    plain = ContinuousEngine(cfg, params, **kw)
+    sharded = ContinuousEngine(cfg, params, mesh=mesh, **kw)
+    assert sharded.engine.tp == tp
+    shapes = [(20, 5), (33, 9), (7, 1), (40, 12), (12, 6), (25, 3)]
+    _check_sharded_equals_plain(plain, sharded,
+                                lambda: _mk_requests(cfg.vocab, shapes,
+                                                     seed=19))
+    assert sharded.stats["chunks"] > 0
+
+
+@pytest.mark.parametrize("dsa_mode", ["block", "kernel"])
+def test_tp_dsa_modes_bitwise(dense, dsa_mode):
+    """DSA under TP: kt/ktb score caches have no head axis, so they stay
+    replicated over "model" — every shard computes the SAME block top-k
+    and gathers its own heads' KV locally.  Token-bitwise at dp=2,tp=2."""
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=2, tp=2, cfg=cfg)
+    kw = dict(slots=SLOTS, max_len=MAX_LEN, seg_len=4, dsa_mode=dsa_mode)
+    plain = ContinuousEngine(cfg, params, **kw)
+    sharded = ContinuousEngine(cfg, params, mesh=mesh, **kw)
+    shapes = [(20, 6), (33, 9), (14, 4), (27, 8)]
+    _check_sharded_equals_plain(plain, sharded,
+                                lambda: _mk_requests(cfg.vocab, shapes,
+                                                     seed=23))
+
+
+def test_tp_sampled_chains_bitwise(dense):
+    """Sampled per-slot PRNG chains with mixed temperatures under TP: the
+    categorical draws replicate over "model" (vocab_act=None pins the
+    logits; the draw itself runs in a replicated shard_map), so the
+    non-partitionable threefry stream is bit-identical to unsharded."""
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=1, tp=2, cfg=cfg)
+    kw = dict(slots=SLOTS, max_len=MAX_LEN, seg_len=4)
+    plain = ContinuousEngine(cfg, params, **kw)
+    sharded = ContinuousEngine(cfg, params, mesh=mesh, **kw)
+
+    def mk():
+        reqs = _mk_requests(cfg.vocab, [(20, 6), (33, 8), (11, 4), (26, 9)],
+                            seed=29, greedy=False)
+        for r, t in zip(reqs, (1.0, 0.7, 1.6, 1.0)):
+            r.temperature = t
+        return reqs
+
+    _check_sharded_equals_plain(plain, sharded, mk)
+
+
+def test_tp_blocking_admission_bitwise(dense):
+    """Legacy blocking whole-prompt admission under TP stays bitwise."""
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=2, tp=2, cfg=cfg)
+    kw = dict(slots=SLOTS, max_len=MAX_LEN, seg_len=4,
+              chunked_prefill=False)
+    plain = ContinuousEngine(cfg, params, **kw)
+    sharded = ContinuousEngine(cfg, params, mesh=mesh, **kw)
+    assert not sharded.chunked
+    shapes = [(20, 5), (33, 9), (12, 6), (25, 3)]
+    _check_sharded_equals_plain(plain, sharded,
+                                lambda: _mk_requests(cfg.vocab, shapes,
+                                                     seed=37))
+
+
+def test_tp_paged_bitwise(dense):
+    """Paged resident cache under TP: pool rows shard their head axis over
+    "model" while page tables stay per-"data" — paged TP serving equals
+    paged unsharded serving token-bitwise."""
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=2, tp=2, cfg=cfg)
+    kw = dict(slots=SLOTS, max_len=MAX_LEN, seg_len=4, paged=True)
+    plain = ContinuousEngine(cfg, params, **kw)
+    sharded = ContinuousEngine(cfg, params, mesh=mesh, **kw)
+    shapes = [(20, 6), (33, 9), (14, 4), (27, 8)]
+    _check_sharded_equals_plain(plain, sharded,
+                                lambda: _mk_requests(cfg.vocab, shapes,
+                                                     seed=41))
+
+
+@pytest.mark.parametrize("grid", TP_GRID, ids=_tp_ids)
+def test_tp_static_generate_bitwise(dense, grid):
+    """Static Engine.generate under dp×tp: batched prefill + fused decode
+    scan with model-sharded weights, greedy AND sampled bitwise."""
+    dp, tp = grid
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=dp, tp=tp, cfg=cfg)
+    plain = Engine(cfg, params, max_len=MAX_LEN)
+    sharded = Engine(cfg, params, max_len=MAX_LEN, mesh=mesh)
+    rng_np = np.random.default_rng(3)
+    prompts = rng_np.integers(1, cfg.vocab - 4, size=(8, 24)).astype(np.int32)
+    for greedy in (True, False):
+        t_p = plain.generate(prompts, 12, greedy=greedy, seed=5).tokens
+        t_s = sharded.generate(prompts, 12, greedy=greedy, seed=5).tokens
+        np.testing.assert_array_equal(t_s, t_p, err_msg=f"greedy={greedy}")
+
+
+def test_tp_segment_compiles_once(dense):
+    """The recompilation contract holds per (mesh, rules): varied traffic
+    on a dp=2,tp=2 mesh still dispatches exactly ONE decode-segment shape
+    signature."""
+    from repro.inference.telemetry import Telemetry
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=2, tp=2, cfg=cfg)
+    tel = Telemetry(sample_every=0)
+    sharded = ContinuousEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                               seg_len=4, mesh=mesh, telemetry=tel)
+    sharded.run(_mk_requests(cfg.vocab, [(5, 3), (37, 6), (60, 9), (14, 2)],
+                             seed=5))
+    assert tel.compile_count("segment") == 1
+    sharded.reset()
+    sharded.run(_mk_requests(cfg.vocab, [(9, 2), (41, 4)], seed=6))
+    assert tel.compile_count("segment") == 1
+
+
+def test_tp_mesh_divisibility_error(rng):
+    """make_serving_mesh(cfg=...) rejects an indivisible tp up front with
+    a ValueError NAMING the offending axis."""
+    cfg = reduced(get_config("yi_6b"))       # n_kv_heads=2: tp=4 indivisible
+    with pytest.raises(ValueError, match="kv_heads"):
+        make_serving_mesh(dp=2, tp=4, cfg=cfg)
+
+
+def test_tp_indivisible_falls_back_replicated(rng):
+    """An Engine handed a 2-D mesh whose "model" width does not divide the
+    arch falls back to replicated weights GRACEFULLY (tp=1, full weight
+    bytes per device) and stays token-exact."""
+    cfg = reduced(get_config("yi_6b"))
+    params, _ = init_model(rng, cfg)
+    mesh = make_serving_mesh(tp=4)           # no cfg: validation deferred
+    sharded = Engine(cfg, params, max_len=MAX_LEN, mesh=mesh)
+    assert sharded.tp == 1
+    full = sum(leaf.nbytes for leaf in jax.tree.leaves(params))
+    assert sharded.weight_bytes_per_device() == full
+    plain = Engine(cfg, params, max_len=MAX_LEN)
+    rng_np = np.random.default_rng(3)
+    prompts = rng_np.integers(1, cfg.vocab - 4, size=(8, 24)).astype(np.int32)
+    for greedy in (True, False):
+        t_p = plain.generate(prompts, 10, greedy=greedy, seed=5).tokens
+        t_s = sharded.generate(prompts, 10, greedy=greedy, seed=5).tokens
+        np.testing.assert_array_equal(t_s, t_p, err_msg=f"greedy={greedy}")
+
+
+def test_tp_decode_segment_collective_budget(dense):
+    """The lowered pure-TP decode segment carries EXACTLY the Megatron
+    collective budget — one all-reduce per layer per contracting matmul
+    group (attention out-proj, MLP down-proj) plus the embedding-gather
+    all-reduce and one weight-shaped lm-head all-gather — and the counts
+    do not grow with seg_len (no collective is added per token)."""
+    from repro.distributed.hlo_analysis import (
+        assert_collectives_token_invariant, check_tp_decode_collectives)
+    cfg, params = dense
+    mesh = make_serving_mesh(dp=1, tp=2, cfg=cfg)
+
+    def seg_text(seg_len):
+        eng = ContinuousEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                               seg_len=seg_len, mesh=mesh)
+        remaining = np.zeros(SLOTS, np.int32)
+        poison = np.zeros(SLOTS, bool)
+        with eng._ctx():
+            return eng._segment.lower(
+                eng.engine.params, eng._put_b(eng._tok), eng._caches,
+                eng._put_b(eng._keys), eng._put_b(eng._active),
+                eng._put_b(eng._greedy), eng._put_b(eng._temps),
+                eng._put_b(remaining), eng._put_b(poison),
+                flags=eng._flags("decode")).compile().as_text()
+
+    t4, t8 = seg_text(4), seg_text(8)
+    counts = check_tp_decode_collectives(t4, cfg.n_layers)
+    assert counts["all-reduce"] == 2 * cfg.n_layers + 1
+    assert_collectives_token_invariant(t4, t8)
